@@ -1,0 +1,73 @@
+"""Table 4 / Fig. 5 reproduction: per-component overhead breakdown.
+
+Columns mirrored from the paper: job-step launch, alloc, dwork per-task
+RTT, mpi-list sync latency, Python import cost, dwork connection setup —
+paper (Summit) values side-by-side with our measured (this container)
+values, plus the Fig. 5 style time-share breakdown per task size.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+
+from repro.core.dwork import Client, InProcTransport, TaskServer
+from repro.core.dwork.client import TCPServer, TCPTransport
+from repro.core.metg import (PAPER_ALLOC, PAPER_DWORK_RTT, PAPER_JSRUN,
+                             PAPER_MPILIST_SYNC, METGModel)
+
+
+def measure_python_import() -> float:
+    t0 = time.perf_counter()
+    subprocess.run([sys.executable, "-c", "import numpy"], check=True)
+    return time.perf_counter() - t0
+
+
+def measure_connection_setup(n: int = 20) -> float:
+    srv = TaskServer()
+    tcp = TCPServer(("127.0.0.1", 0), srv)
+    tcp.serve_background()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        tr = TCPTransport(*tcp.server_address)
+        tr.close()
+    dt = (time.perf_counter() - t0) / n
+    tcp.shutdown()
+    return dt
+
+
+def run(quick: bool = True) -> dict:
+    from benchmarks.metg import (measure_dwork_rtt, measure_mpilist_sigma,
+                                 measure_pmake_launch)
+    rtt = measure_dwork_rtt(300 if quick else 2000)
+    table4 = {
+        "jsrun_launch_s": {"paper@864": PAPER_JSRUN[864],
+                           "ours_popen": round(measure_pmake_launch(8), 4)},
+        "alloc_s": {"paper": PAPER_ALLOC, "ours": "n/a (no GPU alloc)"},
+        "dwork_rtt_us": {"paper": PAPER_DWORK_RTT * 1e6,
+                         "ours_inproc": round(rtt["inproc_rtt_s"] * 1e6, 1),
+                         "ours_tcp": round(rtt["tcp_rtt_s"] * 1e6, 1)},
+        "mpilist_sync_s_per_1024": {
+            "paper@864": PAPER_MPILIST_SYNC[864],
+            "ours_sigma": round(measure_mpilist_sigma(8, 300), 6)},
+        "python_import_s": {"paper@864": 2.82,
+                            "ours_numpy": round(measure_python_import(), 2)},
+        "dwork_connection_s": {"paper@864": 2.74,
+                               "ours_tcp": round(measure_connection_setup(), 4)},
+    }
+
+    # Fig 5: time-share pies -> fractions per (tool, task_size) at 864 ranks
+    model = METGModel.from_paper()
+    shares = {}
+    for tool in ("pmake", "dwork", "mpi-list"):
+        overhead = model.metg(tool, 864)
+        shares[tool] = {
+            f"{t:g}s": {"compute": round(t / (t + overhead), 3),
+                        "overhead": round(overhead / (t + overhead), 3)}
+            for t in (0.01, 0.1, 1.0, 10.0, 100.0)}
+    return {"table4": table4, "fig5_time_shares@864": shares}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,82 @@
+"""§Roofline table generator: reads the dry-run result JSONs and emits the
+per-(arch x shape) three-term roofline table (single-pod) plus the
+multi-pod §Dry-run summary."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(mesh: str = "16x16", tag: str = "") -> list:
+    out = []
+    suffix = f"__{mesh}{('__' + tag) if tag else ''}.json"
+    for p in sorted(RESULTS.glob(f"*{suffix}")):
+        if tag == "" and p.stem.count("__") > 2:
+            continue                      # skip tagged perf variants
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(mesh: str = "16x16", tag: str = "") -> str:
+    rows = ["| arch | shape | compute | memory | collective | bottleneck | "
+            "useful/HLO flops | fit<16GB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in load(mesh, tag):
+        if rec.get("skipped"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | "
+                        f"SKIP | - | - |")
+            continue
+        if not rec.get("ok"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | "
+                        f"FAIL | - | - |")
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory", {})
+        tot = sum(v for k, v in mem.items()
+                  if k != "code_bytes" and isinstance(v, (int, float)))
+        fit = "yes" if tot and tot < 16e9 else f"NO ({tot/1e9:.0f}GB)" if tot else "?"
+        ratio = rec.get("useful_flops_ratio")
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| {r['bottleneck']} | "
+            f"{ratio:.2f} | {fit} |" if ratio is not None else
+            f"| {rec['arch']} | {rec['shape']} | - | - | - | ? | - | - |")
+    return "\n".join(rows)
+
+
+def dryrun_summary() -> dict:
+    summary = {}
+    for mesh in ("16x16", "2x16x16"):
+        recs = load(mesh)
+        summary[mesh] = {
+            "cells": len(recs),
+            "compiled_ok": sum(1 for r in recs if r.get("ok")),
+            "skipped_documented": sum(1 for r in recs if r.get("skipped")),
+            "failed": sum(1 for r in recs if r.get("ok") is False),
+        }
+    return summary
+
+
+def run(quick: bool = True) -> dict:
+    return {"summary": dryrun_summary(),
+            "table_single_pod": roofline_table("16x16"),
+            "table_multi_pod": roofline_table("2x16x16")}
+
+
+if __name__ == "__main__":
+    res = run()
+    print(json.dumps(res["summary"], indent=1))
+    print("\n== single-pod (16x16) ==\n" + res["table_single_pod"])

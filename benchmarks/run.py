@@ -1,0 +1,59 @@
+"""Benchmark aggregator: one harness per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+  metg          Fig. 4  — METG vs task size, three schedulers
+  overhead      Table 4 / Fig. 5 — per-component overhead breakdown
+  comparison    Table 1 — feature matrix (claims verified in code)
+  million_tasks §6 — 1M-task create+deque throughput
+  roofline      §Roofline — per-(arch x shape) terms from the dry-run
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks import comparison, metg, million_tasks, overhead, roofline
+
+OUT = Path(__file__).resolve().parent / "results"
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    results = {}
+    for name, mod in [("metg", metg), ("overhead", overhead),
+                      ("comparison", comparison),
+                      ("million_tasks", million_tasks),
+                      ("roofline", roofline)]:
+        t0 = time.perf_counter()
+        print(f"=== {name} ===", flush=True)
+        try:
+            res = mod.run(quick=quick)
+            results[name] = res
+            if name == "metg":
+                print(metg.format_table(res))
+                print(json.dumps(res["checks"], indent=1))
+            elif name == "roofline":
+                print(json.dumps(res["summary"], indent=1))
+                print(res["table_single_pod"])
+            else:
+                print(json.dumps(res, indent=1, default=str)[:4000])
+        except Exception as e:  # noqa: BLE001
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
+            print("ERROR:", results[name]["error"])
+        print(f"--- {name} done in {time.perf_counter()-t0:.1f}s\n",
+              flush=True)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "bench_results.json").write_text(
+        json.dumps(results, indent=1, default=str))
+    print(f"[benchmarks] wrote {OUT / 'bench_results.json'}")
+    errs = [k for k, v in results.items() if "error" in v]
+    if errs:
+        print("FAILED:", errs)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: build an assigned architecture (reduced for CPU), run a
+forward pass, one training step, and a prefill+decode round.
+
+    PYTHONPATH=src python examples/quickstart.py [arch]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import RunConfig, get_config
+from repro.models.common import Options, param_count
+from repro.models.model import build_model
+from repro.optim.adamw import init_opt
+from repro.runtime.serve_step import greedy_generate
+from repro.runtime.train_step import make_train_step
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma2-2b"
+cfg = get_config(arch).reduced()
+model = build_model(cfg, Options(q_block=64, kv_block=64, moe_group=64))
+params = model.init(jax.random.PRNGKey(0))
+print(f"{cfg.name} ({cfg.family}), reduced: {param_count(params):,} params")
+
+B, S = 2, 64
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 2,
+                                      cfg.vocab_size)}
+if cfg.mrope:
+    batch["mrope_positions"] = jnp.broadcast_to(
+        jnp.arange(S)[None, None], (3, B, S))
+if cfg.family == "audio":
+    batch["encoder_frames"] = jnp.zeros(
+        (B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+
+logits, aux = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+print("forward:", logits.shape, "finite:", bool(jnp.isfinite(logits).all()))
+
+rc = RunConfig(total_steps=10, warmup_steps=1)
+batch["labels"] = jnp.roll(batch["tokens"], -1, 1)
+step = jax.jit(make_train_step(model, rc))
+_, _, metrics = step(params, init_opt(params, rc), batch)
+print(f"train step: loss={float(metrics['loss']):.4f} "
+      f"grad_norm={float(metrics['grad_norm']):.3f}")
+
+del batch["labels"]
+out = greedy_generate(model, params, batch, max_new=8, cache_len=S + 16)
+print("generated:", out[0].tolist())

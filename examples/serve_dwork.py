@@ -1,0 +1,9 @@
+"""dwork-scheduled batched inference example: generation requests are dwork
+tasks; the worker steals METG-sized batches, prefills + decodes, completes.
+
+    PYTHONPATH=src python examples/serve_dwork.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "deepseek-7b", "--requests", "6", "--prompt-len", "16",
+      "--max-new", "4"])

@@ -1,0 +1,16 @@
+"""pmake campaign example (paper Fig. 1 pattern): shard-train -> summarize.
+
+Runs real popen'd training jobs under pmake's EFT scheduler with file-based
+restart — re-running this script rebuilds nothing.
+
+    PYTHONPATH=src python examples/train_campaign.py [workdir]
+"""
+import sys
+
+from repro.launch.campaign import main
+
+workdir = sys.argv[1] if len(sys.argv) > 1 else "/tmp/repro_campaign_example"
+main(["--workdir", workdir, "--shards", "2", "--steps", "4",
+      "--batch", "2", "--seq", "64", "--nodes", "2"])
+print(f"campaign artifacts in {workdir} (rules.yaml, shard_*.jsonl, "
+      f"report.json, *.sh, *.log)")

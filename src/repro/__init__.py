@@ -1,0 +1,14 @@
+"""repro — Three Practical Workflow Schedulers (Rogers 2021) as a multi-pod
+JAX training/serving framework.
+
+Layers:
+  repro.core      — the paper's contribution: pmake, dwork, mpi_list, METG
+  repro.models    — pure-JAX model zoo (10 assigned architectures)
+  repro.kernels   — Pallas TPU kernels (tiled A^T B matmul = paper workload,
+                    flash attention, rwkv6 scan, mamba2 SSD)
+  repro.runtime   — sharded train/serve steps, KV cache, elastic pool
+  repro.optim     — AdamW, ZeRO-1, gradient compression
+  repro.launch    — mesh, multi-pod dry-run, train/serve/campaign drivers
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,124 @@
+"""Checkpointing: sharded-save/restore with elastic resharding.
+
+Layout per step:  <dir>/step_<N>/
+    manifest.json       tree structure, shapes, dtypes, step, metadata
+    arrays.npz          flattened path -> ndarray
+Writes go to a tmp dir + atomic rename (crash-safe); `AsyncCheckpointer`
+overlaps serialization with the next training steps (one in flight).
+Restore accepts a different mesh than the save used — arrays are re-placed
+with the target NamedShardings (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(directory: str, step: int, tree, metadata: dict = None) -> str:
+    d = Path(directory)
+    final = d / f"step_{step:08d}"
+    tmp = d / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "metadata": metadata or {},
+        "time": time.time(),
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    return str(final)
+
+
+def latest_step(directory: str):
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, abstract_tree, *, mesh=None,
+            spec_tree=None):
+    """Rebuild the pytree; if mesh+specs given, place arrays sharded
+    (elastic: the mesh need not match the one used at save time)."""
+    d = Path(directory) / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(abstract_tree)[0]
+    treedef = jax.tree_util.tree_structure(abstract_tree)
+    spec_leaves = (jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda s: s is None or hasattr(s, "index"))
+        if spec_tree is not None else None)
+    out = []
+    for i, (path, leaf) in enumerate(leaves_with_path):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        x = arr.astype(leaf.dtype)
+        if mesh is not None and spec_leaves is not None:
+            x = jax.device_put(
+                x, jax.sharding.NamedSharding(mesh, spec_leaves[i]))
+        out.append(jax.numpy.asarray(x))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def retain(directory: str, keep: int = 3):
+    d = Path(directory)
+    steps = sorted(d.glob("step_*"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p)
+
+
+class AsyncCheckpointer:
+    """One save in flight; next save waits for the previous (bounded)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread = None
+        self.saved: list = []
+
+    def save(self, step: int, tree, metadata: dict = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(jax.device_get, tree)
+
+        def work():
+            p = save(self.directory, step, host_tree, metadata)
+            self.saved.append(p)
+            retain(self.directory, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,7 @@
+"""repro.core — the paper's contribution: three workflow schedulers + METG.
+
+  pmake    file-based push scheduler with EFT priority   (paper §2.1)
+  dwork    client/server bag-of-tasks with dependencies   (paper §2.2)
+  mpi_list bulk-synchronous distributed lists (DFM)       (paper §2.3)
+  metg     minimum-effective-task-granularity scaling laws (§3-§6)
+"""

@@ -1,0 +1,21 @@
+"""dwork: client/server bag-of-tasks with dependencies (Rogers 2021, §2.2).
+
+Minimal API (paper Table 2): Create / Steal / Complete / Transfer / Exit,
+plus the paper's two scalability extensions: `Steal n` batching and a
+message-forwarding tree (rack leaders).  The server keeps exactly two
+tables — join counters + successors, and task metadata — and a double-ended
+ready queue (FIFO for steals, LIFO for re-inserted tasks).
+
+The paper's ZeroMQ+protobuf+TKRZW stack is adapted to an offline-friendly
+equivalent: length-prefixed msgpack over TCP, plus an in-proc transport for
+overhead benchmarks, and file persistence with ready-state reconstruction.
+"""
+from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
+                                  Steal, TaskMsg, Transfer)
+from repro.core.dwork.server import TaskServer
+from repro.core.dwork.client import Client, InProcTransport, TCPTransport
+from repro.core.dwork.forwarder import Forwarder
+
+__all__ = ["Create", "Steal", "Complete", "Transfer", "Exit", "TaskMsg",
+           "NotFound", "ExitResp", "TaskServer", "Client", "InProcTransport",
+           "TCPTransport", "Forwarder"]

@@ -1,0 +1,112 @@
+"""dwork wire API (paper Table 2).
+
+Queries:  Create(task, deps) | Steal(worker, n) | Complete(worker, task)
+          | Transfer(worker, task, new_deps) | Exit(worker)
+Responses: TaskMsg(tasks) | NotFound | ExitResp
+
+Workers are strings; tasks are (name, meta-dict) — the protobuf analog.
+Serialization is msgpack (JSON fallback) with a one-byte tag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+try:
+    import msgpack
+
+    def _dumps(obj) -> bytes:
+        return msgpack.packb(obj, use_bin_type=True)
+
+    def _loads(b: bytes):
+        return msgpack.unpackb(b, raw=False)
+except Exception:  # pragma: no cover - msgpack is installed offline
+    import json
+
+    def _dumps(obj) -> bytes:
+        return json.dumps(obj).encode()
+
+    def _loads(b: bytes):
+        return json.loads(b.decode())
+
+
+@dataclass
+class Create:
+    task: str
+    deps: list = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
+    hold: bool = False        # +1 join count, released via Release (sharding)
+
+
+@dataclass
+class Release:
+    task: str
+
+
+@dataclass
+class Steal:
+    worker: str
+    n: int = 1                      # paper §5: "Steal n" batching
+
+
+@dataclass
+class Complete:
+    worker: str
+    task: str
+    ok: bool = True
+
+
+@dataclass
+class Transfer:
+    """Replace a running task back into the queue with NEW dependencies
+    (paper: dynamic task graphs; cycles via Transfer are the documented
+    user-error deadlock)."""
+    worker: str
+    task: str
+    new_deps: list = field(default_factory=list)
+
+
+@dataclass
+class Exit:
+    worker: str
+
+
+@dataclass
+class TaskMsg:
+    tasks: list                     # [(name, meta), ...]
+
+
+@dataclass
+class NotFound:
+    pass
+
+
+@dataclass
+class ExitResp:
+    pass
+
+
+@dataclass
+class Stats:
+    pass
+
+
+_TAGS = {"Create": Create, "Steal": Steal, "Complete": Complete,
+         "Transfer": Transfer, "Exit": Exit, "TaskMsg": TaskMsg,
+         "NotFound": NotFound, "ExitResp": ExitResp, "Stats": Stats,
+         "Release": Release}
+
+
+def encode(msg) -> bytes:
+    return _dumps([type(msg).__name__, msg.__dict__])
+
+
+def decode(b: bytes):
+    tag, kw = _loads(b)
+    if tag == "StatsResp":
+        return kw
+    return _TAGS[tag](**kw)
+
+
+def encode_stats(d: dict) -> bytes:
+    return _dumps(["StatsResp", d])

@@ -1,0 +1,49 @@
+"""Message-forwarding tree (paper §4: 2-level rack-leader tree on Summit).
+
+A Forwarder accepts downstream dwork connections and relays every frame to
+a single upstream connection — maintaining constant open connections per
+rack and avoiding per-worker TCP setup at the hub.  Chaining forwarders
+builds deeper trees for larger machines.
+"""
+from __future__ import annotations
+
+import socket
+import socketserver
+import struct
+import threading
+
+from repro.core.dwork.client import _recv_frame, _send_frame
+
+
+class _RelayHandler(socketserver.BaseRequestHandler):
+    def handle(self):
+        up = socket.create_connection(self.server.upstream)
+        up.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            while True:
+                frame = _recv_frame(self.request)
+                if frame is None:
+                    return
+                with self.server.up_lock:
+                    _send_frame(up, frame)
+                    resp = _recv_frame(up)
+                if resp is None:
+                    return
+                _send_frame(self.request, resp)
+        finally:
+            up.close()
+
+
+class Forwarder(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, addr, upstream):
+        super().__init__(addr, _RelayHandler)
+        self.upstream = upstream
+        self.up_lock = threading.Lock()
+
+    def serve_background(self) -> threading.Thread:
+        th = threading.Thread(target=self.serve_forever, daemon=True)
+        th.start()
+        return th

@@ -1,0 +1,208 @@
+"""dhub: the dwork task server (paper §2.2 + Fig. 2 pseudocode).
+
+State (exactly two tables + derived runtime info, per the paper):
+  joins:  task -> [join_counter, successor list]
+  meta:   task -> metadata dict
+Derived: ready deque (FIFO steals / LIFO re-inserts), assigned map,
+completed set, error set (failed tasks poison their transitive successors).
+
+Fault tolerance: `Exit(worker)` recycles that worker's assigned tasks to
+the FRONT of the queue; an optional lease timeout re-queues tasks held too
+long (straggler mitigation — framework extension, marked as such).
+Persistence: save()/load() round-trips the two tables; ready state is
+reconstructed on load (paper: "generated from these tables on startup").
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from pathlib import Path
+from typing import Optional
+
+from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
+                                  Release, Stats, Steal, TaskMsg, Transfer)
+
+
+class TaskServer:
+    def __init__(self, *, lease_timeout: Optional[float] = None):
+        self.joins: dict[str, list] = {}      # task -> [join_count, [succ]]
+        self.meta: dict[str, dict] = {}
+        self.ready: deque[str] = deque()
+        self.assigned: dict[str, set] = {}    # worker -> {task}
+        self.lease: dict[str, float] = {}     # task -> steal time
+        self.completed: set[str] = set()
+        self.errors: set[str] = set()
+        self.lease_timeout = lease_timeout
+        self.lock = threading.Lock()
+        self.counters = {"created": 0, "stolen": 0, "completed": 0,
+                         "requeued": 0, "errors": 0}
+
+    # ------------------------------------------------------------------ API
+    def handle(self, msg):
+        with self.lock:
+            if isinstance(msg, Create):
+                return self._create(msg)
+            if isinstance(msg, Steal):
+                return self._steal(msg)
+            if isinstance(msg, Complete):
+                return self._complete(msg)
+            if isinstance(msg, Transfer):
+                return self._transfer(msg)
+            if isinstance(msg, Exit):
+                return self._exit(msg)
+            if isinstance(msg, Release):
+                return self._release(msg)
+            if isinstance(msg, Stats):
+                return self.stats()
+            raise TypeError(f"unknown message {msg!r}")
+
+    def _create(self, msg: Create):
+        if msg.task in self.joins:
+            return NotFound()                 # duplicate create is a no-op
+        live_deps = [d for d in msg.deps if d not in self.completed]
+        # hold: delegation-as-assignment (paper §6) — an extra join count
+        # released by a remote database/worker via Release
+        self.joins[msg.task] = [len(live_deps) + (1 if msg.hold else 0), []]
+        self.meta[msg.task] = dict(msg.meta)
+        for d in live_deps:
+            if d not in self.joins:           # forward-declared dependency
+                self.joins[d] = [0, []]
+                self.meta.setdefault(d, {})
+                self.ready.append(d)
+            self.joins[d][1].append(msg.task)
+        if not live_deps and not msg.hold:
+            self.ready.append(msg.task)       # FIFO tail
+        self.counters["created"] += 1
+        return ExitResp()
+
+    def _steal(self, msg: Steal):
+        self._reap_leases()
+        out = []
+        while self.ready and len(out) < max(1, msg.n):
+            t = self.ready.popleft()          # FIFO: oldest ready first
+            if t in self.errors:
+                continue
+            self.assigned.setdefault(msg.worker, set()).add(t)
+            self.lease[t] = time.monotonic()
+            out.append((t, self.meta.get(t, {})))
+        if out:
+            self.counters["stolen"] += len(out)
+            return TaskMsg(tasks=out)
+        if self._all_done():
+            return ExitResp()                 # paper: respond 'Exit'
+        return NotFound()
+
+    def _complete(self, msg: Complete):
+        t = msg.task
+        self.assigned.get(msg.worker, set()).discard(t)
+        self.lease.pop(t, None)
+        if t in self.completed:
+            return ExitResp()                 # exactly-once: idempotent
+        if not msg.ok:
+            self._poison(t)
+            return ExitResp()
+        self.completed.add(t)
+        self.counters["completed"] += 1
+        for succ in self.joins.get(t, [0, []])[1]:
+            j = self.joins[succ]
+            j[0] -= 1
+            if j[0] == 0 and succ not in self.completed:
+                self.ready.append(succ)
+        return ExitResp()
+
+    def _transfer(self, msg: Transfer):
+        """Move a task back from worker to manager, adding dependencies.
+        Re-inserted tasks go to the FRONT (work-stealing deque, §2.2)."""
+        t = msg.task
+        self.assigned.get(msg.worker, set()).discard(t)
+        self.lease.pop(t, None)
+        live = [d for d in msg.new_deps if d not in self.completed]
+        self.joins.setdefault(t, [0, []])
+        self.joins[t][0] += len(live)
+        for d in live:
+            if d not in self.joins:
+                self.joins[d] = [0, []]
+                self.meta.setdefault(d, {})
+                self.ready.append(d)
+            self.joins[d][1].append(t)
+        if self.joins[t][0] == 0:
+            self.ready.appendleft(t)          # LIFO head
+        return ExitResp()
+
+    def _exit(self, msg: Exit):
+        """Node failure/abort: recycle the worker's assigned tasks."""
+        for t in sorted(self.assigned.pop(msg.worker, set())):
+            self.lease.pop(t, None)
+            self.ready.appendleft(t)
+            self.counters["requeued"] += 1
+        return ExitResp()
+
+    def _release(self, msg: Release):
+        j = self.joins.get(msg.task)
+        if j is None or msg.task in self.completed:
+            return NotFound()
+        j[0] -= 1
+        if j[0] == 0:
+            self.ready.append(msg.task)
+        return ExitResp()
+
+    # ------------------------------------------------------------- helpers
+    def _poison(self, t: str):
+        """Failed task: mark it and all transitive successors as errors."""
+        stack = [t]
+        while stack:
+            cur = stack.pop()
+            if cur in self.errors:
+                continue
+            self.errors.add(cur)
+            self.counters["errors"] += 1
+            stack.extend(self.joins.get(cur, [0, []])[1])
+
+    def _reap_leases(self):
+        if self.lease_timeout is None:
+            return
+        now = time.monotonic()
+        expired = [t for t, ts in self.lease.items()
+                   if now - ts > self.lease_timeout]
+        for t in expired:
+            for w, ts in self.assigned.items():
+                ts.discard(t)
+            self.lease.pop(t, None)
+            self.ready.appendleft(t)
+            self.counters["requeued"] += 1
+
+    def _all_done(self) -> bool:
+        return all(t in self.completed or t in self.errors for t in self.joins)
+
+    def stats(self) -> dict:
+        return {
+            "tasks": len(self.joins), "ready": len(self.ready),
+            "assigned": sum(len(s) for s in self.assigned.values()),
+            "completed": len(self.completed), "errors": len(self.errors),
+            **self.counters,
+        }
+
+    # --------------------------------------------------------- persistence
+    def save(self, path: str):
+        state = {"joins": {k: [v[0], v[1]] for k, v in self.joins.items()},
+                 "meta": self.meta,
+                 "completed": sorted(self.completed),
+                 "errors": sorted(self.errors)}
+        Path(path).write_text(json.dumps(state))
+
+    @classmethod
+    def load(cls, path: str, **kw) -> "TaskServer":
+        state = json.loads(Path(path).read_text())
+        srv = cls(**kw)
+        srv.joins = {k: [v[0], list(v[1])] for k, v in state["joins"].items()}
+        srv.meta = state["meta"]
+        srv.completed = set(state["completed"])
+        srv.errors = set(state["errors"])
+        # reconstruct ready: join==0, not completed/errored (assigned tasks
+        # from the previous run are implicitly requeued — crash tolerance)
+        for t, (j, _succ) in srv.joins.items():
+            if j == 0 and t not in srv.completed and t not in srv.errors:
+                srv.ready.append(t)
+        return srv

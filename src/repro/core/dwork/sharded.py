@@ -1,0 +1,132 @@
+"""Sharded dwork hub — the paper's §6 expansion item 4: "shared
+responsibility for handing out tasks, sharded between multiple servers",
+using the observation that "delegating a task to another task database is
+logically the same as assigning it to a worker".
+
+`ShardedHub` fronts N independent TaskServers:
+  * Create: tasks hash to a home shard; cross-shard dependencies are
+    mediated by proxy tasks — the home shard of a dependency gets a
+    `__notify__` successor that completes the dependent's local proxy on
+    its shard (the delegation-as-assignment trick).
+  * Steal: workers have an affinity shard (locality); on NotFound they
+    steal from the busiest other shard (work stealing across shards).
+  * METG effect: dispatch rate multiplies by the shard count
+    (METGModel.dwork_metg(..., shards=N)).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.core.dwork.api import (Complete, Create, ExitResp, NotFound,
+                                  Release, Steal, TaskMsg)
+from repro.core.dwork.server import TaskServer
+
+
+class ShardedHub:
+    def __init__(self, n_shards: int = 2, *, lease_timeout: Optional[float] = None):
+        self.shards = [TaskServer(lease_timeout=lease_timeout)
+                       for _ in range(n_shards)]
+        self.home: dict[str, int] = {}
+        self.lock = threading.Lock()
+
+    def _shard_of(self, task: str) -> int:
+        with self.lock:
+            if task not in self.home:
+                self.home[task] = hash(task) % len(self.shards)
+            return self.home[task]
+
+    # ------------------------------------------------------------------
+    def create(self, task: str, deps=(), meta=None):
+        s = self._shard_of(task)
+        local, remote = [], []
+        for d in deps:
+            (local if self._shard_of(d) == s else remote).append(d)
+        # remote deps: a HELD proxy per remote dep lives on the HOME shard
+        # ("delegation is logically the same as assigning to a worker" —
+        # the remote shard holds the proxy's extra join count and Releases
+        # it via its __notify__ successor when the dependency completes)
+        proxy_deps = list(local)
+        for d in remote:
+            proxy = f"__proxy__{d}__for__{task}"
+            self.shards[s].handle(Create(task=proxy, deps=[], meta={},
+                                         hold=True))
+            proxy_deps.append(proxy)
+            ds = self._shard_of(d)
+            self.shards[ds].handle(Create(
+                task=f"__notify__{proxy}", deps=[d],
+                meta={"notify_shard": s, "proxy": proxy}))
+        self.shards[s].handle(Create(task=task, deps=proxy_deps,
+                                     meta=dict(meta or {})))
+
+    def steal(self, worker: str, n: int = 1, affinity: Optional[int] = None):
+        order = list(range(len(self.shards)))
+        if affinity is not None:
+            order.sort(key=lambda i: 0 if i == affinity % len(self.shards)
+                       else 1)
+        else:
+            order.sort(key=lambda i: -len(self.shards[i].ready))
+        all_exit = True
+        for i in order:
+            r = self.shards[i].handle(Steal(worker=f"{worker}@{i}", n=n))
+            if isinstance(r, TaskMsg):
+                served = []
+                for name, meta in r.tasks:
+                    if name.startswith("__notify__"):
+                        # bookkeeping: Release the held proxy on the
+                        # dependent's home shard, retire the notify
+                        self.shards[meta["notify_shard"]].handle(
+                            Release(task=meta["proxy"]))
+                        self.shards[i].handle(Complete(
+                            worker=f"{worker}@{i}", task=name))
+                    elif name.startswith("__proxy__"):
+                        # structural: released proxies auto-complete, which
+                        # unblocks their dependents' join counters
+                        self.shards[i].handle(Complete(
+                            worker=f"{worker}@{i}", task=name))
+                    else:
+                        served.append((name, meta))
+                if served:
+                    return TaskMsg(tasks=served), i
+                return self.steal(worker, n, affinity)   # retry after notify
+            if isinstance(r, NotFound):
+                all_exit = False
+        return (ExitResp() if all_exit else NotFound()), -1
+
+    def complete(self, worker: str, task: str, shard: int, ok: bool = True):
+        return self.shards[shard].handle(Complete(worker=f"{worker}@{shard}",
+                                                  task=task, ok=ok))
+
+    def stats(self) -> dict:
+        per = [s.stats() for s in self.shards]
+        return {"shards": per,
+                "completed": sum(p["completed"] for p in per),
+                "user_completed": sum(
+                    p["completed"] for p in per) - sum(
+                        1 for t in self.home if t.startswith("__")),
+                }
+
+    def run_to_completion(self, execute, workers: int = 2,
+                          max_rounds: int = 100000) -> int:
+        """Simple driver: round-robin workers until global Exit."""
+        done = 0
+        rounds = 0
+        while rounds < max_rounds:
+            rounds += 1
+            progress = False
+            exits = 0
+            for w in range(workers):
+                r, shard = self.steal(f"w{w}", affinity=w)
+                if isinstance(r, TaskMsg):
+                    progress = True
+                    for name, meta in r.tasks:
+                        ok = execute(name, meta)
+                        self.complete(f"w{w}", name, shard, ok=ok)
+                        done += 1
+                elif isinstance(r, ExitResp):
+                    exits += 1
+            if exits == workers:
+                return done
+            if not progress:
+                continue
+        return done

@@ -1,0 +1,17 @@
+"""mpi-list: bulk-synchronous distributed lists (Rogers 2021, §2.3).
+
+A `Context` holds the communicator; a `DFM` (distributed free monoid) is an
+ordered global list with a contiguous ascending block per rank:
+rank p of P stores the subsequence starting at ``p*(N//P) + min(p, N%P)``.
+
+Two backends:
+  * in-process rank simulation (`Context(n_ranks)`) — semantics-exact SPMD,
+    used by the data pipeline, tests, and METG benchmarks;
+  * mesh bridge (`repro.core.mpi_list.mesh_ops`) — the same bulk ops lowered
+    onto a jax mesh data axis (map -> sharded elementwise, reduce -> psum,
+    scan -> associative prefix, repartition/group -> all-to-all), which is
+    how the DFM concept becomes the framework's data-parallel inner loop.
+"""
+from repro.core.mpi_list.context import DFM, Context, partition_bounds
+
+__all__ = ["Context", "DFM", "partition_bounds"]

@@ -1,0 +1,152 @@
+"""In-process mpi-list: Context + DFM with the paper's exact partition law.
+
+The rank loop is sequential (one process), but every operation is expressed
+rank-locally — the same code shape as the mpi4py original — and the
+partition invariant (contiguous ascending blocks, paper §2.3) is enforced
+and property-tested.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterable, Optional
+
+
+def partition_bounds(N: int, P: int, p: int) -> tuple[int, int]:
+    """Start/end of rank p's block: start = p*(N//P) + min(p, N%P)."""
+    start = p * (N // P) + min(p, N % P)
+    length = N // P + (1 if p < N % P else 0)
+    return start, start + length
+
+
+class Context:
+    """Communicator stand-in. `procs` ranks, rank-local jitter optional
+    (straggler modelling for the METG benchmark)."""
+
+    def __init__(self, procs: int = 1, *, jitter: Optional[Callable[[int], float]] = None):
+        self.procs = procs
+        self.rank = 0                   # in-proc: we "are" every rank in turn
+        self.jitter = jitter
+        self.sync_time = 0.0            # accumulated straggler gap (modelled)
+
+    # -- constructors ------------------------------------------------------
+    def iterates(self, N: int) -> "DFM":
+        parts = []
+        for p in range(self.procs):
+            s, e = partition_bounds(N, self.procs, p)
+            parts.append(list(range(s, e)))
+        return DFM(self, parts)
+
+    def scatter(self, xs: list) -> "DFM":
+        N = len(xs)
+        parts = []
+        for p in range(self.procs):
+            s, e = partition_bounds(N, self.procs, p)
+            parts.append(list(xs[s:e]))
+        return DFM(self, parts)
+
+    # -- BSP sync point (straggler accounting) -----------------------------
+    def _sync(self, per_rank_times: Optional[list] = None):
+        if per_rank_times:
+            self.sync_time += max(per_rank_times) - min(per_rank_times)
+
+
+class DFM:
+    """Distributed free monoid: list of per-rank blocks."""
+
+    def __init__(self, C: Context, parts: list):
+        assert len(parts) == C.procs
+        self.C = C
+        self.parts = parts
+
+    # -- embarrassingly parallel ops (no sync) ------------------------------
+    def map(self, f: Callable) -> "DFM":
+        return self._timed(lambda blk: [f(x) for x in blk])
+
+    def flatMap(self, f: Callable) -> "DFM":
+        return self._timed(lambda blk: [y for x in blk for y in f(x)])
+
+    def filter(self, pred: Callable) -> "DFM":
+        return self._timed(lambda blk: [x for x in blk if pred(x)])
+
+    def _timed(self, g: Callable) -> "DFM":
+        out, times = [], []
+        for p, blk in enumerate(self.parts):
+            t0 = time.perf_counter()
+            out.append(g(blk))
+            dt = time.perf_counter() - t0
+            if self.C.jitter is not None:
+                dt += self.C.jitter(p)
+            times.append(dt)
+        self.C._sync(times)
+        return DFM(self.C, out)
+
+    # -- reductions (sync) ---------------------------------------------------
+    def len(self) -> int:
+        return sum(len(b) for b in self.parts)
+
+    def reduce(self, f: Callable, zero: Any) -> Any:
+        acc = zero
+        for blk in self.parts:
+            for x in blk:
+                acc = f(acc, x)
+        return acc
+
+    def scan(self, f: Callable, zero: Any) -> "DFM":
+        """Inclusive prefix scan over the global list order."""
+        out, acc = [], zero
+        for blk in self.parts:
+            cur = []
+            for x in blk:
+                acc = f(acc, x)
+                cur.append(acc)
+            out.append(cur)
+        return DFM(self.C, out)
+
+    def collect(self) -> list:
+        return [x for blk in self.parts for x in blk]
+
+    def head(self, n: int = 10) -> list:
+        return self.collect()[:n]
+
+    # -- data movement -------------------------------------------------------
+    def repartition(self, len_f: Callable, split_f: Callable,
+                    concat_f: Callable) -> "DFM":
+        """Re-balance treating each element as a container of records
+        (paper: len / subdivide / combine functions).  The result is one
+        combined element per rank, with records split by the partition law."""
+        records = []
+        for blk in self.parts:
+            for x in blk:
+                n = len_f(x)
+                records.extend(split_f(x, n))   # one chunk per record
+        N = len(records)
+        parts = []
+        for p in range(self.C.procs):
+            s, e = partition_bounds(N, self.C.procs, p)
+            parts.append([concat_f(records[s:e])] if e > s else [])
+        return DFM(self.C, parts)
+
+    def group(self, dest_f: Callable, combine_f: Callable) -> "DFM":
+        """dest_f: element -> {dest_index: [records]}; records are shipped to
+        `dest_index` (mod procs) and combined per destination."""
+        P = self.C.procs
+        inbox: dict[int, list] = {}
+        for blk in self.parts:
+            for x in blk:
+                for dest, recs in dest_f(x).items():
+                    inbox.setdefault(dest % P, []).extend(recs)
+        parts = []
+        for p in range(P):
+            parts.append([combine_f(p, inbox[p])] if p in inbox else [])
+        return DFM(self.C, parts)
+
+    # -- invariants (property-tested) ---------------------------------------
+    def check_partition_law(self):
+        """Blocks must be contiguous ascending when elements are ints."""
+        flat = self.collect()
+        sizes = [len(b) for b in self.parts]
+        N, P = sum(sizes), self.C.procs
+        for p in range(P):
+            s, e = partition_bounds(N, P, p)
+            assert sizes[p] == e - s, (p, sizes[p], e - s)
+        return flat

@@ -1,0 +1,138 @@
+"""rules.yaml / targets.yaml parsing + template machinery (paper Fig. 1).
+
+Substitution uses Python format() semantics, staged in the paper's order:
+ i) target members (loop excluded), ii) loop variables, iii) rule members
+ (script excluded), iv) the script (which also receives {mpirun}).
+Unresolved keys survive each stage (SafeDict), so later stages can fill
+them; literal braces must be escaped ({{ }}), as in the paper.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import yaml
+
+
+class SafeDict(dict):
+    def __missing__(self, key):
+        return "{" + key + "}"
+
+
+def staged_format(text: str, ctx: dict) -> str:
+    try:
+        return text.format_map(SafeDict(ctx))
+    except (IndexError, KeyError, ValueError):
+        return text
+
+
+@dataclass
+class Resources:
+    time: float = 10.0            # minutes
+    nrs: int = 1                  # resource sets (~nodes)
+    cpu: int = 1
+    gpu: int = 0
+    ranks: int = 1                # MPI ranks per resource set
+
+    @property
+    def node_hours(self) -> float:
+        return self.time / 60.0 * self.nrs
+
+
+@dataclass
+class Rule:
+    name: str
+    resources: Resources
+    inp: dict = field(default_factory=dict)     # key -> filename template
+    out: dict = field(default_factory=dict)
+    setup: str = ""
+    script: str = ""
+    loop: dict = field(default_factory=dict)    # var -> python iterable expr
+
+    def template_var(self) -> Optional[str]:
+        """The single allowed template variable, from the out section."""
+        for t in self.out.values():
+            m = re.findall(r"\{(\w+)(?:\[[^]]*\])?\}", t)
+            for v in m:
+                if v not in ("inp", "out", "mpirun"):
+                    return v
+        return None
+
+
+@dataclass
+class Target:
+    name: str
+    dirname: str = "."
+    out: dict = field(default_factory=dict)
+    tgt: dict = field(default_factory=dict)
+    loop: dict = field(default_factory=dict)
+    attrs: dict = field(default_factory=dict)   # arbitrary members
+
+
+def parse_rules(text: str) -> dict[str, Rule]:
+    raw = yaml.safe_load(text) or {}
+    rules = {}
+    for name, spec in raw.items():
+        res = Resources(**(spec.get("resources") or {}))
+        rules[name] = Rule(
+            name=name, resources=res,
+            inp=dict(spec.get("inp") or {}),
+            out=dict(spec.get("out") or {}),
+            setup=spec.get("setup", "") or "",
+            script=spec.get("script", "") or "",
+            loop=dict(spec.get("loop") or {}),
+        )
+    return rules
+
+
+_RESERVED = {"dirname", "out", "tgt", "loop"}
+
+
+def parse_targets(text: str) -> dict[str, Target]:
+    raw = yaml.safe_load(text) or {}
+    targets = {}
+    for name, spec in raw.items():
+        targets[name] = Target(
+            name=name,
+            dirname=spec.get("dirname", "."),
+            out=dict(spec.get("out") or {}),
+            tgt=dict(spec.get("tgt") or {}),
+            loop=dict(spec.get("loop") or {}),
+            attrs={k: v for k, v in spec.items() if k not in _RESERVED},
+        )
+    return targets
+
+
+def expand_loop(loop: dict, ctx: dict) -> list[dict]:
+    """loop: {var: "range(1,11)"} -> [{var: 1}, ..., {var: 10}] (cartesian)."""
+    combos = [dict()]
+    for var, expr in loop.items():
+        if isinstance(expr, str):
+            vals = list(eval(expr, {"range": range}, dict(ctx)))  # noqa: S307
+        else:
+            vals = list(expr)
+        combos = [dict(c, **{var: v}) for c in combos for v in vals]
+    return combos
+
+
+def template_regex(template: str) -> re.Pattern:
+    """Out-template -> regex extracting the template variable."""
+    pat = ""
+    for piece in re.split(r"(\{\w+\})", template):
+        m = re.fullmatch(r"\{(\w+)\}", piece)
+        if m:
+            pat += f"(?P<{m.group(1)}>.+?)"
+        else:
+            pat += re.escape(piece)
+    return re.compile("^" + pat + "$")
+
+
+def match_output(rule: Rule, filename: str) -> Optional[dict]:
+    """If `filename` matches one of the rule's out templates, return the
+    extracted variable bindings (possibly empty)."""
+    for t in rule.out.values():
+        m = template_regex(t).match(filename)
+        if m:
+            return m.groupdict()
+    return None

@@ -1,0 +1,154 @@
+"""pmake scheduler/executor: greedy highest-priority-first onto free nodes.
+
+Scripts are generated as `rulename.n.sh` (set -e; cd dirname; setup;
+script), executed with popen, logged to `rulename.n.log`.  {mpirun} expands
+per the ambient batch scheduler (Slurm srun / LSF jsrun / local fallback),
+as in the paper.  Completed outputs are trusted (file-sync restart);
+non-zero exit poisons transitive successors.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import threading
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+from repro.core.pmake.graph import Task, build_graph
+from repro.core.pmake.rules import parse_rules, parse_targets, staged_format
+
+
+def detect_mpirun(resources) -> str:
+    n = resources.ranks * resources.nrs
+    if os.environ.get("SLURM_JOB_ID"):
+        return f"srun -n {n}"
+    if os.environ.get("LSB_JOBID"):
+        return (f"jsrun -n {resources.nrs} -a {resources.ranks} "
+                f"-c {resources.cpu} -g {resources.gpu}")
+    return ""        # local: run the program directly
+
+
+class PMake:
+    def __init__(self, rules_text: str, targets_text: str, *, root: str = ".",
+                 total_nodes: int = 1, poll: float = 0.02,
+                 runner: Optional[Callable] = None):
+        self.root = Path(root)
+        self.rules = parse_rules(rules_text)
+        self.targets = parse_targets(targets_text)
+        self.tasks = build_graph(self.rules, self.targets, root=str(root))
+        self.total_nodes = total_nodes
+        self.poll = poll
+        self.runner = runner          # override for tests/simulation
+        self.log: list[dict] = []     # schedule trace
+        self.errors: set[str] = set()
+
+    # ------------------------------------------------------------------
+    def render_script(self, task: Task) -> str:
+        ctx = dict(task.ctx)
+        ctx["mpirun"] = detect_mpirun(task.rule.resources)
+        setup = staged_format(task.rule.setup, ctx)
+        body = staged_format(task.rule.script, ctx)
+        return (f"set -e\ncd {self.root / task.dirname}\n"
+                f"{setup}\n{body}\n")
+
+    def _run_task(self, task: Task) -> bool:
+        sdir = self.root / task.dirname
+        sdir.mkdir(parents=True, exist_ok=True)
+        name = task.script_name()
+        script_path = sdir / f"{name}.sh"
+        log_path = sdir / f"{name}.log"
+        script_path.write_text(self.render_script(task))
+        if self.runner is not None:
+            return bool(self.runner(task))
+        with open(log_path, "w") as logf:
+            proc = subprocess.Popen(["sh", str(script_path)], stdout=logf,
+                                    stderr=subprocess.STDOUT)
+            rc = proc.wait()
+        if rc != 0:
+            return False
+        missing = [o for o in task.outputs
+                   if not (sdir / o).exists()]
+        if missing:
+            raise FileNotFoundError(
+                f"rule {task.rule.name} exited 0 but outputs missing: "
+                f"{missing}")
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self) -> dict:
+        """Greedy EFT loop; returns summary stats."""
+        done: set[str] = set()
+        running: dict[str, threading.Thread] = {}
+        results: dict[str, bool] = {}
+        free = self.total_nodes
+        t0 = time.perf_counter()
+
+        def outputs_exist(t: Task) -> bool:
+            return all((self.root / t.dirname / o).exists() for o in t.outputs)
+
+        # file-based restart: pre-complete tasks whose outputs exist
+        for k, t in list(self.tasks.items()):
+            if t.outputs and outputs_exist(t):
+                done.add(k)
+
+        def runnable():
+            for k, t in self.tasks.items():
+                if (k in done or k in running or k in self.errors
+                        or not t.deps <= done):
+                    continue
+                if any(d in self.errors for d in t.deps):
+                    continue
+                yield t
+
+        def poison(key: str):
+            stack = [key]
+            while stack:
+                cur = stack.pop()
+                if cur in self.errors:
+                    continue
+                self.errors.add(cur)
+                stack.extend(self.tasks[cur].succs)
+
+        while len(done) + len(self.errors & set(self.tasks)) < len(self.tasks):
+            # launch as many as fit, highest priority first
+            cands = sorted(runnable(), key=lambda t: -t.priority)
+            for t in cands:
+                need = min(t.rule.resources.nrs, self.total_nodes)
+                if need > free:
+                    continue
+                free -= need
+
+                def work(task=t, need=need):
+                    ok = False
+                    try:
+                        ok = self._run_task(task)
+                    finally:
+                        results[task.key] = ok
+
+                th = threading.Thread(target=work, daemon=True)
+                running[t.key] = th
+                self.log.append({"task": t.key, "event": "start",
+                                 "t": time.perf_counter() - t0,
+                                 "priority": t.priority, "nodes": need})
+                th.start()
+            # reap
+            for k in list(running):
+                if k in results:
+                    running.pop(k).join()
+                    free += min(self.tasks[k].rule.resources.nrs,
+                                self.total_nodes)
+                    if results[k]:
+                        done.add(k)
+                    else:
+                        poison(k)
+                    self.log.append({"task": k, "event": "done",
+                                     "ok": results[k],
+                                     "t": time.perf_counter() - t0})
+            if not running and not any(True for _ in runnable()):
+                break
+            time.sleep(self.poll)
+
+        return {"tasks": len(self.tasks), "done": len(done),
+                "errors": len(self.errors),
+                "wall_s": time.perf_counter() - t0}

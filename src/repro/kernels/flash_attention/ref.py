@@ -1,0 +1,37 @@
+"""Oracle: causal (optionally windowed / softcapped) attention.
+
+Delegates to the model-side blockwise implementation so the kernel, the
+model path, and this oracle are provably the same math.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention as _blockwise
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None,
+                        logit_softcap: float = 0.0, scale: float = None):
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd). One-shot masked softmax."""
+    B, H, S, hd = q.shape
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    pos = jnp.arange(S)
+    allow = jnp.ones((S, S), bool)
+    if causal:
+        allow &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        allow &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(allow, s, -2.0e38)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention_blockwise_ref(q, k, v, **kw):
+    """The model-path blockwise formulation ((B,S,H,hd) layout)."""
+    return _blockwise(q, k, v, **kw)

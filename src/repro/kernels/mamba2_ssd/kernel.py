@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: chunked Mamba2 SSD scan (n_groups == 1).
+
+Grid (B, n_chunks): chunk dim sequential, carrying the (H, hd, N) state in
+VMEM scratch.  Per chunk: the (Q,Q) C·B score matrix hits the MXU once and
+is reused by every head; the per-head decay mask is a (Q,Q,H) VMEM tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, dA_ref, b_ref, c_ref, o_ref, state_ref, *,
+                Q: int, H: int, hd: int, N: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0].astype(jnp.float32)         # (Q, H, hd)
+    dA = dA_ref[0].astype(jnp.float32)           # (Q, H)
+    Bc = b_ref[0].astype(jnp.float32)            # (Q, N)   (G == 1)
+    Cc = c_ref[0].astype(jnp.float32)            # (Q, N)
+
+    cum = jnp.cumsum(dA, axis=0)                 # (Q, H)
+    scores = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(jnp.where(mask[..., None],
+                          cum[:, None, :] - cum[None, :, :], -1e9))  # (Q,Q,H)
+    M = L * scores[..., None]
+    Y = jnp.einsum("tjh,jhd->thd", M, xdt)
+    # inter-chunk
+    Y = Y + jnp.einsum("tn,hdn->thd", Cc, state_ref[...]) \
+        * jnp.exp(cum)[..., None]
+    # state update
+    dec_end = jnp.exp(cum[-1][None, :] - cum)                 # (Q, H)
+    state_ref[...] = (state_ref[...] * jnp.exp(cum[-1])[:, None, None]
+                      + jnp.einsum("jh,jhd,jn->hdn", dec_end, xdt, Bc))
+    o_ref[0] = Y.astype(o_ref.dtype)
+
+
+def ssd_pallas(xdt, dA, B_, C_, *, chunk: int = 64, interpret: bool = False):
+    """xdt (B,S,H,hd); dA (B,S,H); B_/C_ (B,S,1,N) -> Y (B,S,H,hd)."""
+    Bb, S, H, hd = xdt.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert G == 1, "ssd_pallas supports n_groups == 1 (ops falls back)"
+    Q = min(chunk, S)
+    assert S % Q == 0
+    grid = (Bb, S // Q)
+    kernel = functools.partial(_ssd_kernel, Q=Q, H=H, hd=hd, N=N)
+    try:
+        params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    except (AttributeError, TypeError):
+        params = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, H, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, H, hd), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, S, H, hd), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((H, hd, N), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+    )(xdt, dA, B_[:, :, 0], C_[:, :, 0])

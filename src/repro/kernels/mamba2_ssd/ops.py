@@ -1,0 +1,20 @@
+"""jit'd wrapper: Pallas on TPU (G==1), oracle fallback otherwise."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.mamba2_ssd.kernel import ssd_pallas
+from repro.kernels.mamba2_ssd.ref import ssd_ref, ssd_sequential_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "force_interpret"))
+def ssd(xdt, dA, B_, C_, *, chunk: int = 64, force_interpret: bool = False):
+    if B_.shape[2] != 1:
+        return ssd_ref(xdt, dA, B_, C_, chunk=chunk)[0]
+    interpret = force_interpret or jax.default_backend() != "tpu"
+    return ssd_pallas(xdt, dA, B_, C_, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["ssd", "ssd_ref", "ssd_sequential_ref"]

@@ -1,0 +1,47 @@
+"""Oracle for the chunked Mamba2 SSD scan — delegates to the model-side
+chunk function (`repro.models.mamba2._ssd_chunk`)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import _ssd_chunk
+
+
+def ssd_ref(xdt, dA, B_, C_, *, chunk: int = 64, initial_state=None):
+    """xdt: (B,S,H,hd) [= dt*x]; dA: (B,S,H); B_/C_: (B,S,G,N).
+    Returns (Y (B,S,H,hd), final_state (B,H,hd,N))."""
+    Bb, S, H, hd = xdt.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nC = S // Q
+    cum = jnp.cumsum(dA.reshape(Bb, nC, Q, H), axis=2).transpose(1, 0, 2, 3)
+    blks = (cum,
+            B_.reshape(Bb, nC, Q, G, N).transpose(1, 0, 2, 3, 4),
+            C_.reshape(Bb, nC, Q, G, N).transpose(1, 0, 2, 3, 4),
+            xdt.reshape(Bb, nC, Q, H, hd).transpose(1, 0, 2, 3, 4))
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bb, H, hd, N), jnp.float32))
+    step = lambda c, b: _ssd_chunk(c, b, H=H, G=G, N=N, hd=hd)
+    S_fin, Ys = jax.lax.scan(step, S0, blks)
+    return Ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, hd), S_fin
+
+
+def ssd_sequential_ref(xdt, dA, B_, C_):
+    """Step recurrence S_t = exp(dA_t) S_{t-1} + xdt_t B_t ; y_t = C_t S_t."""
+    Bb, S, H, hd = xdt.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Hg = H // G
+    S0 = jnp.zeros((Bb, G, Hg, hd, N), jnp.float32)
+
+    def step(state, t):
+        x = xdt[:, t].reshape(Bb, G, Hg, hd)
+        a = jnp.exp(dA[:, t]).reshape(Bb, G, Hg)
+        state = state * a[..., None, None] + jnp.einsum(
+            "bghd,bgn->bghdn", x, B_[:, t])
+        y = jnp.einsum("bgn,bghdn->bghd", C_[:, t], state)
+        return state, y.reshape(Bb, H, hd)
+
+    S_fin, ys = jax.lax.scan(step, S0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), S_fin.reshape(Bb, H, hd, N)

@@ -1,0 +1,18 @@
+"""jit'd wrapper with interpret fallback off-TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6_scan.kernel import wkv6_pallas
+from repro.kernels.rwkv6_scan.ref import wkv6_ref, wkv6_sequential_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "force_interpret"))
+def wkv6(r, k, v, logw, u, *, chunk: int = 32, force_interpret: bool = False):
+    interpret = force_interpret or jax.default_backend() != "tpu"
+    return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["wkv6", "wkv6_ref", "wkv6_sequential_ref"]

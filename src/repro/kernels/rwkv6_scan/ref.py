@@ -1,0 +1,42 @@
+"""Oracle for the chunked WKV6 recurrence — delegates to the model-side
+chunk function (`repro.models.rwkv._wkv_chunk`) so kernel and model share
+one definition of the math."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv import _wkv_chunk
+
+
+def wkv6_ref(r, k, v, logw, u, *, chunk: int = 32, initial_state=None):
+    """r/k/v/logw: (B, S, H, hd) fp32; u: (H, hd).
+    Returns (y (B,S,H,hd), final_state (B,H,hd,hd))."""
+    B, S, H, hd = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nC = S // Q
+    resh = lambda a: a.reshape(B, nC, Q, H, hd).transpose(1, 0, 2, 3, 4)
+    cumw = jnp.cumsum(logw.reshape(B, nC, Q, H, hd), axis=2).transpose(1, 0, 2, 3, 4)
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((B, H, hd, hd), jnp.float32))
+    us = jnp.broadcast_to(u, (nC,) + u.shape)
+    step = lambda c, b: _wkv_chunk(c, b, H=H, hd=hd)
+    S_fin, Ys = jax.lax.scan(step, S0, (cumw, resh(r), resh(k), resh(v), us))
+    return Ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd), S_fin
+
+
+def wkv6_sequential_ref(r, k, v, logw, u):
+    """Step-by-step recurrence (independent formulation for cross-checks)."""
+    B, S, H, hd = r.shape
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(state, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], jnp.exp(logw[:, t])
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, ..., None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    S_fin, ys = jax.lax.scan(step, S0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), S_fin

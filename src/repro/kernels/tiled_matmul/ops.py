@@ -1,0 +1,24 @@
+"""jit'd wrapper: Pallas on TPU, interpret-mode execution elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.tiled_matmul.kernel import tiled_matmul_pallas
+from repro.kernels.tiled_matmul.ref import tiled_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "force_interpret"))
+def tiled_matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 256,
+                 force_interpret: bool = False):
+    """C = A^T B via the Pallas kernel (interpret=True off-TPU)."""
+    interpret = force_interpret or not _on_tpu()
+    return tiled_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+__all__ = ["tiled_matmul", "tiled_matmul_ref"]

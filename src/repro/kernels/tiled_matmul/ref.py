@@ -1,0 +1,10 @@
+"""Oracle: C = A^T B (the paper's §3 benchmark operation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tiled_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: (K, M), b: (K, N) -> (M, N) in fp32 accumulation."""
+    return jnp.einsum("km,kn->mn", a, b,
+                      preferred_element_type=jnp.float32).astype(a.dtype)

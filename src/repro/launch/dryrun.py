@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: the multi-pod dry-run builds meshes of
+# 512 placeholder host devices. (Smoke tests / benches never import this.)
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, RunConfig, applicable_shapes,
+                           get_config, input_specs)
+from repro.launch.hlo_analysis import analyze, roofline_terms
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.common import Options, mesh_context, param_count
+from repro.models.model import build_model
+from repro.optim.adamw import abstract_opt
+from repro.runtime.sharding import (batch_specs, cache_specs, logical_rules,
+                                    opt_state_specs, param_specs,
+                                    param_specs_2d, to_named)
+from repro.runtime.serve_step import make_decode_step, make_prefill_step
+from repro.runtime.train_step import make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (training) or 2·N_active·D (fwd-only) useful-FLOPs model."""
+    model = build_model(cfg)
+    n = param_count(jax.eval_shape(
+        lambda k: model.init(k), jax.random.PRNGKey(0)))
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_params = (cfg.n_layers - m.first_dense_layers) * m.n_experts \
+            * 3 * cfg.d_model * m.d_expert
+        active = n - expert_params + expert_params * m.top_k / m.n_experts
+    else:
+        active = n
+    # embedding rows don't multiply
+    active -= cfg.padded_vocab * cfg.d_model
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch        # decode: one token/seq
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, rc: RunConfig,
+               opts: Options) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = build_model(cfg, opts)
+    rules = logical_rules(mesh, global_batch=shape.global_batch,
+                          seq_shard_kv=rc.seq_shard_kv,
+                          shard_params_2d=rc.shard_params_2d)
+
+    abstract_params = model.init_abstract()
+    if rc.param_dtype != "float32":
+        pd = jnp.dtype(rc.param_dtype)
+        abstract_params = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, pd)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, abstract_params)
+    pspecs = param_specs(abstract_params, cfg)
+    if rc.shard_params_2d:
+        pspecs = param_specs_2d(pspecs, abstract_params, mesh)
+    bspecs = batch_specs(cfg, shape, mesh)
+    batch_abs = input_specs(cfg, shape)
+
+    t0 = time.time()
+    with mesh_context(mesh, rules):
+        if shape.mode == "train":
+            opt_abs = abstract_opt(abstract_params, rc)
+            ospecs = opt_state_specs(pspecs, abstract_params, mesh, rc.zero1)
+            ospecs = type(opt_abs)(count=P(), m=ospecs, v=ospecs)
+            step = make_train_step(model, rc)
+            jitted = jax.jit(
+                step,
+                in_shardings=(to_named(mesh, pspecs), to_named(mesh, ospecs),
+                              to_named(mesh, bspecs)),
+                out_shardings=(to_named(mesh, pspecs), to_named(mesh, ospecs),
+                               None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(abstract_params, opt_abs, batch_abs)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(model)
+            jitted = jax.jit(
+                step, in_shardings=(to_named(mesh, pspecs),
+                                    to_named(mesh, bspecs)),
+                out_shardings=None)
+            lowered = jitted.lower(abstract_params, batch_abs)
+        else:  # decode
+            cache_abs = model.init_cache(shape.global_batch, shape.seq_len,
+                                         abstract=True)
+            cspecs = cache_specs(cfg, cache_abs, mesh,
+                                 global_batch=shape.global_batch,
+                                 seq_shard_kv=rc.seq_shard_kv)
+            step = make_decode_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(to_named(mesh, pspecs),
+                              to_named(mesh, bspecs["tokens"]),
+                              to_named(mesh, bspecs["positions"]),
+                              to_named(mesh, cspecs)),
+                out_shardings=(to_named(mesh, bspecs["tokens"]),
+                               to_named(mesh, cspecs)),
+                donate_argnums=(3,))
+            lowered = jitted.lower(abstract_params, batch_abs["tokens"],
+                                   batch_abs["positions"], cache_abs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ana = analyze(hlo)                 # trip-count-corrected, per-device
+    coll = ana["collectives"]
+
+    flops = float(ana["flops"])
+    hbm = float(ana["hbm_bytes"])
+    terms = roofline_terms(flops, hbm,
+                           coll.get("total_bf16_corrected",
+                                    coll.get("total", 0)),
+                           n_chips, peak_flops=PEAK_FLOPS_BF16,
+                           hbm_bw=HBM_BW, ici_bw=ICI_BW)
+    terms["collective_uncorrected_s"] = coll.get("total", 0) / ICI_BW
+    mf = model_flops(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": int(n_chips),
+        "mode": shape.mode, "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops_per_device": flops, "hlo_bytes_per_device": hbm,
+        "hlo_flops": flops * n_chips, "hlo_bytes": hbm * n_chips,
+        "xla_cost_flops_per_device_loops_once": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes_per_device_loops_once": float(
+            cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "memory": {
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": terms,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / (flops * n_chips)) if flops else None,
+        "rc": {"remat": rc.remat, "microbatches": rc.microbatches,
+               "zero1": rc.zero1, "param_dtype": rc.param_dtype,
+               "seq_shard_kv": rc.seq_shard_kv,
+               "grad_compress": rc.grad_compress},
+        "opts": {"q_block": opts.q_block, "kv_block": opts.kv_block,
+                 "skip_masked_blocks": opts.skip_masked_blocks,
+                 "mla_absorb": opts.mla_absorb, "moe_group": opts.moe_group,
+                 "probs_bf16": opts.probs_bf16,
+                 "shard_params_2d": rc.shard_params_2d},
+    }
+    return rec
+
+
+def cell_filename(arch, shape_name, multi_pod, tag=""):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    t = f"__{tag}" if tag else ""
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh}{t}.json"
+
+
+def run_one(args) -> int:
+    rc = RunConfig(remat=args.remat, microbatches=args.microbatches,
+                   zero1=not args.no_zero1, param_dtype=args.param_dtype,
+                   seq_shard_kv=args.seq_shard_kv,
+                   grad_compress=args.grad_compress,
+                   adam_state_dtype=args.adam_state_dtype,
+                   shard_params_2d=args.shard_params_2d)
+    opts = Options(q_block=args.q_block, kv_block=args.kv_block,
+                   skip_masked_blocks=args.skip_masked_blocks,
+                   mla_absorb=args.mla_absorb, moe_group=args.moe_group,
+                   remat=args.remat, probs_bf16=args.probs_bf16)
+    out = cell_filename(args.arch, args.shape, args.multi_pod, args.tag)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    try:
+        rec = lower_cell(args.arch, args.shape, args.multi_pod, rc, opts)
+    except Exception as e:  # noqa: BLE001 - recorded, not swallowed
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "ok": False, "error": f"{type(e).__name__}: {e}"}
+        out.write_text(json.dumps(rec, indent=1))
+        print(json.dumps(rec, indent=1))
+        return 1
+    out.write_text(json.dumps(rec, indent=1))
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "ok", "compile_s", "hlo_flops",
+                       "roofline", "useful_flops_ratio")}, indent=1))
+    return 0
+
+
+def run_all(args) -> int:
+    """Spawn one subprocess per cell (compile isolation + fresh XLA state)."""
+    fails = []
+    meshes = [False, True] if args.meshes == "both" else [args.meshes == "multipod"]
+    for arch in (args.archs.split(",") if args.archs else ARCH_IDS):
+        cfg = get_config(arch)
+        for shape_name, status in applicable_shapes(cfg).items():
+            if args.shapes and shape_name not in args.shapes.split(","):
+                continue
+            for mp in meshes:
+                out = cell_filename(arch, shape_name, mp, args.tag)
+                if status != "run":
+                    out.parent.mkdir(parents=True, exist_ok=True)
+                    out.write_text(json.dumps({
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "ok": None, "skipped": status}, indent=1))
+                    continue
+                if out.exists() and not args.force:
+                    rec = json.loads(out.read_text())
+                    if rec.get("ok"):
+                        continue
+                mode = SHAPES[shape_name].mode
+                # train defaults: full remat + 4 microbatches (activation
+                # memory does not fit otherwise); serving: none needed.
+                remat = args.remat
+                mb = args.microbatches
+                if mode == "train" and remat == "none" and mb == 1:
+                    remat, mb = "full", 4
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--remat", remat, "--microbatches", str(mb)]
+                if mp:
+                    cmd.append("--multi-pod")
+                for flag in ("param_dtype", "grad_compress",
+                             "adam_state_dtype", "tag"):
+                    v = getattr(args, flag)
+                    if v:
+                        cmd += [f"--{flag.replace('_', '-')}", str(v)]
+                for flag in ("q_block", "kv_block", "moe_group"):
+                    cmd += [f"--{flag.replace('_', '-')}",
+                            str(getattr(args, flag))]
+                for flag in ("skip_masked_blocks", "mla_absorb", "no_zero1"):
+                    if getattr(args, flag):
+                        cmd.append(f"--{flag.replace('_', '-')}")
+                if args.seq_shard_kv or shape_name == "long_500k":
+                    cmd.append("--seq-shard-kv")
+                print("::", " ".join(cmd), flush=True)
+                r = subprocess.run(cmd, timeout=args.cell_timeout)
+                if r.returncode != 0:
+                    fails.append((arch, shape_name, mp))
+    if fails:
+        print("FAILED CELLS:", fails)
+    return 1 if fails else 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", default="")
+    ap.add_argument("--shapes", default="")
+    ap.add_argument("--meshes", default="both",
+                    choices=["both", "pod", "multipod"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--cell-timeout", type=int, default=3600)
+    # RunConfig / Options knobs (perf hillclimb levers)
+    ap.add_argument("--remat", default="none", choices=["none", "dots", "full"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--param-dtype", default="float32")
+    ap.add_argument("--adam-state-dtype", default="float32")
+    ap.add_argument("--grad-compress", default="none")
+    ap.add_argument("--seq-shard-kv", action="store_true")
+    ap.add_argument("--q-block", type=int, default=1024)
+    ap.add_argument("--kv-block", type=int, default=1024)
+    ap.add_argument("--moe-group", type=int, default=1024)
+    ap.add_argument("--skip-masked-blocks", action="store_true")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--probs-bf16", action="store_true")
+    ap.add_argument("--shard-params-2d", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        sys.exit(run_all(args))
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    sys.exit(run_one(args))
+
+
+if __name__ == "__main__":
+    main()

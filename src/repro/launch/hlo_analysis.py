@@ -1,0 +1,291 @@
+"""Post-compile HLO analysis: flop/byte/collective accounting + roofline.
+
+XLA's `cost_analysis()` counts `while` bodies ONCE (verified empirically:
+a scan of 8 matmuls reports the flops of 1), so for scan-over-layers models
+it undercounts by ~n_layers.  We therefore parse the optimized (SPMD-
+partitioned, per-device) HLO text ourselves:
+
+  * build the computation call graph (while body/condition, fusion `calls`,
+    reduce `to_apply`, conditional branches),
+  * extract while trip counts from the canonical compare-against-constant
+    in loop conditions,
+  * walk from ENTRY with execution multipliers,
+  * count: dot flops (2 * out_elems * contraction) wherever they appear
+    (incl. inside fused computations), HBM bytes for top-level ops of
+    non-fused computations (operands + outputs — a fusion-aware traffic
+    model), and collective bytes by kind.
+
+Everything is per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?)|(?:[\w]+\[\]))\s*"
+    r"([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_TRIP_RE = re.compile(r"constant\((\d+)\)")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?)|(?:[\w]+\[\]))")
+
+
+def shape_elems_bytes(type_str: str):
+    elems_total, bytes_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return elems_total, bytes_total
+
+
+def shape_bytes(type_str: str) -> int:
+    return shape_elems_bytes(type_str)[1]
+
+
+def shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "type", "opcode", "operands", "line")
+
+    def __init__(self, name, type_, opcode, operands, line):
+        self.name, self.type, self.opcode = name, type_, opcode
+        self.operands, self.line = operands, line
+
+
+class Computation:
+    def __init__(self, name, entry=False):
+        self.name = name
+        self.entry = entry
+        self.instrs: list[Instr] = []
+        self.symbols: dict[str, str] = {}       # instr/param name -> type str
+
+
+def parse_module(hlo: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    cur = None
+    entry_name = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), entry=bool(m.group(1)))
+                if m.group(1):
+                    entry_name = m.group(2)
+                for pname, ptype in _PARAM_RE.findall(m.group(3)):
+                    cur.symbols[pname] = ptype
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            name, type_, opcode = im.group(1), im.group(2), im.group(3)
+            body = line[im.end():]
+            depth = 1
+            i = 0
+            while i < len(body) and depth:
+                if body[i] == "(":
+                    depth += 1
+                elif body[i] == ")":
+                    depth -= 1
+                i += 1
+            operands = re.findall(r"%([\w.\-]+)", body[:i])
+            cur.symbols[name] = type_
+            cur.instrs.append(Instr(name, type_, opcode, operands, line))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry_name
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems, _ = shape_elems_bytes(instr.type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    contract = 1
+    if m and instr.operands:
+        lhs_type = comp.symbols.get(instr.operands[0])
+        if lhs_type:
+            dims = shape_dims(lhs_type)
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+_SKIP_BYTES_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+                   "constant", "after-all", "partition-id", "replica-id",
+                   "while", "conditional", "copy-start", "copy-done"}
+
+
+def _fused_root(ins: Instr, comps: dict):
+    m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+    if m and m.group(1) in comps:
+        c = comps[m.group(1)]
+        if c.instrs:
+            return c.instrs[-1], c
+    return None, None
+
+
+def _op_bytes(ins: Instr, comp: Computation, comps: dict) -> int:
+    """HBM-traffic model for one top-level op: every materialized buffer is
+    written once and read ~once => 2 x output bytes.  Slice-touching ops
+    (incl. the scan residual-stacking DUS fusions) count slice traffic, not
+    the whole (L, ...) buffer.  Counting operands too would multiply-count
+    high-fanout buffers; this outputs-only model is the documented
+    methodology for the §Roofline memory term."""
+    op = ins.opcode
+    if op == "dynamic-update-slice":
+        upd = comp.symbols.get(ins.operands[1]) if len(ins.operands) > 1 else None
+        return 2 * shape_bytes(upd) if upd else shape_bytes(ins.type)
+    if op == "fusion":
+        # any fusion containing DUS ops is a slice-write (scan stacking /
+        # cache update), possibly with convert-wrapped roots
+        m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+        fc = comps.get(m.group(1)) if m else None
+        if fc is not None:
+            dus = [i for i in fc.instrs if i.opcode == "dynamic-update-slice"]
+            if dus:
+                b = 0
+                for d in dus:
+                    upd = (fc.symbols.get(d.operands[1])
+                           if len(d.operands) > 1 else None)
+                    b += 2 * shape_bytes(upd) if upd else 0
+                return b
+    return 2 * shape_bytes(ins.type)
+
+
+def analyze(hlo: str) -> dict:
+    comps, entry = parse_module(hlo)
+
+    # call graph: comp -> [(child, multiplier)]
+    children = defaultdict(list)
+    fusion_called = set()
+    trip_counts = {}
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                m = re.search(r"body=%?([\w.\-]+)", ins.line)
+                c = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                tm = _TRIP_RE.search(ins.line)     # XLA backend_config
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = 1
+                    if c and c.group(1) in comps:
+                        consts = []
+                        for l2 in comps[c.group(1)].instrs:
+                            consts += [int(x) for x in
+                                       _CONST_TRIP_RE.findall(l2.line)]
+                        if consts:
+                            trip = max(consts)
+                if m:
+                    children[cname].append((m.group(1), trip))
+                    trip_counts[m.group(1)] = trip
+                if c:
+                    children[cname].append((c.group(1), trip))
+            elif ins.opcode in ("fusion", "reduce", "reduce-window", "map",
+                                "scatter", "sort", "call", "custom-call",
+                                "select-and-scatter", "reduce-scatter",
+                                "all-reduce"):
+                for m in _CALL_ATTR_RE.finditer(ins.line):
+                    children[cname].append((m.group(1), 1))
+                    fusion_called.add(m.group(1))
+            elif ins.opcode == "conditional":
+                b = _BRANCH_RE.search(ins.line)
+                if b:
+                    for br in re.findall(r"%?([\w.\-]+)", b.group(1)):
+                        children[cname].append((br, 1))
+
+    # execution multiplier per computation (walk from entry)
+    mult = defaultdict(float)
+    entry = entry or next(iter(comps))
+    stack = [(entry, 1.0, 0)]
+    while stack:
+        cname, m_, depth = stack.pop()
+        if depth > 32:
+            continue
+        mult[cname] += m_
+        for child, trip in children.get(cname, ()):
+            stack.append((child, m_ * trip, depth + 1))
+
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    for cname, comp in comps.items():
+        m_ = mult.get(cname, 0.0)
+        if m_ == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m_ * _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                # rough: 2 * out * kernel-spatial * in-channels unknown -> out*2
+                out_e, _ = shape_elems_bytes(ins.type)
+                flops += m_ * 2.0 * out_e
+            kind = next((k for k in COLLECTIVES
+                         if ins.opcode in (k, k + "-start")), None)
+            if kind:
+                b = m_ * shape_bytes(ins.type)
+                coll[kind] += b
+                # CPU lowering promotes bf16 dot outputs to f32, so
+                # activation all-reduces appear at 2x their TPU width —
+                # tracked separately for the corrected collective term.
+                if "f32[" in ins.type and kind in ("all-reduce",
+                                                   "reduce-scatter"):
+                    coll["_f32_reduce"] += b
+            # HBM bytes: top-level ops of non-fused computations.
+            # Slice-touching ops count slice traffic, not whole buffers
+            # (scan residual stacking would otherwise count the full
+            # (L, ...) buffer once per layer).
+            if cname not in fusion_called and ins.opcode not in _SKIP_BYTES_OPS:
+                hbm += m_ * _op_bytes(ins, comp, comps)
+    f32r = coll.pop("_f32_reduce", 0.0)
+    coll["total"] = sum(v for k, v in coll.items() if k != "total")
+    # corrected: f32 reduces counted at bf16 width (the TPU value)
+    coll["total_bf16_corrected"] = coll["total"] - 0.5 * f32r
+    return {"flops": flops, "hbm_bytes": hbm,
+            "collectives": {k: int(v) for k, v in coll.items()},
+            "trip_counts": trip_counts}
+
+
+def collective_bytes(hlo: str) -> dict:
+    return analyze(hlo)["collectives"]
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int, *, peak_flops: float, hbm_bw: float,
+                   ici_bw: float) -> dict:
+    """Three roofline terms in seconds (all inputs per-device)."""
+    compute_t = flops / peak_flops
+    memory_t = hbm_bytes / hbm_bw
+    coll_t = coll_bytes / ici_bw
+    dom = max(("compute", compute_t), ("memory", memory_t),
+              ("collective", coll_t), key=lambda kv: kv[1])
+    return {"compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": coll_t, "bottleneck": dom[0]}

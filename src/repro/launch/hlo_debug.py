@@ -1,0 +1,128 @@
+"""Contributor dump: lower one cell and print the top flop/byte/collective
+ops with execution multipliers — the §Perf profiling tool (our 'profile' is
+the lowered IR, per the dry-run methodology)."""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+import repro.launch.hlo_analysis as ha
+
+
+def multipliers(comps, entry):
+    children = defaultdict(list)
+    fusion_called = set()
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                m = re.search(r"body=%?([\w.\-]+)", ins.line)
+                c = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                tm = ha._TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                if m:
+                    children[cname].append((m.group(1), trip))
+                if c:
+                    children[cname].append((c.group(1), trip))
+            elif ins.opcode in ("fusion", "reduce", "scatter", "sort", "call",
+                                "custom-call", "reduce-scatter", "all-reduce",
+                                "map", "reduce-window", "select-and-scatter"):
+                for m in ha._CALL_ATTR_RE.finditer(ins.line):
+                    children[cname].append((m.group(1), 1))
+                    fusion_called.add(m.group(1))
+            elif ins.opcode == "conditional":
+                b = ha._BRANCH_RE.search(ins.line)
+                if b:
+                    for br in re.findall(r"%?([\w.\-]+)", b.group(1)):
+                        children[cname].append((br, 1))
+    mult = defaultdict(float)
+    stack = [(entry, 1.0, 0)]
+    while stack:
+        cn, m_, d = stack.pop()
+        if d > 32:
+            continue
+        mult[cn] += m_
+        for ch, t in children.get(cn, ()):
+            stack.append((ch, m_ * t, d + 1))
+    return mult, fusion_called
+
+
+def dump(hlo: str, kind: str = "bytes", top: int = 20):
+    comps, entry = ha.parse_module(hlo)
+    mult, fusion_called = multipliers(comps, entry)
+    rows = []
+    for cname, comp in comps.items():
+        m_ = mult.get(cname, 0.0)
+        if not m_:
+            continue
+        for ins in comp.instrs:
+            meta = re.search(r'op_name="([^"]+)"', ins.line)
+            tag = meta.group(1)[-70:] if meta else ins.opcode
+            if kind == "collective":
+                k = next((k for k in ha.COLLECTIVES
+                          if ins.opcode in (k, k + "-start")), None)
+                if k:
+                    rows.append((m_ * ha.shape_bytes(ins.type), m_, k,
+                                 ins.type[:40], tag))
+            elif kind == "flops":
+                if ins.opcode == "dot":
+                    rows.append((m_ * ha._dot_flops(ins, comp), m_, "dot",
+                                 ins.type[:40], tag))
+            else:
+                if cname in fusion_called or ins.opcode in ha._SKIP_BYTES_OPS:
+                    continue
+                rows.append((m_ * ha._op_bytes(ins, comp, comps), m_,
+                             ins.opcode, ins.type[:40], tag))
+    rows.sort(reverse=True)
+    unit = {"bytes": 1e9, "collective": 1e9, "flops": 1e12}[kind]
+    suf = {"bytes": "GB", "collective": "GB", "flops": "TF"}[kind]
+    for r in rows[:top]:
+        print(f"{r[0]/unit:10.2f}{suf} x{r[1]:6.0f} {r[2]:18s} {r[3]:40s} {r[4]}")
+    print(f"total: {sum(r[0] for r in rows)/unit:.2f}{suf}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--kind", default="bytes",
+                    choices=["bytes", "flops", "collective"])
+    ap.add_argument("--top", type=int, default=20)
+    # pass-through knobs
+    for f in ("remat",):
+        ap.add_argument(f"--{f}", default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--probs-bf16", action="store_true")
+    ap.add_argument("--skip-masked-blocks", action="store_true")
+    ap.add_argument("--shard-params-2d", action="store_true")
+    ap.add_argument("--param-dtype", default="float32")
+    ap.add_argument("--seq-shard-kv", action="store_true")
+    ap.add_argument("--grad-compress", default="none")
+    args = ap.parse_args()
+
+    from repro.configs import RunConfig
+    from repro.models.common import Options
+    import repro.launch.dryrun as dr
+
+    captured = {}
+    orig = ha.analyze
+
+    def cap(hlo):
+        captured["hlo"] = hlo
+        return orig(hlo)
+
+    dr.analyze = cap
+    rc = RunConfig(remat=args.remat, microbatches=args.microbatches,
+                   param_dtype=args.param_dtype,
+                   grad_compress=args.grad_compress,
+                   seq_shard_kv=args.seq_shard_kv,
+                   shard_params_2d=args.shard_params_2d)
+    opts = Options(remat=args.remat, probs_bf16=args.probs_bf16,
+                   skip_masked_blocks=args.skip_masked_blocks)
+    dr.lower_cell(args.arch, args.shape, False, rc, opts)
+    dump(captured["hlo"], args.kind, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,292 @@
+"""Attention: GQA projections + blockwise (flash-style) softmax attention.
+
+TPU-mesh-aware layout (model axis = 16):
+  * Q heads are physically PADDED (group-major flat layout, head h = g*M_pad+m)
+    so Hq_pad % 16 == 0 — flat projections reshape to heads with shard
+    boundaries exactly on head boundaries => zero attention resharding.
+    Padded heads' context is masked before W_o, so their params receive no
+    gradient and the math is exact.
+  * KV projections shard on heads when G % 16 == 0, else stay replicated
+    (duplicate small compute beats score-matrix collectives; see DESIGN.md).
+  * KV is expanded to flat Q-heads locally (broadcast+reshape — slice-local,
+    no communication).
+  * Decode caches are sequence-sharded (flash-decoding): softmax stats and
+    the context contraction reduce over the model axis with tiny psums.
+
+The blockwise path is the memory-feasible pure-JAX formulation (online
+softmax over KV blocks, scanned over Q blocks) — also the oracle for the
+Pallas flash kernel.  `skip_masked_blocks=True` wraps fully-masked KV blocks
+in `lax.cond` so XLA skips their compute (§Perf knob).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (dense_init, grad_cast, shard_hint, softcap,
+                                 zeros_init)
+
+NEG_INF = -2.0e38
+MODEL_AXIS_SIZE = 16          # production mesh model-axis width
+
+
+def head_padding(cfg, model_size: int = MODEL_AXIS_SIZE):
+    """(Hq_pad, M_pad): pad per-group head count so G*M_pad % model == 0."""
+    G = cfg.n_kv_heads
+    M = cfg.n_heads // G
+    m_pad = M
+    while (G * m_pad) % model_size:
+        m_pad += 1
+    return G * m_pad, m_pad
+
+
+def kv_shardable(cfg, model_size: int = MODEL_AXIS_SIZE) -> bool:
+    return cfg.n_kv_heads % model_size == 0
+
+
+def head_mask(cfg):
+    """(Hq_pad,) 1.0 for real heads, 0.0 for padding."""
+    hq_pad, m_pad = head_padding(cfg)
+    M = cfg.n_heads // cfg.n_kv_heads
+    return ((jnp.arange(hq_pad) % m_pad) < M).astype(jnp.float32)
+
+
+def expand_kv(k, hq_pad: int):
+    """(B,T,G,hd) -> (B,T,Hq_pad,hd) by repeating each group M_pad times.
+    Pure broadcast+reshape: local slice under head sharding."""
+    B, T, G, hd = k.shape
+    m_pad = hq_pad // G
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, T, G, m_pad, hd)) \
+        .reshape(B, T, hq_pad, hd)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, n_layers: int, *, d_in: Optional[int] = None,
+                   d_out: Optional[int] = None):
+    """Stacked GQA projection params: (L, ...) leading dim; flat head dims
+    (padded for Q/O)."""
+    d = d_in or cfg.d_model
+    do = d_out or cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq_pad, _ = head_padding(cfg)
+    hkv = cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    L = (n_layers,) if n_layers else ()
+    p = {
+        "wq": dense_init(ks[0], L + (d, hq_pad * hd), in_axis_size=d),
+        "wk": dense_init(ks[1], L + (d, hkv * hd), in_axis_size=d),
+        "wv": dense_init(ks[2], L + (d, hkv * hd), in_axis_size=d),
+        "wo": dense_init(ks[3], L + (hq_pad * hd, do), in_axis_size=hq_pad * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init(None, L + (hq_pad * hd,))
+        p["bk"] = zeros_init(None, L + (hkv * hd,))
+        p["bv"] = zeros_init(None, L + (hkv * hd,))
+    return p
+
+
+def project_qkv(p, x, cfg):
+    """x (B,S,D) -> q (B,S,Hq_pad,hd), k/v (B,S,G,hd)."""
+    hd = cfg.resolved_head_dim
+    hq_pad, _ = head_padding(cfg)
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = shard_hint(q, "batch", None, "model_ff")
+    if kv_shardable(cfg):
+        k = shard_hint(k, "batch", None, "model_ff")
+        v = shard_hint(v, "batch", None, "model_ff")
+    else:
+        k = shard_hint(k, "batch", None, None)
+        v = shard_hint(v, "batch", None, None)
+    q = grad_cast(q.reshape(B, S, hq_pad, hd))
+    k = grad_cast(k.reshape(B, S, cfg.n_kv_heads, hd))
+    v = grad_cast(v.reshape(B, S, cfg.n_kv_heads, hd))
+    return q, k, v
+
+
+def project_out(p, ctx, cfg):
+    """ctx (B,S,Hq_pad,hd) -> (B,S,d_out); masks padded heads first."""
+    B, S = ctx.shape[:2]
+    ctx = grad_cast(ctx) * head_mask(cfg)[None, None, :, None].astype(ctx.dtype)
+    out = ctx.reshape(B, S, -1) @ p["wo"].astype(ctx.dtype)
+    return shard_hint(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (training / prefill) — flat heads
+# ---------------------------------------------------------------------------
+
+
+def _block_mask(qpos, kpos, *, causal: bool, window=None):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    logit_softcap: float = 0.0, scale: float,
+                    q_block: int = 1024, kv_block: int = 1024,
+                    q_offset: int = 0, skip_masked_blocks: bool = False,
+                    probs_bf16: bool = False):
+    """Blockwise attention with online softmax.
+
+    q: (B, S, H, hd);  k, v: (B, T, H, hd) — caller pre-expands GQA KV.
+    Returns (B, S, H, hdv).
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    hdv = v.shape[-1]
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    S0, T0 = S, T
+    qpad, kpad = (-S) % qb, (-T) % kb
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        S += qpad
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        T += kpad
+    nq, nk = S // qb, T // kb
+
+    qr = q.reshape(B, nq, qb, H, hd).transpose(1, 0, 3, 2, 4)   # (nq,B,H,qb,hd)
+    kr = k.reshape(B, nk, kb, H, hd).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kb, H, hdv).transpose(1, 0, 3, 2, 4)
+
+    # STATIC causal skip: unroll q-blocks in Python, inner scan only over
+    # the j <= i KV blocks — ~2x fewer score blocks, visible to both the
+    # compiler and the roofline analysis (a lax.cond would execute-or-not
+    # dynamically but always count statically).
+    static_skip = (skip_masked_blocks and causal and window is None
+                   and q_offset == 0 and nq <= 64 and S == T)
+
+    def q_step(_, qi_and_i):
+        qi, i = qi_and_i
+        qpos = q_offset + i * qb + jnp.arange(qb)
+
+        def kv_step(carry, kj_vj_j):
+            m_run, l_run, acc = carry
+            kj, vj, j = kj_vj_j
+            kpos = j * kb + jnp.arange(kb)
+
+            def compute(args):
+                m_run, l_run, acc = args
+                # bf16 operands + fp32 accumulation = MXU semantics; explicit
+                # f32 upcasts would materialize f32 copies of Q/K AND make
+                # the backward all-reduces fp32 (2x collective bytes)
+                s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                               preferred_element_type=jnp.float32) * scale
+                if logit_softcap:
+                    s = softcap(s, logit_softcap)
+                allow = _block_mask(qpos, kpos, causal=causal, window=window)
+                allow &= (kpos < T0)[None, :]
+                s = jnp.where(allow[None, None], s, NEG_INF)
+                m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+                alpha = jnp.exp(m_run - m_new)
+                prob = jnp.exp(s - m_new[..., None])
+                l_new = l_run * alpha + jnp.sum(prob, axis=-1)
+                if probs_bf16:  # halve prob-buffer traffic; PV on the MXU
+                    pv = jnp.einsum("bhqk,bhkd->bhqd", prob.astype(vj.dtype),
+                                    vj, preferred_element_type=jnp.float32)
+                else:
+                    pv = jnp.einsum("bhqk,bhkd->bhqd", prob,
+                                    vj.astype(jnp.float32))
+                acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+                return m_new, l_new, acc_new
+
+            if skip_masked_blocks and not static_skip:
+                needed = jnp.array(True)
+                if causal:
+                    needed &= j * kb <= q_offset + (i + 1) * qb - 1
+                if window is not None:
+                    needed &= (j + 1) * kb - 1 >= q_offset + i * qb - window + 1
+                carry = jax.lax.cond(needed, compute, lambda a: a,
+                                     (m_run, l_run, acc))
+            else:
+                carry = compute((m_run, l_run, acc))
+            return carry, None
+
+        m0 = jnp.full((B, H, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qb), jnp.float32)
+        a0 = jnp.zeros((B, H, qb, hdv), jnp.float32)
+        n_vis = (int(qi_and_i[1]) * qb // kb + 1) if static_skip else nk
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr[:n_vis], vr[:n_vis], jnp.arange(n_vis)))
+        out = acc / jnp.maximum(l_f, 1e-37)[..., None]
+        return None, out.astype(q.dtype)
+
+    if static_skip:
+        outs = [q_step(None, (qr[i], i))[1] for i in range(nq)]
+        out = jnp.stack(outs).transpose(1, 0, 3, 2, 4).reshape(B, S, H, hdv)
+    else:
+        _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))
+        out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hdv)
+    return out[:, :S0] if qpad else out
+
+
+# ---------------------------------------------------------------------------
+# One-shot attention (decode / small cross-attention) — flat heads
+# ---------------------------------------------------------------------------
+
+
+def attend_once(q, k, v, *, mask=None, logit_softcap: float = 0.0, scale: float):
+    """q: (B,S,H,hd); k,v: (B,T,H,hd); mask broadcastable to (B,1,S,T)."""
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = softcap(s, logit_softcap)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, positions, *, window=None,
+                     logit_softcap: float = 0.0, scale: float):
+    """Single-token decode: q (B,1,Hq_pad,hd) against a sequence-sharded
+    cache (B,T,G,hd).  positions: (B,) absolute index of the new token
+    (its KV already written).
+
+    GQA via grouped einsum — only the (tiny) q is reshaped; the cache is
+    never expanded/gathered, so its T-on-model sharding flows through:
+    softmax stats and the context contraction psum over the model axis
+    (flash-decoding)."""
+    B, T, G, hd = k_cache.shape
+    hq_pad = q.shape[2]
+    mp = hq_pad // G
+    qg = q.reshape(B, 1, G, mp, hd)
+    kpos = jnp.arange(T)
+    allow = kpos[None, :] <= positions[:, None]                # (B,T)
+    if window is not None:
+        allow &= (positions[:, None] - kpos[None, :]) < window
+    kc = shard_hint(k_cache, "batch", "kv_seq", None, None)
+    vc = shard_hint(v_cache, "batch", "kv_seq", None, None)
+    # keep operands in cache dtype (no fp32 copy of the cache); the MXU
+    # accumulates in fp32 via preferred_element_type
+    s = jnp.einsum("bqgmh,btgh->bgmqt", qg.astype(kc.dtype), kc,
+                   preferred_element_type=jnp.float32) * scale
+    if logit_softcap:
+        s = softcap(s, logit_softcap)
+    s = jnp.where(allow[:, None, None, None, :], s, NEG_INF)
+    s = shard_hint(s, "batch", None, None, None, "kv_seq")
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bgmqt,btgh->bqgmh", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return ctx.reshape(B, 1, hq_pad, hd).astype(q.dtype)

@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) block — chunked state-space-dual formulation.
+
+Training/prefill uses the chunked algorithm (matmul-rich: intra-chunk
+"attention-like" term + sequential inter-chunk state carry), which is also
+the oracle for the Pallas `mamba2_ssd` kernel.  Decode is the O(1)-state
+recurrence.
+
+State per layer: ssm (B, H, hd, N) fp32 + conv ring buffer (B, W-1, convch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, ones_init, rms_norm, shard_hint, zeros_init
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    G, N, W = s.n_groups, s.state_dim, s.conv_dim
+    convch = d_inner + 2 * G * N
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    return d_inner, H, G, N, W, convch, d_in_proj
+
+
+def init_mamba(key, cfg, n_layers: int):
+    d_inner, H, G, N, W, convch, d_in_proj = dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    L = (n_layers,) if n_layers else ()
+    # A in [1, ~16): A_log uniform-ish init (mamba2 default)
+    a0 = jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32))
+    return {
+        "in_proj": dense_init(ks[0], L + (D, d_in_proj), in_axis_size=D),
+        "conv_w": dense_init(ks[1], L + (W, convch), in_axis_size=W),
+        "conv_b": zeros_init(None, L + (convch,)),
+        "A_log": jnp.broadcast_to(a0, L + (H,)).copy(),
+        "dt_bias": zeros_init(None, L + (H,)),
+        "D_skip": ones_init(None, L + (H,)),
+        "norm": ones_init(None, L + (d_inner,)),
+        "out_proj": dense_init(ks[2], L + (d_inner, D), in_axis_size=d_inner),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_inner, H, G, N, *_ = dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xin = zxbcdt[..., d_inner:2 * d_inner]
+    Bc = zxbcdt[..., 2 * d_inner:2 * d_inner + G * N]
+    Cc = zxbcdt[..., 2 * d_inner + G * N:2 * d_inner + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * G * N:]
+    return z, xin, Bc, Cc, dt
+
+
+def _conv(xBC, w, b, conv_state=None):
+    """Causal depthwise conv, window W. xBC: (B,S,C); w: (W,C).
+    conv_state: (B, W-1, C) ring of trailing inputs (decode) or None."""
+    W = w.shape[0]
+    if conv_state is not None:
+        full = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    else:
+        full = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = sum(full[:, i:i + S] * w[i].astype(xBC.dtype) for i in range(W))
+    out = out + b.astype(xBC.dtype)
+    new_state = full[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunk(carry, blk, *, H, G, N, hd):
+    """One chunk of the SSD recurrence. carry: S0 (B,H,hd,N) fp32."""
+    S0 = carry
+    cum, Bh, Ch, xdt = blk          # cum (B,Q,H); Bh/Ch (B,Q,G,N); xdt (B,Q,H,hd)
+    Hg = H // G
+    B_, Q = cum.shape[0], cum.shape[1]
+    # group heads: (B,Q,G,Hg)
+    cum_g = cum.reshape(B_, Q, G, Hg)
+    xdt_g = xdt.reshape(B_, Q, G, Hg, hd)
+    # intra-chunk: Y[i] += sum_{j<=i} exp(cum_i-cum_j) (C_i·B_j) xdt_j
+    # (mask INSIDE the exponent: upper-triangle deltas are positive and
+    # would overflow exp, poisoning gradients via inf*0)
+    scores = jnp.einsum("bign,bjgn->bijg", Ch, Bh)                  # (B,Q,Q,G)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    delta = cum_g[:, :, None] - cum_g[:, None, :, :]                # (B,Q,Q,G,Hg)
+    Ldec = jnp.exp(jnp.where(mask[None, :, :, None, None], delta, -1e9))
+    M = Ldec * scores[..., None]
+    Y = jnp.einsum("bijgh,bjghd->bighd", M, xdt_g)                  # (B,Q,G,Hg,hd)
+    # inter-chunk: Y[i] += exp(cum_i) C_i · S0
+    S0_g = S0.reshape(B_, G, Hg, hd, N)
+    Yin = jnp.einsum("bign,bghdn->bighd", Ch, S0_g) * jnp.exp(cum_g)[..., None]
+    Y = Y + Yin
+    # state update: S1 = exp(cum_Q) S0 + sum_j exp(cum_Q - cum_j) xdt_j B_j
+    dec_end = jnp.exp(cum_g[:, -1:, :, :] - cum_g)                  # (B,Q,G,Hg)
+    Supd = jnp.einsum("bjgh,bjghd,bjgn->bghdn", dec_end, xdt_g, Bh)
+    S1 = S0_g * jnp.exp(cum_g[:, -1])[..., None, None] + Supd
+    return S1.reshape(B_, H, hd, N), Y.reshape(B_, Q, H, hd)
+
+
+def mamba_forward(p, x, cfg, *, initial_state=None, return_state=False):
+    """x: (B,S,D) -> (B,S,D). Chunked SSD over the full sequence."""
+    s = cfg.ssm
+    d_inner, H, G, N, W, convch, _ = dims(cfg)
+    hd = s.head_dim
+    B_, S, D = x.shape
+    Q = min(s.chunk, S)
+    pad = (-S) % Q
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    xBC, _ = _conv(jnp.concatenate([xin, Bc, Cc], -1), p["conv_w"], p["conv_b"])
+    xin, Bc, Cc = (xBC[..., :d_inner], xBC[..., d_inner:d_inner + G * N],
+                   xBC[..., d_inner + G * N:])
+    xin = shard_hint(xin, "batch", None, "model_ff")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (H,)
+    dA = dt * A                                                     # (B,S,H)
+    xdt = (xin.reshape(B_, S, H, hd).astype(jnp.float32)
+           * dt[..., None])                                         # (B,S,H,hd)
+    Bh = Bc.reshape(B_, S, G, N).astype(jnp.float32)
+    Ch = Cc.reshape(B_, S, G, N).astype(jnp.float32)
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = (S + pad) // Q
+    cum = jnp.cumsum(dA.reshape(B_, nC, Q, H), axis=2)
+    blks = (cum.transpose(1, 0, 2, 3),
+            Bh.reshape(B_, nC, Q, G, N).transpose(1, 0, 2, 3, 4),
+            Ch.reshape(B_, nC, Q, G, N).transpose(1, 0, 2, 3, 4),
+            xdt.reshape(B_, nC, Q, H, hd).transpose(1, 0, 2, 3, 4))
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((B_, H, hd, N), jnp.float32))
+    step = lambda c, b: _ssd_chunk(c, b, H=H, G=G, N=N, hd=hd)
+    S_fin, Ys = jax.lax.scan(step, S0, blks)
+    Y = Ys.transpose(1, 0, 2, 3, 4).reshape(B_, S + pad, H, hd)[:, :S]
+    Y = Y + p["D_skip"].astype(jnp.float32)[:, None] * xin.reshape(
+        B_, S, H, hd).astype(jnp.float32)
+    y = Y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    out = shard_hint(out, "batch", None, None)
+    if return_state:
+        return out, S_fin
+    return out
+
+
+def mamba_decode(p, x, cfg, state):
+    """One step. x: (B,1,D); state {"ssm": (B,H,hd,N) f32, "conv": (B,W-1,convch)}."""
+    s = cfg.ssm
+    d_inner, H, G, N, W, convch, _ = dims(cfg)
+    hd = s.head_dim
+    B_ = x.shape[0]
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bc, Cc, dt = _split_proj(zxbcdt, cfg)
+    xBC, conv_new = _conv(jnp.concatenate([xin, Bc, Cc], -1), p["conv_w"],
+                          p["conv_b"], conv_state=state["conv"])
+    xin, Bc, Cc = (xBC[..., :d_inner], xBC[..., d_inner:d_inner + G * N],
+                   xBC[..., d_inner + G * N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0] * A)                                      # (B,H)
+    xh = xin.reshape(B_, H, hd).astype(jnp.float32) * dt[:, 0, :, None]
+    Bh = Bc.reshape(B_, G, N).astype(jnp.float32)
+    Ch = Cc.reshape(B_, G, N).astype(jnp.float32)
+    Hg = H // G
+    S_g = state["ssm"].reshape(B_, G, Hg, hd, N)
+    xh_g = xh.reshape(B_, G, Hg, hd)
+    S_new = (S_g * dA.reshape(B_, G, Hg)[..., None, None]
+             + jnp.einsum("bghd,bgn->bghdn", xh_g, Bh))
+    Y = jnp.einsum("bgn,bghdn->bghd", Ch, S_new)
+    Y = Y + p["D_skip"].astype(jnp.float32).reshape(G, Hg)[None, :, :, None] \
+        * xin.reshape(B_, G, Hg, hd).astype(jnp.float32)
+    y = Y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"ssm": S_new.reshape(B_, H, hd, N), "conv": conv_new}
+
+
+def init_mamba_state(cfg, batch: int, abstract=False, n_layers=None):
+    d_inner, H, G, N, W, convch, _ = dims(cfg)
+    L = (n_layers,) if n_layers else ()
+    mk = jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d))
+    return {"ssm": mk(L + (batch, H, cfg.ssm.head_dim, N), jnp.float32),
+            "conv": mk(L + (batch, W - 1, convch), jnp.float32)}

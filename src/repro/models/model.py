@@ -1,0 +1,70 @@
+"""Uniform model API over all families.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    logits, aux = model.forward(params, batch)                  # train
+    logits, cache, aux = model.forward(params, batch, mode="prefill")
+    logits, cache = model.decode_step(params, tokens, pos, cache)
+    cache = model.init_cache(batch, max_len, abstract=True)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv, transformer, whisper, zamba
+from repro.models.common import Options
+
+
+@dataclass
+class Model:
+    cfg: Any
+    opts: Options
+    _mod: Any
+
+    def init(self, key):
+        return self._mod.init_lm(key, self.cfg)
+
+    def init_abstract(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: self._mod.init_lm(k, self.cfg), key)
+
+    def forward(self, params, batch: dict, mode: str = "train"):
+        kw = {}
+        if self.cfg.mrope and "mrope_positions" in batch:
+            kw["mrope_positions"] = batch["mrope_positions"]
+        if self.cfg.family == "audio":
+            kw["encoder_frames"] = batch["encoder_frames"]
+        return self._mod.forward(params, self.cfg, batch["tokens"],
+                                 opts=self.opts, mode=mode, **kw)
+
+    def decode_step(self, params, tokens, positions, cache):
+        return self._mod.decode_step(params, self.cfg, tokens, positions,
+                                     cache, opts=self.opts)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   abstract: bool = False):
+        if self.cfg.family == "ssm":
+            return self._mod.init_state(self.cfg, batch, abstract=abstract)
+        return self._mod.init_cache(self.cfg, batch, max_len, dtype=dtype,
+                                    abstract=abstract)
+
+    def with_opts(self, **kw) -> "Model":
+        return Model(self.cfg, self.opts.replace(**kw), self._mod)
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "hybrid": zamba,
+    "ssm": rwkv,
+    "audio": whisper,
+}
+
+
+def build_model(cfg, opts: Options = None) -> Model:
+    return Model(cfg, opts or Options(), _FAMILY_MODULES[cfg.family])

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: grouped, capacity-dropped, expert-parallel.
+
+Dispatch uses per-group scatter/gather (no (tokens, E, C) one-hot
+materialization); experts are sharded on the `model` mesh axis (EP), tokens
+on `data` — GSPMD inserts the dispatch/combine collectives.
+
+Shared experts (DeepSeek-V2) and the Arctic dense residual are merged into a
+single wide "shared" gated FFN applied to every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init, shard_hint
+
+
+def shared_width(cfg) -> int:
+    m = cfg.moe
+    w = m.n_shared_experts * m.d_expert
+    if m.dense_residual:
+        w += m.dense_d_ff or cfg.d_ff
+    return w
+
+
+def init_moe(key, cfg, n_layers: int):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_expert
+    ks = jax.random.split(key, 7)
+    L = (n_layers,) if n_layers else ()
+    p = {
+        "router": dense_init(ks[0], L + (D, E), in_axis_size=D),
+        "w1": dense_init(ks[1], L + (E, D, F), in_axis_size=D),
+        "w3": dense_init(ks[2], L + (E, D, F), in_axis_size=D),
+        "w2": dense_init(ks[3], L + (E, F, D), in_axis_size=F),
+    }
+    sw = shared_width(cfg)
+    if sw:
+        p["ws1"] = dense_init(ks[4], L + (D, sw), in_axis_size=D)
+        p["ws3"] = dense_init(ks[5], L + (D, sw), in_axis_size=D)
+        p["ws2"] = dense_init(ks[6], L + (sw, D), in_axis_size=sw)
+    return p
+
+
+def _capacity(g: int, k: int, cf: float, E: int) -> int:
+    c = int(g * k * cf / E)
+    c = max(8, ((c + 7) // 8) * 8)
+    return min(c, g * k)
+
+
+def apply_moe(p, x, cfg, *, group_size: int = 1024):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    g = min(group_size, T)
+    while T % g:
+        g //= 2
+    G = T // g
+    xg = shard_hint(xf.reshape(G, g, D), "moe_groups", None, None)
+
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)                                   # (G,g,k)
+    vals = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=(0, 1))                                     # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2),
+                  axis=(0, 1))                                            # (E,)
+    aux = E * jnp.sum(me * ce) * m.router_aux_loss
+
+    C = _capacity(g, k, m.capacity_factor, E)
+
+    # GShard choice-major slot assignment: all 1st choices, then 2nd, ...
+    idx_km = idx.transpose(0, 2, 1).reshape(G, k * g)                     # (G,k*g)
+    oh = jax.nn.one_hot(idx_km, E, dtype=jnp.int32)                       # (G,k*g,E)
+    slot = jnp.cumsum(oh, axis=1) - oh                                    # pos within expert
+    slot = jnp.sum(slot * oh, axis=-1)                                    # (G,k*g)
+    keep = slot < C
+
+    gate_km = vals.transpose(0, 2, 1).reshape(G, k * g)
+    tok_km = jnp.tile(jnp.arange(g), (k,))                                # (k*g,)
+
+    def dispatch_one(xg1, e1, s1, keep1):
+        upd = xg1[tok_km] * keep1[:, None].astype(xg1.dtype)              # (k*g, D)
+        buf = jnp.zeros((E, C, D), xg1.dtype)
+        return buf.at[e1, jnp.where(keep1, s1, 0)].add(
+            jnp.where(keep1[:, None], upd, 0))
+
+    ein = jax.vmap(dispatch_one)(xg, idx_km, slot, keep)                  # (G,E,C,D)
+    # 2D-weight mode: slice the dispatch on the contraction dim ("moe_ff" ->
+    # data) so the expert matmul is a partial-dot + tiny psum — weights never
+    # move (GSPMD would otherwise all-to-all the expert weights each layer)
+    ein = shard_hint(ein, "moe_groups", "expert", None, "moe_ff")
+
+    act = activation(cfg.act)
+    h = jnp.einsum("gecd,edf->gecf", ein, p["w1"].astype(ein.dtype))
+    h = act(h) * jnp.einsum("gecd,edf->gecf", ein, p["w3"].astype(ein.dtype))
+    h = shard_hint(h, "moe_groups", "expert", None, "moe_ff")
+    eout = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(ein.dtype))
+    eout = shard_hint(eout, "moe_groups", "expert", None, None)
+
+    def combine_one(eo1, e1, s1, keep1, gate1):
+        y = eo1[e1, s1] * (gate1 * keep1)[:, None].astype(eo1.dtype)      # (k*g,D)
+        return jnp.sum(y.reshape(k, g, D), axis=0)
+
+    y = jax.vmap(combine_one)(eout, idx_km, slot, keep,
+                              gate_km.astype(eout.dtype))                 # (G,g,D)
+    y = y.reshape(B, S, D)
+
+    if "ws1" in p:
+        hs = xf.reshape(B, S, D) @ p["ws1"].astype(x.dtype)
+        hs = act(hs) * (xf.reshape(B, S, D) @ p["ws3"].astype(x.dtype))
+        hs = shard_hint(hs, "batch", None, "model_ff")
+        y = y + hs @ p["ws2"].astype(x.dtype)
+
+    return shard_hint(y, "batch", None, None), aux

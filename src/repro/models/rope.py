@@ -1,0 +1,41 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) int -> (sin, cos) of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def mrope_angles(mpositions, sections, head_dim: int, theta: float):
+    """Multimodal RoPE (Qwen2-VL).
+
+    mpositions: (3, B, S) — temporal / height / width position streams.
+    sections:   per-stream rotary half-dims, summing to head_dim//2.
+    Returns (sin, cos) of shape (B, S, head_dim//2).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    stream = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=half)          # (half,)
+    pos = jnp.take(mpositions, stream, axis=0)             # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)     # (B, S, half)
+    ang = pos * inv_freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, hd); sin/cos: (..., S, hd//2) broadcast over heads.
+    Half-split (llama) convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[..., None, :], cos[..., None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,276 @@
+"""RWKV6 (Finch): attention-free LM with data-dependent per-channel decay.
+
+Time-mix uses the chunked WKV formulation: within a chunk the decayed
+products exp(cum_excl[t,d] - cumw[j,d]) are <= 1 for j < t (numerically
+safe), across chunks a (hd_k x hd_v) state is carried per head.  This is
+the oracle for the Pallas `rwkv6_scan` kernel.  Decode is the O(1)
+recurrence.  Norms are LayerNorm (true to RWKV), channel-mix uses squared
+ReLU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (dense_init, embed_init, layer_norm,
+                                 shard_hint, softcap, zeros_init)
+
+
+def dims(cfg):
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def _ln_pair(n_layers, D):
+    L = (n_layers,) if n_layers else ()
+    return {"s": jnp.ones(L + (D,)), "b": jnp.zeros(L + (D,))}
+
+
+def init_time_mix(key, cfg, n_layers: int):
+    D = cfg.d_model
+    H, hd = dims(cfg)
+    tsl, dl = cfg.rwkv.tokenshift_lora, cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 8)
+    L = (n_layers,) if n_layers else ()
+    return {
+        "maa_x": zeros_init(None, L + (D,)),
+        "maa": zeros_init(None, L + (5, D)),                 # w,k,v,r,g bases
+        "maa_w1": dense_init(ks[0], L + (D, 5 * tsl), in_axis_size=D),
+        "maa_w2": dense_init(ks[1], L + (5, tsl, D), in_axis_size=tsl),
+        "w0": (jnp.zeros(L + (D,)) - 6.0),                   # decay base
+        "w1": dense_init(ks[2], L + (D, dl), in_axis_size=D),
+        "w2": dense_init(ks[3], L + (dl, D), in_axis_size=dl),
+        "u": zeros_init(None, L + (H, hd)),                  # bonus
+        "wr": dense_init(ks[4], L + (D, D), in_axis_size=D),
+        "wk": dense_init(ks[5], L + (D, D), in_axis_size=D),
+        "wv": dense_init(ks[6], L + (D, D), in_axis_size=D),
+        "wg": dense_init(ks[7], L + (D, D), in_axis_size=D),
+        "out": dense_init(ks[0], L + (D, D), in_axis_size=D),
+        "ln_x": _ln_pair(n_layers, D),
+    }
+
+
+def init_channel_mix(key, cfg, n_layers: int):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    L = (n_layers,) if n_layers else ()
+    return {
+        "maa_k": zeros_init(None, L + (D,)),
+        "maa_r": zeros_init(None, L + (D,)),
+        "ck": dense_init(ks[0], L + (D, F), in_axis_size=D),
+        "cv": dense_init(ks[1], L + (F, D), in_axis_size=F),
+        "cr": dense_init(ks[2], L + (D, D), in_axis_size=D),
+    }
+
+
+def _shift(x, last=None):
+    """xx[t] = x[t-1]; x (B,S,D); last (B,D) carries across calls."""
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift interpolation -> (x_w, x_k, x_v, x_r, x_g)."""
+    B, S, D = x.shape
+    dxx = xx - x
+    xxx = x + dxx * p["maa_x"].astype(x.dtype)
+    k = jnp.tanh(xxx @ p["maa_w1"].astype(x.dtype))          # (B,S,5*tsl)
+    tsl = k.shape[-1] // 5
+    k = k.reshape(B, S, 5, tsl)
+    off = jnp.einsum("bstl,tld->bstd", k, p["maa_w2"].astype(x.dtype))
+    mix = p["maa"].astype(x.dtype)[None, None] + off         # (B,S,5,D)
+    return tuple(x + dxx * mix[:, :, i] for i in range(5))
+
+
+def _wkv_chunk(S0, blk, *, H, hd):
+    """One chunk. S0: (B,H,hd,hd) fp32 (k-dim x v-dim).
+    blk: cumw (B,Q,H,hd) inclusive log-decay cumsum; r,k,v (B,Q,H,hd); u (H,hd)."""
+    cumw, r, k, v, u = blk
+    B, Q = r.shape[0], r.shape[1]
+    # cum_excl[t] = cumw[t-1] (cumw of previous step; 0 at t=0)
+    cum_excl = jnp.pad(cumw[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))
+    # intra-chunk: A[t,j] = sum_d r[t,d] k[j,d] exp(cum_excl[t,d]-cumw[j,d]), j<t
+    # (mask inside the exponent: j>=t deltas are positive => exp overflow
+    # => NaN gradients through inf*0)
+    diff = cum_excl[:, :, None] - cumw[:, None, :]           # (B,Q,Q,H,hd)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    E = jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -1e9))
+    A = jnp.einsum("bthd,bjhd,btjhd->bthj", r, k, E)         # (B,Q,H,Q)
+    Y = jnp.einsum("bthj,bjhd->bthd", A, v)
+    # bonus diagonal
+    Y = Y + jnp.einsum("bthd,bthd->bth", r, u[None, None] * k)[..., None] * v
+    # inter-chunk from carried state
+    rd = r * jnp.exp(cum_excl)
+    Y = Y + jnp.einsum("bthk,bhkv->bthv", rd, S0)
+    # state update
+    dec_end = jnp.exp(cumw[:, -1:] - cumw)                   # (B,Q,H,hd)
+    S1 = (S0 * jnp.exp(cumw[:, -1])[..., None]
+          + jnp.einsum("bjhk,bjhv->bhkv", k * dec_end, v))
+    return S1, Y
+
+
+def time_mix(p, x, cfg, *, state=None, chunk=None):
+    """x (B,S,D) -> (out, (last_x (B,D), S (B,H,hd,hd)))."""
+    H, hd = dims(cfg)
+    B, S, D = x.shape
+    xx = _shift(x, None if state is None else state[0])
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x, xx)
+    w_log = (p["w0"].astype(jnp.float32)
+             + jnp.tanh(x_w @ p["w1"].astype(x.dtype)).astype(jnp.float32)
+             @ p["w2"].astype(jnp.float32))                  # (B,S,D)
+    logw = -jnp.exp(w_log)                                   # <= 0
+    r = (x_r @ p["wr"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    k = (x_k @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (x_v @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(x_g @ p["wg"].astype(x.dtype))
+    u = p["u"].astype(jnp.float32)
+
+    Q = min(chunk or cfg.rwkv.chunk, S)
+    pad = (-S) % Q
+    logw_h = logw.reshape(B, S, H, hd)
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logw_h = jnp.pad(logw_h, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = (S + pad) // Q
+    resh = lambda a: a.reshape(B, nC, Q, H, hd).transpose(1, 0, 2, 3, 4)
+    cumw = jnp.cumsum(logw_h.reshape(B, nC, Q, H, hd), axis=2).transpose(1, 0, 2, 3, 4)
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state[1])
+    step = lambda c, b: _wkv_chunk(c, b, H=H, hd=hd)
+    us = jnp.broadcast_to(u, (nC,) + u.shape)
+    S_fin, Ys = jax.lax.scan(step, S0, (cumw, resh(r), resh(k), resh(v), us))
+    Y = Ys.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H, hd)[:, :S]
+
+    # per-head group norm, then gate and project
+    y = Y.reshape(B, S, H, hd)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, S, D) * p["ln_x"]["s"] + p["ln_x"]["b"]
+    y = y.astype(x.dtype) * g
+    out = y @ p["out"].astype(x.dtype)
+    return shard_hint(out, "batch", None, None), (x[:, -1], S_fin)
+
+
+def time_mix_decode(p, x, cfg, state):
+    """x (B,1,D); state (last_x (B,D), S (B,H,hd,hd))."""
+    H, hd = dims(cfg)
+    B, _, D = x.shape
+    last_x, S0 = state
+    xx = last_x[:, None].astype(x.dtype)
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x, xx)
+    w_log = (p["w0"].astype(jnp.float32)
+             + jnp.tanh(x_w @ p["w1"].astype(x.dtype)).astype(jnp.float32)
+             @ p["w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log))[:, 0].reshape(B, H, hd)     # (B,H,hd)
+    r = (x_r @ p["wr"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    k = (x_k @ p["wk"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    v = (x_v @ p["wv"].astype(x.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(x_g @ p["wg"].astype(x.dtype))[:, 0]
+    u = p["u"].astype(jnp.float32)
+    # y = r · (S0 + u ⊙ k v^T); S1 = diag(w) S0 + k v^T
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, S0 + u[None, ..., None] * kv)
+    S1 = S0 * w[..., None] + kv
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, D) * p["ln_x"]["s"] + p["ln_x"]["b"]
+    y = (y.astype(x.dtype) * g) @ p["out"].astype(x.dtype)
+    return y[:, None], (x[:, -1], S1)
+
+
+def channel_mix(p, x, cfg, *, state=None):
+    xx = _shift(x, None if state is None else state)
+    dxx = xx - x
+    xk = x + dxx * p["maa_k"].astype(x.dtype)
+    xr = x + dxx * p["maa_r"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["ck"].astype(x.dtype)))
+    h = shard_hint(h, "batch", None, "model_ff")
+    out = jax.nn.sigmoid(xr @ p["cr"].astype(x.dtype)) * (h @ p["cv"].astype(x.dtype))
+    return shard_hint(out, "batch", None, None), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Full RWKV LM
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 5)
+    L = cfg.n_layers
+    return {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+        "ln0": _ln_pair(0, cfg.d_model),
+        "ln1": _ln_pair(L, cfg.d_model),
+        "ln2": _ln_pair(L, cfg.d_model),
+        "tm": init_time_mix(ks[1], cfg, L),
+        "cm": init_channel_mix(ks[2], cfg, L),
+        "ln_out": _ln_pair(0, cfg.d_model),
+        "head": dense_init(ks[3], (cfg.d_model, cfg.padded_vocab),
+                           in_axis_size=cfg.d_model),
+    }
+
+
+def forward(params, cfg, tokens, *, opts=None, mode: str = "train",
+            dtype=jnp.bfloat16, **_):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = shard_hint(x, "batch", None, None)
+    x = layer_norm(x, params["ln0"]["s"], params["ln0"]["b"])
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"]["s"], lp["ln1"]["b"])
+        a, (tm_x, S_fin) = time_mix(lp["tm"], h, cfg)
+        x = x + a
+        h = layer_norm(x, lp["ln2"]["s"], lp["ln2"]["b"])
+        c, cm_x = channel_mix(lp["cm"], h, cfg)
+        x = x + c
+        return x, {"tm_x": tm_x, "S": S_fin, "cm_x": cm_x} if mode == "prefill" else None
+
+    lp = {"ln1": params["ln1"], "ln2": params["ln2"], "tm": params["tm"],
+          "cm": params["cm"]}
+    x, states = jax.lax.scan(body, x, lp)
+    x = layer_norm(x, params["ln_out"]["s"], params["ln_out"]["b"])
+    if mode == "prefill":
+        logits = x[:, -1] @ params["head"].astype(x.dtype)
+        return logits, states, jnp.zeros((), jnp.float32)
+    logits = x @ params["head"].astype(x.dtype)
+    return shard_hint(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def init_state(cfg, batch: int, abstract=False):
+    H, hd = dims(cfg)
+    L = cfg.n_layers
+    mk = jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d))
+    return {"tm_x": mk((L, batch, cfg.d_model), jnp.float32),
+            "S": mk((L, batch, H, hd, hd), jnp.float32),
+            "cm_x": mk((L, batch, cfg.d_model), jnp.float32)}
+
+
+def decode_step(params, cfg, tokens, positions, state, *, opts=None,
+                dtype=jnp.bfloat16):
+    """tokens (B,). RWKV needs no positions (kept for API uniformity)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None].astype(dtype)
+    x = layer_norm(x, params["ln0"]["s"], params["ln0"]["b"])
+
+    def body(x, xs):
+        lp, st = xs
+        h = layer_norm(x, lp["ln1"]["s"], lp["ln1"]["b"])
+        a, (tm_x, S1) = time_mix_decode(lp["tm"], h, cfg, (st["tm_x"], st["S"]))
+        x = x + a
+        h = layer_norm(x, lp["ln2"]["s"], lp["ln2"]["b"])
+        c, cm_x = channel_mix(lp["cm"], h, cfg, state=st["cm_x"])
+        x = x + c
+        return x, {"tm_x": tm_x, "S": S1, "cm_x": cm_x}
+
+    lp = {"ln1": params["ln1"], "ln2": params["ln2"], "tm": params["tm"],
+          "cm": params["cm"]}
+    x, new_state = jax.lax.scan(body, x, (lp, state))
+    x = layer_norm(x, params["ln_out"]["s"], params["ln_out"]["b"])
+    logits = (x @ params["head"].astype(x.dtype))[:, 0]
+    return logits, new_state

@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB: `input_specs()` supplies precomputed frame
+embeddings (B, n_frames, d_model).  Positions are sinusoidal for both sides
+(see configs/whisper_base.py note).  Norms are LayerNorm; MLP is non-gated
+GELU; decoder blocks = causal self-attn + cross-attn + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (Options, dense_init, embed_init, layer_norm,
+                                 shard_hint)
+from repro.models.transformer import apply_ffn, init_ffn
+
+
+def sinusoid(positions, D: int):
+    """(S,) or (B,S) int -> (..., D) sinusoidal embedding (whisper layout)."""
+    half = D // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _ln(n_layers, D):
+    L = (n_layers,) if n_layers else ()
+    return {"s": jnp.ones(L + (D,)), "b": jnp.zeros(L + (D,))}
+
+
+def init_lm(key, cfg):
+    enc = cfg.encoder
+    ks = jax.random.split(key, 8)
+    Le, Ld = enc.n_layers, cfg.n_layers
+    return {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+        "enc": {
+            "ln1": _ln(Le, cfg.d_model),
+            "attn": attn.init_attention(ks[1], cfg, Le),
+            "ln2": _ln(Le, cfg.d_model),
+            "mlp": init_ffn(ks[2], cfg, Le),
+            "ln_post": _ln(0, cfg.d_model),
+        },
+        "dec": {
+            "ln1": _ln(Ld, cfg.d_model),
+            "self_attn": attn.init_attention(ks[3], cfg, Ld),
+            "ln_x": _ln(Ld, cfg.d_model),
+            "cross_attn": attn.init_attention(ks[4], cfg, Ld),
+            "ln2": _ln(Ld, cfg.d_model),
+            "mlp": init_ffn(ks[5], cfg, Ld),
+            "ln_post": _ln(0, cfg.d_model),
+        },
+    }
+
+
+def encode(params, cfg, frames, *, opts: Options):
+    """frames (B,F,D) -> memory (B,F,D)."""
+    ep = params["enc"]
+    x = frames + sinusoid(jnp.arange(frames.shape[1]), cfg.d_model).astype(frames.dtype)
+    x = shard_hint(x, "batch", None, None)
+    scale = cfg.resolved_head_dim ** -0.5
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"]["s"], lp["ln1"]["b"])
+        q, k, v = attn.project_qkv(lp["attn"], h, cfg)
+        hq_pad = q.shape[2]
+        ctx = attn.flash_attention(q, attn.expand_kv(k, hq_pad),
+                                   attn.expand_kv(v, hq_pad), causal=False,
+                                   scale=scale, q_block=opts.q_block,
+                                   kv_block=opts.kv_block)
+        x = x + attn.project_out(lp["attn"], ctx, cfg)
+        h = layer_norm(x, lp["ln2"]["s"], lp["ln2"]["b"])
+        x = x + apply_ffn(lp["mlp"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, {k: ep[k] for k in ("ln1", "attn", "ln2", "mlp")})
+    return layer_norm(x, ep["ln_post"]["s"], ep["ln_post"]["b"])
+
+
+def _cross_kv(lp, memory, cfg):
+    hd = cfg.resolved_head_dim
+    B, F, _ = memory.shape
+    k = (memory @ lp["cross_attn"]["wk"].astype(memory.dtype)).reshape(
+        B, F, cfg.n_kv_heads, hd)
+    v = (memory @ lp["cross_attn"]["wv"].astype(memory.dtype)).reshape(
+        B, F, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def forward(params, cfg, tokens, *, encoder_frames, opts: Options = None,
+            mode: str = "train", dtype=jnp.bfloat16, **_):
+    """tokens (B,S) + encoder_frames (B,F,D) -> logits."""
+    opts = opts or Options()
+    B, S = tokens.shape
+    memory = encode(params, cfg, encoder_frames.astype(dtype), opts=opts)
+    dp = params["dec"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = x + sinusoid(jnp.arange(S), cfg.d_model).astype(dtype)
+    x = shard_hint(x, "batch", None, None)
+    scale = cfg.resolved_head_dim ** -0.5
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"]["s"], lp["ln1"]["b"])
+        q, k, v = attn.project_qkv(lp["self_attn"], h, cfg)
+        hq_pad = q.shape[2]
+        ctx = attn.flash_attention(q, attn.expand_kv(k, hq_pad),
+                                   attn.expand_kv(v, hq_pad), causal=True,
+                                   scale=scale, q_block=opts.q_block,
+                                   kv_block=opts.kv_block,
+                                   skip_masked_blocks=opts.skip_masked_blocks)
+        x = x + attn.project_out(lp["self_attn"], ctx, cfg)
+        h = layer_norm(x, lp["ln_x"]["s"], lp["ln_x"]["b"])
+        hd = cfg.resolved_head_dim
+        hq_pad, _ = attn.head_padding(cfg)
+        qc = (h @ lp["cross_attn"]["wq"].astype(h.dtype)).reshape(
+            B, S, hq_pad, hd)
+        kc, vc = _cross_kv(lp, memory, cfg)
+        ctx = attn.flash_attention(qc, attn.expand_kv(kc, hq_pad),
+                                   attn.expand_kv(vc, hq_pad), causal=False,
+                                   scale=scale, q_block=opts.q_block,
+                                   kv_block=opts.kv_block)
+        x = x + attn.project_out(lp["cross_attn"], ctx, cfg)
+        h = layer_norm(x, lp["ln2"]["s"], lp["ln2"]["b"])
+        x = x + apply_ffn(lp["mlp"], h, cfg)
+        cache_out = (k, v) if mode == "prefill" else None
+        return x, cache_out
+
+    lkeys = ("ln1", "self_attn", "ln_x", "cross_attn", "ln2", "mlp")
+    x, caches = jax.lax.scan(body, x, {k: dp[k] for k in lkeys})
+    x = layer_norm(x, dp["ln_post"]["s"], dp["ln_post"]["b"])
+    if mode == "prefill":
+        logits = (x[:, -1:] @ params["embed"].T.astype(x.dtype))[:, 0]
+        return logits, {"kv": caches, "memory": memory}, jnp.zeros((), jnp.float32)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return shard_hint(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, abstract=False):
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    F = cfg.encoder.n_frames
+    mk = jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d))
+    return {
+        "kv": (mk((L, batch, max_len, cfg.n_kv_heads, hd), dtype),
+               mk((L, batch, max_len, cfg.n_kv_heads, hd), dtype)),
+        "memory": mk((batch, F, cfg.d_model), dtype),
+    }
+
+
+def decode_step(params, cfg, tokens, positions, cache, *, opts: Options = None,
+                dtype=jnp.bfloat16):
+    """One decoder token against self-attn cache + encoder memory."""
+    opts = opts or Options()
+    B = tokens.shape[0]
+    dp = params["dec"]
+    memory = cache["memory"].astype(dtype)
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None].astype(dtype)
+    x = x + sinusoid(positions[:, None], cfg.d_model).astype(dtype)
+    scale = cfg.resolved_head_dim ** -0.5
+
+    def body(x, xs):
+        lp, kv = xs
+        h = layer_norm(x, lp["ln1"]["s"], lp["ln1"]["b"])
+        q, k_new, v_new = attn.project_qkv(lp["self_attn"], h, cfg)
+        k_c, v_c = kv
+        upd = jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))
+        k_c = upd(k_c, k_new.astype(k_c.dtype), positions)
+        v_c = upd(v_c, v_new.astype(v_c.dtype), positions)
+        ctx = attn.decode_attention(q, k_c.astype(q.dtype), v_c.astype(q.dtype),
+                                    positions, scale=scale)
+        x = x + attn.project_out(lp["self_attn"], ctx, cfg)
+        h = layer_norm(x, lp["ln_x"]["s"], lp["ln_x"]["b"])
+        hd = cfg.resolved_head_dim
+        hq_pad, _ = attn.head_padding(cfg)
+        qc = (h @ lp["cross_attn"]["wq"].astype(h.dtype)).reshape(
+            B, 1, hq_pad, hd)
+        kc, vc = _cross_kv(lp, memory, cfg)
+        ctx = attn.attend_once(qc, attn.expand_kv(kc, hq_pad),
+                               attn.expand_kv(vc, hq_pad), scale=scale)
+        x = x + attn.project_out(lp["cross_attn"], ctx, cfg)
+        h = layer_norm(x, lp["ln2"]["s"], lp["ln2"]["b"])
+        x = x + apply_ffn(lp["mlp"], h, cfg)
+        return x, (k_c, v_c)
+
+    lkeys = ("ln1", "self_attn", "ln_x", "cross_attn", "ln2", "mlp")
+    x, kv_new = jax.lax.scan(body, x, ({k: dp[k] for k in lkeys}, cache["kv"]))
+    x = layer_norm(x, dp["ln_post"]["s"], dp["ln_post"]["b"])
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    return logits, {"kv": kv_new, "memory": cache["memory"]}

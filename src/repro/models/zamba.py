@@ -1,0 +1,178 @@
+"""Zamba2-style hybrid: Mamba2 backbone + weight-shared attention blocks.
+
+`cfg.n_layers` Mamba2 layers are grouped; after every `cfg.attn_every`
+Mamba layers, a single weight-SHARED transformer block (attention + FFN,
+operating on concat(hidden, embedding) — 2*d_model in) is applied, followed
+by a per-application (unshared) linear adapter back to d_model, following
+the Zamba2 design.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.common import (Options, dense_init, embed_init, ones_init,
+                                 rms_norm, shard_hint)
+from repro.models.rope import apply_rope, rope_angles
+from repro.models.transformer import apply_ffn, init_ffn
+
+
+def n_groups(cfg) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_lm(key, cfg):
+    ks = jax.random.split(key, 8)
+    G = n_groups(cfg)
+    shared = {
+        "ln1": ones_init(None, (2 * cfg.d_model,)),
+        "attn": attn.init_attention(ks[1], cfg, 0, d_in=2 * cfg.d_model),
+        "ln2": ones_init(None, (cfg.d_model,)),
+        "mlp": init_ffn(ks[2], cfg, 0),
+    }
+    return {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+        "mamba_ln": ones_init(None, (cfg.n_layers, cfg.d_model)),
+        "mamba": mamba2.init_mamba(ks[3], cfg, cfg.n_layers),
+        "shared": shared,
+        "adapters": dense_init(ks[4], (G, cfg.d_model, cfg.d_model),
+                               in_axis_size=cfg.d_model),
+        "final_norm": ones_init(None, (cfg.d_model,)),
+        "head": dense_init(ks[5], (cfg.d_model, cfg.padded_vocab),
+                           in_axis_size=cfg.d_model),
+    }
+
+
+def _shared_block(params, cfg, x, x0, sin, cos, adapter, *, opts,
+                  mode: str = "train", cache=None, positions=None):
+    """Shared attention block on concat(x, x0); adapter projects back."""
+    sp = params["shared"]
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(h, sp["ln1"], cfg.norm_eps)
+    cache_out = None
+    if mode == "decode":
+        q, k_new, v_new = attn.project_qkv(sp["attn"], h, cfg)
+        q = apply_rope(q, sin, cos)
+        k_new = apply_rope(k_new, sin, cos)
+        k_c, v_c = cache
+        upd = jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, 0))
+        k_c = upd(k_c, k_new.astype(k_c.dtype), positions)
+        v_c = upd(v_c, v_new.astype(v_c.dtype), positions)
+        ctx = attn.decode_attention(q, k_c.astype(q.dtype), v_c.astype(q.dtype),
+                                    positions, scale=cfg.resolved_head_dim ** -0.5)
+        cache_out = (k_c, v_c)
+    else:
+        q, k, v = attn.project_qkv(sp["attn"], h, cfg)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        hq_pad = q.shape[2]
+        ctx = attn.flash_attention(q, attn.expand_kv(k, hq_pad),
+                                   attn.expand_kv(v, hq_pad), causal=True,
+                                   scale=cfg.resolved_head_dim ** -0.5,
+                                   q_block=opts.q_block, kv_block=opts.kv_block,
+                                   skip_masked_blocks=opts.skip_masked_blocks,
+                                   probs_bf16=opts.probs_bf16)
+        if mode == "prefill":
+            cache_out = (k, v)
+    a = attn.project_out(sp["attn"], ctx, cfg)
+    a = a + apply_ffn(sp["mlp"], rms_norm(a, sp["ln2"], cfg.norm_eps), cfg)
+    return x + a @ adapter.astype(x.dtype), cache_out
+
+
+def forward(params, cfg, tokens, *, opts: Options = None, mode: str = "train",
+            dtype=jnp.bfloat16, **_):
+    opts = opts or Options()
+    B, S = tokens.shape
+    G, E = n_groups(cfg), cfg.attn_every
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = shard_hint(x, "batch", None, None)
+    x0 = x
+    sin, cos = rope_angles(jnp.arange(S), cfg.resolved_head_dim, cfg.rope_theta)
+
+    # reshape stacked mamba params to (G, E, ...)
+    mam = jax.tree_util.tree_map(
+        lambda a: a.reshape((G, E) + a.shape[1:]), params["mamba"])
+    mam_ln = params["mamba_ln"].reshape(G, E, -1)
+
+    def group(x, xs):
+        mam_g, ln_g, adapter = xs
+
+        def mamba_layer(x, lxs):
+            mp, ln = lxs
+            h = rms_norm(x, ln, cfg.norm_eps)
+            return x + mamba2.mamba_forward(mp, h, cfg), None
+
+        x, _ = jax.lax.scan(mamba_layer, x, (mam_g, ln_g))
+        x, cache_out = _shared_block(params, cfg, x, x0, sin, cos, adapter,
+                                     opts=opts, mode=mode)
+        return x, cache_out
+
+    x, caches = jax.lax.scan(group, x, (mam, mam_ln, params["adapters"]))
+    if mode == "prefill":
+        x_last = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = (x_last @ params["head"].astype(x.dtype))[:, 0]
+        # NOTE: prefill here returns only attention caches; mamba states are
+        # returned by serve-level prefill via forward_with_states.
+        return logits, caches, jnp.zeros((), jnp.float32)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"].astype(x.dtype)
+    return shard_hint(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, abstract=False):
+    """Attention KV caches (per shared-block application) + mamba states."""
+    G = n_groups(cfg)
+    hd = cfg.resolved_head_dim
+    mk = jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d))
+    return {
+        "kv": (mk((G, batch, max_len, cfg.n_kv_heads, hd), dtype),
+               mk((G, batch, max_len, cfg.n_kv_heads, hd), dtype)),
+        "mamba": mamba2.init_mamba_state(cfg, batch, abstract=abstract,
+                                         n_layers=cfg.n_layers),
+    }
+
+
+def decode_step(params, cfg, tokens, positions, cache, *, opts: Options = None,
+                dtype=jnp.bfloat16):
+    opts = opts or Options()
+    B = tokens.shape[0]
+    G, E = n_groups(cfg), cfg.attn_every
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None].astype(dtype)
+    x0 = x
+    sin, cos = rope_angles(positions[:, None], cfg.resolved_head_dim,
+                           cfg.rope_theta)
+    mam = jax.tree_util.tree_map(
+        lambda a: a.reshape((G, E) + a.shape[1:]), params["mamba"])
+    mam_ln = params["mamba_ln"].reshape(G, E, -1)
+    mstate = jax.tree_util.tree_map(
+        lambda a: a.reshape((G, E) + a.shape[1:]), cache["mamba"])
+
+    def group(x, xs):
+        mam_g, ln_g, adapter, kv_g, mst_g = xs
+
+        def mamba_layer(x, lxs):
+            mp, ln, st = lxs
+            h = rms_norm(x, ln, cfg.norm_eps)
+            o, st1 = mamba2.mamba_decode(mp, h, cfg, st)
+            return x + o, st1
+
+        x, mst1 = jax.lax.scan(mamba_layer, x, (mam_g, ln_g, mst_g))
+        x, kv1 = _shared_block(params, cfg, x, x0, sin, cos, adapter,
+                               opts=opts, mode="decode", cache=kv_g,
+                               positions=positions)
+        return x, (kv1, mst1)
+
+    x, (kv_new, mst_new) = jax.lax.scan(
+        group, x, (mam, mam_ln, params["adapters"], cache["kv"], mstate))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(x.dtype))[:, 0]
+    new_cache = {
+        "kv": kv_new,
+        "mamba": jax.tree_util.tree_map(
+            lambda a: a.reshape((G * E,) + a.shape[2:]), mst_new),
+    }
+    return logits, new_cache

@@ -1,0 +1,85 @@
+"""AdamW from scratch (no optax): global-norm clipping, decoupled weight
+decay, warmup+cosine schedule, optional reduced-precision moments
+(quantized-optimizer memory trick for the 480B-on-one-pod case)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    count: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init_opt(params, rc) -> OptState:
+    dt = jnp.dtype(rc.adam_state_dtype)
+    zeros = lambda x: jnp.zeros(x.shape, dt)
+    return OptState(count=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def abstract_opt(abstract_params, rc) -> OptState:
+    dt = jnp.dtype(rc.adam_state_dtype)
+    z = lambda x: jax.ShapeDtypeStruct(x.shape, dt)
+    return OptState(count=jax.ShapeDtypeStruct((), jnp.int32),
+                    m=jax.tree_util.tree_map(z, abstract_params),
+                    v=jax.tree_util.tree_map(z, abstract_params))
+
+
+def lr_schedule(step, rc):
+    step = step.astype(jnp.float32)
+    warm = rc.lr * (step + 1.0) / max(rc.warmup_steps, 1)
+    t = jnp.clip((step - rc.warmup_steps)
+                 / max(rc.total_steps - rc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * rc.lr * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < rc.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), grads), g
+
+
+def adamw_update(grads, state: OptState, params, rc):
+    """Returns (new_params, new_state, metrics)."""
+    if rc.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, rc.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    lr = lr_schedule(state.count, rc)
+    b1, b2, eps, wd = rc.beta1, rc.beta2, rc.eps, rc.weight_decay
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        step = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + wd * pf)
+        return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    p_l, treedef = jax.tree_util.tree_flatten(params)
+    g_l = treedef.flatten_up_to(grads)
+    m_l = treedef.flatten_up_to(state.m)
+    v_l = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(p_l, g_l, m_l, v_l)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(count, new_m, new_v), metrics

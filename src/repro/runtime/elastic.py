@@ -1,0 +1,94 @@
+"""Elastic worker pool: dwork as the framework's fault-tolerance layer.
+
+Training work-shards / inference request batches are dwork tasks; workers
+Steal/Complete; a dead worker's Exit (or lease expiry — straggler
+mitigation) recycles its tasks.  On membership change the pool invokes a
+`remesh` callback so the runtime can re-lower the step for the new device
+count (elastic scaling) and resume from the latest checkpoint.
+
+METG-aware batching (paper §5, automated): steal_n is sized so per-steal
+work stays above the dwork METG for the current worker count.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.core.dwork import Client, InProcTransport, TaskServer
+from repro.core.dwork.api import ExitResp, NotFound, TaskMsg
+from repro.core.metg import METGModel, pick_batch_size
+
+
+class ElasticPool:
+    def __init__(self, *, lease_timeout: float = 30.0,
+                 remesh: Optional[Callable[[int], None]] = None,
+                 per_task_s: float = 1.0):
+        self.server = TaskServer(lease_timeout=lease_timeout)
+        self.remesh = remesh
+        self.per_task_s = per_task_s
+        self.metg = METGModel.from_paper()
+        self.workers: dict[str, threading.Thread] = {}
+        self._lock = threading.Lock()
+        self.completed: list = []
+
+    # ------------------------------------------------------------------
+    def submit(self, name: str, deps=(), meta=None):
+        Client(InProcTransport(self.server), "driver").create(
+            name, deps=deps, meta=meta)
+
+    def steal_n_for(self, n_workers: int) -> int:
+        return pick_batch_size("dwork", max(n_workers, 1), self.per_task_s,
+                               model=self.metg)
+
+    def start_worker(self, worker_id: str,
+                     execute: Callable[[str, dict], bool], *,
+                     fail_after: Optional[int] = None):
+        """fail_after: simulate a node crash after N tasks (tests/drills)."""
+        cl = Client(InProcTransport(self.server), worker_id)
+
+        def loop():
+            done = 0
+            steal_n = self.steal_n_for(len(self.workers))
+            while True:
+                resp = cl.steal(n=steal_n)
+                if isinstance(resp, ExitResp):
+                    return
+                if isinstance(resp, NotFound):
+                    time.sleep(0.001)
+                    if self.server._all_done():
+                        return
+                    continue
+                assert isinstance(resp, TaskMsg)
+                for name, meta in resp.tasks:
+                    if fail_after is not None and done >= fail_after:
+                        cl.exit()        # crash: hand tasks back
+                        return
+                    ok = execute(name, meta)
+                    cl.complete(name, ok=ok)
+                    with self._lock:
+                        self.completed.append((worker_id, name))
+                    done += 1
+
+        th = threading.Thread(target=loop, daemon=True)
+        with self._lock:
+            self.workers[worker_id] = th
+        if self.remesh:
+            self.remesh(len(self.workers))
+        th.start()
+        return th
+
+    def lose_worker(self, worker_id: str):
+        """Driver-side failure detection (paper: Exit may be called by the
+        user to recover from a node failure)."""
+        Client(InProcTransport(self.server), worker_id).exit()
+        with self._lock:
+            self.workers.pop(worker_id, None)
+        if self.remesh:
+            self.remesh(len(self.workers))
+
+    def join(self, timeout: float = 60.0):
+        t0 = time.time()
+        for th in list(self.workers.values()):
+            th.join(max(0.0, timeout - (time.time() - t0)))
+        return self.server.stats()

@@ -1,0 +1,73 @@
+"""Sharded train step: loss -> grads (optionally microbatched) -> AdamW.
+
+Under pjit, the gradient all-reduce over (pod, data) is implicit in the
+sharding propagation; microbatching turns it into per-microbatch psums that
+XLA can overlap with the next microbatch's compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import softmax_xent
+from repro.optim.adamw import OptState, adamw_update, init_opt
+
+
+def make_loss_fn(model):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        loss = softmax_xent(logits, batch["labels"], cfg.vocab_size)
+        return loss + aux, {"xent": loss, "moe_aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model, rc):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    loss_fn = make_loss_fn(model)
+    n_mb = rc.microbatches
+    acc_dtype = jnp.bfloat16 if rc.grad_compress == "bf16" else jnp.float32
+
+    def train_step(params, opt_state: OptState, batch):
+        if n_mb == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            def split_b(x, axis=0):
+                b = x.shape[axis]
+                new = x.shape[:axis] + (n_mb, b // n_mb) + x.shape[axis + 1:]
+                return jnp.moveaxis(x.reshape(new), axis, 0)
+
+            # mrope_positions carries batch on axis 1 ((3, B, S))
+            mbs = {k: split_b(v, 1 if k == "mrope_positions" else 0)
+                   for k, v in batch.items()}
+
+            def mb_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(acc_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, acc_dtype), params)
+            (grads, loss), _ = jax.lax.scan(mb_step, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, grads)
+            loss = loss / n_mb
+            aux = {"xent": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state,
+                                                      params, rc)
+        metrics = {"loss": loss, **aux, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, rc, key):
+    params = model.init(key)
+    return params, init_opt(params, rc)

@@ -1,0 +1,23 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real single CPU device; only launch/dryrun.py forces 512."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_batch(cfg, B=2, S=64, key=None):
+    key = key if key is not None else jax.random.PRNGKey(7)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.mrope:
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S))
+    if cfg.family == "audio":
+        batch["encoder_frames"] = jax.random.normal(
+            key, (B, cfg.encoder.n_frames, cfg.d_model)).astype(jnp.bfloat16)
+    return batch

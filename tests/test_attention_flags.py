@@ -1,0 +1,119 @@
+"""Perf-lever correctness: every §Perf optimization flag must be exact (or
+within bf16 tolerance) vs the plain path."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import (decode_attention, expand_kv,
+                                    flash_attention, head_mask, head_padding)
+from repro.models.mla import init_mla, mla_decode, mla_forward
+from repro.models.rope import rope_angles
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B=2, S=256, H=4, hd=64, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (B, S, H, hd), dtype),
+            jax.random.normal(ks[1], (B, S, H, hd), dtype),
+            jax.random.normal(ks[2], (B, S, H, hd), dtype))
+
+
+def test_static_skip_exact():
+    q, k, v = _qkv()
+    a = flash_attention(q, k, v, causal=True, scale=0.125, q_block=64,
+                        kv_block=64)
+    b = flash_attention(q, k, v, causal=True, scale=0.125, q_block=64,
+                        kv_block=64, skip_masked_blocks=True)
+    assert float(jnp.max(jnp.abs(a - b))) == 0.0
+
+
+def test_cond_skip_with_window():
+    q, k, v = _qkv()
+    a = flash_attention(q, k, v, causal=True, window=96, scale=0.125,
+                        q_block=64, kv_block=64)
+    b = flash_attention(q, k, v, causal=True, window=96, scale=0.125,
+                        q_block=64, kv_block=64, skip_masked_blocks=True)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-6
+
+
+def test_probs_bf16_close():
+    q, k, v = _qkv(dtype=jnp.bfloat16)
+    a = flash_attention(q, k, v, causal=True, scale=0.125, q_block=64,
+                        kv_block=64)
+    b = flash_attention(q, k, v, causal=True, scale=0.125, q_block=64,
+                        kv_block=64, probs_bf16=True)
+    err = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                - b.astype(jnp.float32))))
+    assert err < 0.05, err
+
+
+def test_head_padding_math():
+    cfg = get_config("qwen2.5-32b")
+    hq_pad, m_pad = head_padding(cfg)
+    assert hq_pad % 16 == 0 and hq_pad == cfg.n_kv_heads * m_pad
+    assert hq_pad >= cfg.n_heads
+    mask = head_mask(cfg)
+    assert int(mask.sum()) == cfg.n_heads
+    for name in ("deepseek-67b", "gemma2-2b", "whisper-base", "qwen2-vl-2b",
+                 "arctic-480b", "deepseek-7b", "zamba2-2.7b"):
+        c = get_config(name)
+        hp, mp = head_padding(c)
+        assert hp % 16 == 0 and hp == c.n_kv_heads * mp and hp >= c.n_heads
+
+
+def test_expand_kv_group_major():
+    k = jnp.arange(2 * 3 * 4 * 2, dtype=jnp.float32).reshape(2, 3, 4, 2)
+    e = expand_kv(k, 8)                      # M_pad = 2
+    assert e.shape == (2, 3, 8, 2)
+    assert bool(jnp.all(e[:, :, 0] == e[:, :, 1]))   # same group
+    assert bool(jnp.all(e[:, :, 0] == k[:, :, 0]))
+
+
+def test_decode_grouped_einsum_vs_expanded_ref():
+    """decode_attention (grouped, cache never expanded) == expanded one-shot."""
+    from repro.models.attention import attend_once
+    B, T, G, hd, Hq = 2, 64, 2, 32, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, hd))
+    kc = jax.random.normal(ks[1], (B, T, G, hd))
+    vc = jax.random.normal(ks[2], (B, T, G, hd))
+    pos = jnp.asarray([T - 1, T // 2])
+    out = decode_attention(q, kc, vc, pos, scale=hd ** -0.5)
+    allow = jnp.arange(T)[None, :] <= pos[:, None]
+    ref = attend_once(q, expand_kv(kc, Hq), expand_kv(vc, Hq),
+                      mask=allow[:, None, None, :], scale=hd ** -0.5)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_mla_absorb_equivalence():
+    """Absorbed MLA decode (the §Perf serving path) == naive decompression."""
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    p = init_mla(KEY, cfg, 0)
+    B, T = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.d_model),
+                          jnp.float32)
+    m = cfg.mla
+    cache = (jax.random.normal(jax.random.PRNGKey(4), (B, T, m.kv_lora_rank)),
+             jax.random.normal(jax.random.PRNGKey(5),
+                               (B, T, m.qk_rope_head_dim)))
+    pos = jnp.asarray([10, 20])
+    sin, cos = rope_angles(pos[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    o1, c1 = mla_decode(p, x, cfg, sin, cos, cache, pos, absorb=False)
+    o2, c2 = mla_decode(p, x, cfg, sin, cos, cache, pos, absorb=True)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-3
+    for a, b in zip(c1, c2):
+        assert float(jnp.max(jnp.abs(a - b))) == 0.0
+
+
+def test_grad_cast_guards_cotangent_dtype():
+    from repro.models.common import grad_cast
+
+    def f(x):
+        y = grad_cast(x)                      # x bf16
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    x = jnp.ones((4,), jnp.bfloat16)
+    g = jax.grad(f)(x)
+    assert g.dtype == jnp.bfloat16

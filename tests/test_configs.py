@@ -1,0 +1,93 @@
+import jax
+import pytest
+
+from repro.configs import (ARCH_IDS, REGISTRY, SHAPES, applicable_shapes,
+                           get_config, input_specs)
+
+ASSIGNED = {
+    "qwen2.5-32b": dict(n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+                        d_ff=27648, vocab_size=152064),
+    "deepseek-67b": dict(n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8,
+                         d_ff=22016, vocab_size=102400),
+    "gemma2-2b": dict(n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4,
+                      d_ff=9216, vocab_size=256000),
+    "deepseek-7b": dict(n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32,
+                        d_ff=11008, vocab_size=102400),
+    "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+                        d_ff=10240, vocab_size=32000),
+    "whisper-base": dict(n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+                         d_ff=2048, vocab_size=51865),
+    "qwen2-vl-2b": dict(n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+                        d_ff=8960, vocab_size=151936),
+    "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168,
+                       vocab_size=65536),
+    "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16,
+                                 d_ff=1408, vocab_size=102400),
+    "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                        d_ff=4864, vocab_size=32000),
+}
+
+
+def test_all_archs_registered():
+    assert set(ARCH_IDS) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("name", list(ASSIGNED))
+def test_exact_assigned_numbers(name):
+    cfg = get_config(name)
+    for field, value in ASSIGNED[name].items():
+        assert getattr(cfg, field) == value, (name, field)
+
+
+def test_family_specifics():
+    assert get_config("qwen2.5-32b").qkv_bias
+    g = get_config("gemma2-2b")
+    assert g.attn_logit_softcap == 50.0 and g.final_logit_softcap == 30.0
+    assert g.sliding_window == 4096 and g.local_global_every == 2
+    z = get_config("zamba2-2.7b")
+    assert z.ssm.state_dim == 64 and z.attn_every == 6
+    m = get_config("deepseek-v2-lite-16b")
+    assert m.mla.kv_lora_rank == 512 and m.moe.top_k == 6
+    assert m.moe.n_shared_experts == 2
+    a = get_config("arctic-480b")
+    assert a.moe.n_experts == 128 and a.moe.top_k == 2 and a.moe.dense_residual
+    assert get_config("qwen2-vl-2b").mrope
+    assert get_config("rwkv6-1.6b").rwkv is not None
+    assert get_config("whisper-base").encoder.n_frames == 1500
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long_500k_applicability():
+    runs = {n for n in ARCH_IDS
+            if applicable_shapes(get_config(n))["long_500k"] == "run"}
+    assert runs == {"zamba2-2.7b", "rwkv6-1.6b"}
+
+
+@pytest.mark.parametrize("name", list(ASSIGNED))
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_are_abstract(name, shape):
+    cfg = get_config(name)
+    specs = input_specs(cfg, SHAPES[shape])
+    assert all(isinstance(v, jax.ShapeDtypeStruct) for v in specs.values())
+    if SHAPES[shape].mode == "decode":
+        assert specs["tokens"].shape == (SHAPES[shape].global_batch,)
+    else:
+        assert specs["tokens"].shape == (SHAPES[shape].global_batch,
+                                         SHAPES[shape].seq_len)
+
+
+@pytest.mark.parametrize("name", list(ASSIGNED))
+def test_reduced_is_small_same_family(name):
+    cfg = get_config(name)
+    r = cfg.reduced()
+    assert r.family == cfg.family
+    assert r.d_model <= 256 and r.vocab_size <= 1024
+    assert (r.moe is None) == (cfg.moe is None)
+    assert (r.mla is None) == (cfg.mla is None)

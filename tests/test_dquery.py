@@ -1,0 +1,27 @@
+"""dquery CLI round-trip over a live TCP dhub."""
+import threading
+
+from repro.core.dwork.client import TCPServer
+from repro.core.dwork.server import TaskServer
+from repro.core.dwork import dquery
+
+
+def test_dquery_roundtrip(capsys):
+    srv = TaskServer()
+    tcp = TCPServer(("127.0.0.1", 0), srv)
+    tcp.serve_background()
+    host, port = tcp.server_address
+    base = ["--host", host, "--port", str(port)]
+    assert dquery.main(base + ["create", "a"]) == 0
+    assert dquery.main(base + ["create", "b", "-d", "a"]) == 0
+    assert dquery.main(base + ["steal"]) == 0
+    out = capsys.readouterr().out
+    assert out.strip().splitlines()[-1] == "a"
+    assert dquery.main(base + ["complete", "a"]) == 0
+    assert dquery.main(base + ["steal"]) == 0
+    assert capsys.readouterr().out.strip().splitlines()[-1] == "b"
+    assert dquery.main(base + ["complete", "b"]) == 0
+    assert dquery.main(base + ["stats"]) == 0
+    assert '"completed": 2' in capsys.readouterr().out
+    assert dquery.main(base + ["steal"]) == 4          # EXIT: all done
+    tcp.shutdown()

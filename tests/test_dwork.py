@@ -1,0 +1,194 @@
+"""dwork semantics + property tests: dependency safety, exactly-once,
+failure poisoning, crash recovery, deque order, persistence (paper §2.2)."""
+import tempfile
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dwork import Client, InProcTransport, TaskServer
+from repro.core.dwork.api import ExitResp, NotFound, TaskMsg
+
+
+def mkclient(srv=None, worker="w0"):
+    srv = srv or TaskServer()
+    return srv, Client(InProcTransport(srv), worker)
+
+
+def drain(cl, execute=lambda n, m: True, steal_n=1):
+    order = []
+    while True:
+        r = cl.steal(n=steal_n)
+        if isinstance(r, ExitResp):
+            return order
+        if isinstance(r, NotFound):
+            return order
+        for name, meta in r.tasks:
+            order.append(name)
+            cl.complete(name, ok=execute(name, meta))
+
+
+# ---------------------------------------------------------------- unit
+
+
+def test_fifo_order_without_deps():
+    srv, cl = mkclient()
+    for i in range(5):
+        cl.create(f"t{i}")
+    assert drain(cl) == [f"t{i}" for i in range(5)]
+
+
+def test_transfer_goes_to_front():
+    srv, cl = mkclient()
+    cl.create("a")
+    cl.create("b")
+    r = cl.steal()
+    assert r.tasks[0][0] == "a"
+    cl.transfer("a", new_deps=[])          # re-insert at the FRONT
+    assert cl.steal().tasks[0][0] == "a"
+
+
+def test_transfer_with_new_deps():
+    srv, cl = mkclient()
+    cl.create("a")
+    assert cl.steal().tasks[0][0] == "a"
+    cl.transfer("a", new_deps=["pre"])     # forward-declares "pre"
+    r = cl.steal()
+    assert r.tasks[0][0] == "pre"
+    cl.complete("pre")
+    assert cl.steal().tasks[0][0] == "a"
+
+
+def test_failure_poisons_transitive_successors():
+    srv, cl = mkclient()
+    cl.create("a")
+    cl.create("b", deps=["a"])
+    cl.create("c", deps=["b"])
+    cl.create("x")
+    cl.steal()
+    cl.complete("a", ok=False)
+    assert drain(cl) == ["x"]
+    assert srv.errors == {"a", "b", "c"}
+
+
+def test_transfer_cycle_deadlocks_not_crashes():
+    """Paper: a Transfer adding a dependency on one's own successor is a
+    user-error that deadlocks (never ready) — the server must not crash."""
+    srv, cl = mkclient()
+    cl.create("a")
+    cl.create("b", deps=["a"])
+    assert cl.steal().tasks[0][0] == "a"
+    cl.transfer("a", new_deps=["b"])       # cycle a->b->a
+    assert isinstance(cl.steal(), NotFound)
+    assert not srv._all_done()
+
+
+def test_steal_n_batching():
+    srv, cl = mkclient()
+    for i in range(10):
+        cl.create(f"t{i}")
+    r = cl.steal(n=4)
+    assert len(r.tasks) == 4
+
+
+def test_lease_timeout_requeues_stragglers():
+    srv = TaskServer(lease_timeout=0.0)    # immediate expiry
+    cl = Client(InProcTransport(srv), "slow")
+    cl.create("a")
+    assert cl.steal().tasks[0][0] == "a"
+    cl2 = Client(InProcTransport(srv), "fast")
+    r = cl2.steal()                        # straggler's task re-stolen
+    assert isinstance(r, TaskMsg) and r.tasks[0][0] == "a"
+
+
+def test_persistence_reconstructs_ready():
+    srv, cl = mkclient()
+    cl.create("a")
+    cl.create("b", deps=["a"])
+    cl.steal()
+    cl.complete("a")
+    path = tempfile.mktemp()
+    srv.save(path)
+    srv2 = TaskServer.load(path)
+    cl2 = Client(InProcTransport(srv2), "w1")
+    assert cl2.steal().tasks[0][0] == "b"
+    cl2.complete("b")
+    assert isinstance(cl2.steal(), ExitResp)
+
+
+# ------------------------------------------------------------ property
+
+dag_strategy = st.lists(
+    st.tuples(st.integers(0, 19), st.lists(st.integers(0, 19), max_size=3)),
+    min_size=1, max_size=20)
+
+
+@given(dag_strategy)
+@settings(max_examples=60, deadline=None)
+def test_deps_always_served_first(edges):
+    """Fundamental safety: no task is ever served before all its (earlier-
+    indexed => acyclic) dependencies completed."""
+    srv, cl = mkclient()
+    names = []
+    for i, (node, deps) in enumerate(edges):
+        name = f"n{i}"
+        dep_names = [f"n{d}" for d in deps if d < i]
+        cl.create(name, deps=dep_names)
+        names.append((name, set(dep_names)))
+    completed = set()
+    order = []
+    while True:
+        r = cl.steal()
+        if not isinstance(r, TaskMsg):
+            break
+        for name, _ in r.tasks:
+            dep = dict(names).get(name, set())
+            assert dep <= completed, (name, dep, completed)
+            cl.complete(name)
+            completed.add(name)
+            order.append(name)
+    assert len(order) == len({n for n, _ in names})
+
+
+@given(dag_strategy, st.integers(1, 4), st.integers(0, 10))
+@settings(max_examples=40, deadline=None)
+def test_exactly_once_under_crashes(edges, n_workers, crash_after):
+    """Tasks complete exactly once even when a worker crashes mid-run and
+    its assignment is recycled."""
+    srv = TaskServer()
+    clients = [Client(InProcTransport(srv), f"w{i}") for i in range(n_workers)]
+    for i, (node, deps) in enumerate(edges):
+        clients[0].create(f"n{i}", deps=[f"n{d}" for d in deps if d < i])
+    done = []
+    crashed = False
+    rounds = 0
+    while rounds < 1000:
+        rounds += 1
+        progress = False
+        for w, cl in enumerate(clients):
+            r = cl.steal()
+            if isinstance(r, TaskMsg):
+                progress = True
+                for name, _ in r.tasks:
+                    if not crashed and w == 0 and len(done) >= crash_after:
+                        cl.exit()          # crash before completing
+                        crashed = True
+                        break
+                    cl.complete(name)
+                    done.append(name)
+        if not progress and srv._all_done():
+            break
+    n_tasks = len({f"n{i}" for i in range(len(edges))})
+    assert sorted(set(done)) == sorted(done), "task completed twice"
+    assert len(done) == n_tasks
+
+
+@given(st.integers(1, 30), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_counts_conserved(n_tasks, steal_n):
+    srv, cl = mkclient()
+    for i in range(n_tasks):
+        cl.create(f"t{i}")
+    order = drain(cl, steal_n=steal_n)
+    st_ = srv.stats()
+    assert st_["completed"] == n_tasks == len(order)
+    assert st_["ready"] == 0 and st_["assigned"] == 0

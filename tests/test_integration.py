@@ -1,0 +1,101 @@
+"""Integration tests: training loss decreases, microbatch equivalence,
+elastic pool crash recovery, data pipeline determinism, serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_config
+from repro.data.pipeline import Pipeline
+from repro.models.common import Options
+from repro.models.model import build_model
+from repro.optim.adamw import init_opt
+from repro.runtime.elastic import ElasticPool
+from repro.runtime.train_step import make_train_step
+
+
+def test_training_loss_decreases():
+    cfg = get_config("deepseek-7b").reduced()
+    model = build_model(cfg, Options(q_block=32, kv_block=32))
+    rc = RunConfig(lr=1e-3, total_steps=15, warmup_steps=2)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_opt(params, rc)
+    pipe = Pipeline(cfg.vocab_size, 64, 4, seed=0)
+    step = jax.jit(make_train_step(model, rc), donate_argnums=(0, 1))
+    losses = []
+    for batch in pipe.batches(15):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step(params, opt, jb)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_microbatch_grad_equivalence():
+    """mb=1 and mb=2 produce (nearly) the same update."""
+    cfg = get_config("deepseek-7b").reduced()
+    model = build_model(cfg, Options(q_block=32, kv_block=32))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64),
+                                          0, cfg.vocab_size)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, 1)
+    outs = {}
+    for mb in (1, 2):
+        rc = RunConfig(microbatches=mb, total_steps=10, warmup_steps=0)
+        opt = init_opt(params, rc)
+        p2, _, m = jax.jit(make_train_step(model, rc))(params, opt, batch)
+        outs[mb] = (p2, float(m["loss"]))
+    l1 = jax.tree_util.tree_leaves(outs[1][0])
+    l2 = jax.tree_util.tree_leaves(outs[2][0])
+    max_d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(l1, l2))
+    assert max_d < 5e-2, max_d
+    assert abs(outs[1][1] - outs[2][1]) < 0.1
+
+
+def test_pipeline_deterministic():
+    p1 = Pipeline(512, 32, 4, seed=3)
+    p2 = Pipeline(512, 32, 4, seed=3)
+    b1 = next(iter(p1.batches(1)))
+    b2 = next(iter(p2.batches(1)))
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_elastic_pool_crash_recovery():
+    pool = ElasticPool(lease_timeout=5.0, per_task_s=0.001)
+    for i in range(30):
+        pool.submit(f"step{i}")
+    seen = []
+    pool.start_worker("w_bad", lambda n, m: seen.append(n) or True,
+                      fail_after=3)
+    pool.start_worker("w_ok", lambda n, m: seen.append(n) or True)
+    stats = pool.join(timeout=30)
+    assert stats["completed"] == 30
+    assert stats["requeued"] >= 1          # the crashed worker's stolen tasks
+
+
+def test_elastic_remesh_called():
+    calls = []
+    pool = ElasticPool(remesh=lambda n: calls.append(n))
+    pool.submit("a")
+    pool.start_worker("w0", lambda n, m: True)
+    pool.join(timeout=10)
+    pool.lose_worker("w0")
+    assert calls == [1, 0]
+
+
+def test_greedy_generate_prefill_decode_consistency():
+    from repro.runtime.serve_step import greedy_generate
+    cfg = get_config("deepseek-7b").reduced()
+    model = build_model(cfg, Options(q_block=32, kv_block=32))
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S),
+                                          2, cfg.vocab_size)}
+    out = greedy_generate(model, params, batch, max_new=4, cache_len=S + 8)
+    assert out.shape == (B, 4)
+    # pure-forward re-derivation of the first generated token
+    logits, _ = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    tok0 = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)
+    assert bool(jnp.all(out[:, 0] == tok0))

@@ -1,0 +1,67 @@
+"""METG scaling-law validation against the paper's own measurements
+(Table 4, §4): pmake ~ log(P) + alloc; dwork ~ rtt*P; orderings at 864."""
+import math
+
+from repro.core.metg import (PAPER_JSRUN, PAPER_METG_864, METGModel,
+                             efficiency, pick_batch_size)
+
+
+def test_jsrun_log_fit_matches_table4():
+    m = METGModel.from_paper()
+    for ranks, t in PAPER_JSRUN.items():
+        assert abs(m.jsrun_time(ranks) - t) < 0.5, (ranks, m.jsrun_time(ranks))
+
+
+def test_paper_metg_ordering_at_864():
+    """Paper §4: 'the METG for mpi-list, dwork and pmake are 0.3, 25, and
+    4500 milliseconds' — reproduce the ordering and magnitudes."""
+    m = METGModel.from_paper()
+    mpil = m.mpilist_metg(864, per_rank_sigma=0.3e-3 / math.sqrt(2 * math.log(864)))
+    dw = m.dwork_metg(864)
+    pm = m.pmake_metg(864)
+    assert mpil < dw < pm
+    assert 0.1e-3 < mpil < 1e-3                    # ~0.3 ms
+    assert 10e-3 < dw < 40e-3                      # ~20-25 ms
+    assert 3.5 < pm < 5.5                          # ~4.5 s
+
+
+def test_dwork_linear_scaling():
+    m = METGModel.from_paper()
+    assert abs(m.dwork_metg(2 * 864) / m.dwork_metg(864) - 2.0) < 1e-9
+    # paper §5: 23 us => only ~44k tasks/s; 44k ranks need >= 1 s tasks
+    assert 0.9 < m.dwork_metg(44000) < 1.1
+
+
+def test_dwork_mitigations():
+    m = METGModel.from_paper()
+    assert m.dwork_metg(864, steal_n=8) < m.dwork_metg(864) / 7.9
+    assert m.dwork_metg(864, shards=4) < m.dwork_metg(864) / 3.9
+
+
+def test_pmake_log_scaling():
+    m = METGModel.from_paper()
+    d1 = m.pmake_metg(60) - m.pmake_metg(6)
+    d2 = m.pmake_metg(600) - m.pmake_metg(60)
+    assert abs(d1 - d2) < 0.2                      # log-law: equal decade steps
+
+
+def test_mpilist_gumbel_growth():
+    m = METGModel.from_paper()
+    g = [m.mpilist_metg(p, per_rank_sigma=1e-3) for p in (8, 64, 4096)]
+    assert g[0] < g[1] < g[2]
+    # sqrt(2 ln P) growth: P grew 512x but the gap only ~2x
+    assert g[2] < 2.1 * g[0]
+
+
+def test_efficiency_definition():
+    """At task == METG, half the time is overhead (the METG definition)."""
+    assert abs(efficiency(1.0, 1.0) - 0.5) < 1e-12
+    assert efficiency(10.0, 1.0) > 0.9
+
+
+def test_pick_batch_size():
+    n = pick_batch_size("dwork", ranks=864, per_task_s=0.001, target_eff=0.9)
+    m = METGModel.from_paper()
+    eff = 0.001 * n / (0.001 * n + m.dwork_metg(864))
+    assert eff >= 0.9
+    assert pick_batch_size("dwork", 6, per_task_s=1.0) == 1

@@ -1,0 +1,125 @@
+"""Per-arch smoke tests (deliverable f): reduced same-family config, one
+forward + one train step on CPU, asserting shapes + no NaNs; decode-path
+consistency against the full forward for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_batch
+from repro.configs import ARCH_IDS, RunConfig, get_config
+from repro.models.common import Options, param_count
+from repro.models.model import build_model
+from repro.optim.adamw import init_opt
+from repro.runtime.train_step import make_train_step
+
+OPTS = Options(q_block=32, kv_block=32, moe_group=64)
+
+
+def _splice(big, small):
+    difs = [i for i, (a, b) in enumerate(zip(big.shape, small.shape))
+            if a != b]
+    if not difs:
+        return small.astype(big.dtype)
+    ax = difs[0]
+    idx = tuple(slice(None) if i != ax else slice(0, small.shape[ax])
+                for i in range(big.ndim))
+    return big.at[idx].set(small.astype(big.dtype))
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_forward_smoke(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(0))
+    assert param_count(params) > 0
+    B, S = 2, 64
+    batch = tiny_batch(cfg, B, S)
+    logits, aux = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any()), f"NaN logits in {name}"
+    assert jnp.isfinite(jnp.asarray(aux)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_train_step_smoke(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(0))
+    rc = RunConfig(total_steps=10, warmup_steps=2)
+    opt = init_opt(params, rc)
+    batch = tiny_batch(cfg, 2, 64)
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    step = jax.jit(make_train_step(model, rc))
+    params2, opt2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["grad_norm"]) > 0
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ["qwen2.5-32b", "gemma2-2b",
+                                  "deepseek-v2-lite-16b", "whisper-base"])
+def test_decode_matches_forward(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 64
+    batch = tiny_batch(cfg, B, S)
+    lg, cache, _ = jax.jit(
+        lambda p, b: model.forward(p, b, mode="prefill"))(params, batch)
+    cache_full = model.init_cache(B, S + 8)
+    cache_full = jax.tree_util.tree_map(_splice, cache_full, cache)
+    tok1 = jnp.argmax(lg[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    lg2, _ = jax.jit(model.decode_step)(
+        params, tok1, jnp.full((B,), S, jnp.int32), cache_full)
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([batch["tokens"], tok1[:, None]], 1)
+    if cfg.mrope:
+        b2["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S + 1)[None, None], (3, B, S + 1))
+    lf, _ = jax.jit(lambda p, b: model.forward(p, b))(params, b2)
+    err = float(jnp.max(jnp.abs(lf[:, -1].astype(jnp.float32)
+                                - lg2.astype(jnp.float32))))
+    assert err < 0.15, err
+
+
+@pytest.mark.parametrize("name", ["rwkv6-1.6b", "zamba2-2.7b"])
+def test_recurrent_decode_matches_forward(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 48
+    batch = tiny_batch(cfg, B, S)
+    logits, _ = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, batch["tokens"][:, t],
+                         jnp.full((B,), t, jnp.int32), cache)
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1).astype(jnp.float32)
+                                - logits.astype(jnp.float32))))
+    assert err < 0.15, err
+
+
+def test_gemma_local_global_masking():
+    """A token beyond the sliding window must still be reachable via global
+    layers but local layers must mask it — verify logits differ when a
+    long-range token changes only within-window vs out-of-window."""
+    cfg = get_config("gemma2-2b").reduced()
+    model = build_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 64
+    batch = tiny_batch(cfg, B, S)
+    base, _ = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    toks2 = batch["tokens"].at[0, 0].set((batch["tokens"][0, 0] + 1)
+                                         % cfg.vocab_size)
+    out2, _ = jax.jit(lambda p, b: model.forward(p, b))(
+        params, {"tokens": toks2})
+    # token 0 is outside the window (16) of position 63 but global layers
+    # still propagate information: logits at the last position must change
+    assert float(jnp.max(jnp.abs(base[0, -1] - out2[0, -1]))) > 0

@@ -1,0 +1,103 @@
+"""mpi-list unit + property tests: the partition law and the monoid/functor
+laws the DFM must satisfy (paper §2.3)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.mpi_list import Context, partition_bounds
+
+
+@given(st.integers(0, 500), st.integers(1, 32))
+def test_partition_law(N, P):
+    """Exactly the paper's rule: start = p*(N//P) + min(p, N%P); blocks are
+    contiguous, ascending, and cover [0, N)."""
+    spans = [partition_bounds(N, P, p) for p in range(P)]
+    assert spans[0][0] == 0
+    for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+        assert e0 == s1
+    assert spans[-1][1] == N
+    sizes = [e - s for s, e in spans]
+    assert max(sizes) - min(sizes) <= 1          # balanced
+
+
+@given(st.integers(0, 200), st.integers(1, 16))
+def test_iterates_collect_roundtrip(N, P):
+    dfm = Context(P).iterates(N)
+    dfm.check_partition_law()
+    assert dfm.collect() == list(range(N))
+
+
+@given(st.lists(st.integers(-100, 100), max_size=100), st.integers(1, 8))
+def test_map_functor_law(xs, P):
+    C = Context(P)
+    f, g = (lambda x: x + 1), (lambda x: x * 2)
+    a = C.scatter(xs).map(f).map(g).collect()
+    b = C.scatter(xs).map(lambda x: g(f(x))).collect()
+    assert a == b == [g(f(x)) for x in xs]
+
+
+@given(st.lists(st.integers(-50, 50), max_size=80), st.integers(1, 8))
+def test_reduce_and_scan(xs, P):
+    C = Context(P)
+    dfm = C.scatter(xs)
+    assert dfm.reduce(lambda a, b: a + b, 0) == sum(xs)
+    prefix = dfm.scan(lambda a, b: a + b, 0).collect()
+    assert prefix == list(np.cumsum(xs)) if xs else prefix == []
+
+
+@given(st.lists(st.integers(0, 1000), max_size=80), st.integers(1, 8),
+       st.integers(1, 5))
+def test_group_conserves_elements(xs, P, K):
+    C = Context(P)
+    g = C.scatter(xs).group(lambda x: {x % K: [x]},
+                            lambda p, recs: sorted(recs))
+    regrouped = sorted(sum(g.collect(), []))
+    assert regrouped == sorted(xs)
+
+
+@given(st.lists(st.lists(st.integers(), max_size=20), max_size=10),
+       st.integers(1, 6))
+def test_repartition_balances(chunks, P):
+    C = Context(P)
+    dfm = C.scatter(chunks)
+    out = dfm.repartition(len, lambda x, n: [[e] for e in x],
+                          lambda cs: [e for c in cs for e in c])
+    flat = [e for blk in out.parts for x in blk for e in x]
+    assert flat == [e for c in chunks for e in c]
+    # per-rank record counts follow the partition law
+    N = sum(len(c) for c in chunks)
+    for p, blk in enumerate(out.parts):
+        s, e = partition_bounds(N, P, p)
+        got = sum(len(x) for x in blk)
+        assert got == e - s
+
+
+def test_flatmap_and_filter():
+    C = Context(3)
+    out = (C.iterates(10)
+           .flatMap(lambda x: [x, x])
+           .filter(lambda x: x % 2 == 0)
+           .collect())
+    assert out == [x for i in range(10) for x in (i, i) if x % 2 == 0]
+
+
+def test_straggler_accounting():
+    """BSP sync time = slowest minus fastest rank (the mpi-list METG)."""
+    C = Context(4, jitter=lambda p: 0.01 * p)
+    C.iterates(16).map(lambda x: x)
+    assert C.sync_time >= 0.029
+
+
+def test_mesh_bridge_single_device():
+    import jax
+    from repro.core.mpi_list import mesh_ops
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    dfm = mesh_ops.iterates(mesh, 32)
+    out = mesh_ops.dfm_map(mesh, lambda x: x * x, dfm)
+    assert int(mesh_ops.dfm_sum(mesh, out)) == sum(i * i for i in range(32))
+    sc = mesh_ops.dfm_scan(mesh, lambda a, b: a + b, dfm)
+    assert int(sc[-1]) == sum(range(32))
+    import jax.numpy as jnp
+    dest = jnp.asarray([i % 3 for i in range(32)])
+    grouped = mesh_ops.group(mesh, dest, dfm)
+    assert sorted(np.asarray(grouped).tolist()) == list(range(32))

@@ -1,0 +1,91 @@
+"""Optimizer + checkpoint tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import RunConfig
+from repro.optim.adamw import (adamw_update, clip_by_global_norm, init_opt,
+                               lr_schedule)
+
+
+def test_adamw_converges_quadratic():
+    rc = RunConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200,
+                   grad_clip=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(5.0)}
+    opt = init_opt(params, rc)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, rc)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) > 100.0
+
+
+def test_lr_schedule_warmup_cosine():
+    rc = RunConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(jnp.asarray(s), rc)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= rc.lr * 1.001
+    assert lrs[99] < lrs[50] < lrs[12]
+
+
+def test_quantized_adam_state_dtype():
+    rc = RunConfig(adam_state_dtype="bfloat16")
+    params = {"w": jnp.zeros((4, 4))}
+    opt = init_opt(params, rc)
+    assert opt.m["w"].dtype == jnp.bfloat16
+
+
+def test_zero1_spec():
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.sharding import zero1_spec
+    sp = zero1_spec(P(None, None, "model"), (64, 512, 1024), 16)
+    assert sp == P("data", None, "model")
+    # no dim divisible -> unchanged
+    sp2 = zero1_spec(P("model"), (100,), 16)
+    assert sp2 == P("model")
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "step": jnp.asarray(7)}
+    ckpt.save(str(tmp_path), 7, tree, {"note": "x"})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    abs_tree = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = ckpt.restore(str(tmp_path), 7, abs_tree)
+    assert np.allclose(back["params"]["w"], tree["params"]["w"])
+    assert int(back["step"]) == 7
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    c = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        c.save(s, {"x": jnp.asarray(float(s))})
+    c.wait()
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore onto a mesh (sharded placement) from a plain host save."""
+    from jax.sharding import PartitionSpec as P
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(str(tmp_path), 1, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    abs_tree = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    back = ckpt.restore(str(tmp_path), 1, abs_tree, mesh=mesh,
+                        spec_tree={"w": P(None, "model")})
+    assert np.allclose(back["w"], tree["w"])
+    assert back["w"].sharding.spec == P(None, "model")

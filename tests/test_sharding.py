@@ -1,0 +1,94 @@
+"""Sharding-rule tests: every model-axis-sharded parameter dim must divide
+the production model-axis width (16) for EVERY assigned architecture —
+the invariant the multi-pod dry-run depends on."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.models.model import build_model
+from repro.runtime.sharding import (batch_specs, cache_specs,
+                                    effective_batch_axes, param_specs)
+
+MODEL_AXIS = 16
+DATA_AXIS = 16
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_param_specs_divisible(name):
+    cfg = get_config(name)
+    model = build_model(cfg)
+    abstract = model.init_abstract()
+    specs = param_specs(abstract, cfg)
+    flat_a = jax.tree_util.tree_flatten_with_path(abstract)[0]
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat_a) == len(flat_s)
+    n_model_sharded = 0
+    for (path, leaf), spec in zip(flat_a, flat_s):
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for dim, ax in enumerate(entries):
+            if ax == "model":
+                n_model_sharded += 1
+                assert leaf.shape[dim] % MODEL_AXIS == 0, (
+                    jax.tree_util.keystr(path), leaf.shape, dim)
+    assert n_model_sharded > 0, "nothing TP-sharded"
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_cache_specs_divisible(name):
+    cfg = get_config(name)
+    model = build_model(cfg)
+    mesh_axes = {"data": DATA_AXIS, "model": MODEL_AXIS}
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = mesh_axes
+
+    for shape_name in ("decode_32k", "long_500k"):
+        sh = SHAPES[shape_name]
+        cache = model.init_cache(sh.global_batch, sh.seq_len, abstract=True)
+        specs = cache_specs(cfg, cache, FakeMesh(),
+                            global_batch=sh.global_batch,
+                            seq_shard_kv=(shape_name == "long_500k"))
+        flat_c = jax.tree_util.tree_leaves(cache)
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+        for leaf, spec in zip(flat_c, flat_s):
+            entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            for dim, ax in enumerate(entries):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= mesh_axes[a]
+                assert leaf.shape[dim] % size == 0, (name, shape_name,
+                                                     leaf.shape, dim, ax)
+
+
+def test_effective_batch_axes():
+    class M:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    assert effective_batch_axes(M(), 256) == ("pod", "data")
+    assert effective_batch_axes(M(), 32) == ("pod", "data")
+    assert effective_batch_axes(M(), 16) == ("data",)
+    assert effective_batch_axes(M(), 1) is None
+
+
+@pytest.mark.parametrize("name", ["qwen2.5-32b", "rwkv6-1.6b",
+                                  "whisper-base", "qwen2-vl-2b"])
+def test_batch_specs_cover_inputs(name):
+    cfg = get_config(name)
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": DATA_AXIS, "model": MODEL_AXIS}
+
+    from repro.configs import input_specs
+    for shape_name, sh in SHAPES.items():
+        sp = batch_specs(cfg, sh, M())
+        inputs = input_specs(cfg, sh)
+        assert set(sp) == set(inputs), (shape_name, set(sp), set(inputs))
