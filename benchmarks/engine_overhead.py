@@ -1,0 +1,99 @@
+"""Engine overhead benchmark: tasks/sec + per-task overhead for each
+scheduler adapter at 1 / 4 / 16 workers, emitted as BENCH_engine.json.
+
+Seeds the repo's perf trajectory: every future scaling PR (forwarding
+trees, async serving, multi-backend) should move these numbers, and the
+empirical-vs-analytic METG crosscheck keeps the `core/metg.py` laws
+honest against the running code.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.dwork import Client, InProcTransport, TaskServer, run_pool
+from repro.core.engine import crosscheck
+from repro.core.metg import METGModel, PAPER_DWORK_RTT
+from repro.core.mpi_list import Context
+from repro.core.pmake import PMake
+
+WORKER_COUNTS = (1, 4, 16)
+
+
+def bench_dwork(n_tasks: int, workers: int, steal_n: int = 4) -> dict:
+    srv = TaskServer()
+    boss = Client(InProcTransport(srv), "boss")
+    for i in range(n_tasks):
+        boss.create(f"t{i}", meta={"x": i})
+    rep = run_pool(srv, lambda name, meta: (True, meta["x"] * 2),
+                   workers=workers, steal_n=steal_n)
+    ov = rep.overhead()
+    model = METGModel.from_measured(rtt_s=ov.rpc_per_task_s)
+    # rpc_per_task_s is already amortized over the Steal-n batch, so the
+    # analytic law is evaluated at steal_n=1 (no double-counting)
+    return {
+        **ov.summary(),
+        "crosscheck": crosscheck("dwork", ov.per_task_overhead_s,
+                                 model.dwork_metg(workers)),
+        "rtt_vs_paper": crosscheck("dwork-rtt", ov.rpc_per_task_s,
+                                   PAPER_DWORK_RTT, factor=30.0),
+    }
+
+
+def bench_pmake(n_tasks: int, workers: int) -> dict:
+    rules = ('w:\n  resources: {time: 1, nrs: 1}\n'
+             '  out: {o: "w_{n}.out"}\n  script: "echo {n}"\n')
+    targets = (f'all:\n  dirname: .\n  loop:\n    n: "range({n_tasks})"\n'
+               '  tgt: {o: "w_{n}.out"}\n')
+    pm = PMake(rules, targets, root=tempfile.mkdtemp(),
+               total_nodes=workers, transport="inproc",
+               runner=lambda t: True)
+    stats = pm.run()
+    ov = pm.report.overhead()
+    model = METGModel.from_measured(launch_s=ov.rpc_per_task_s)
+    return {
+        **ov.summary(),
+        "done": stats["done"],
+        "crosscheck": crosscheck("pmake", ov.per_task_overhead_s,
+                                 model.pmake_metg(workers)),
+    }
+
+
+def bench_mpilist(n_items: int, workers: int, ranks: int = 16,
+                  sigma: float = 1e-3) -> dict:
+    C = Context(ranks, engine_workers=workers, straggler_sigma=sigma,
+                seed=0)
+    t0 = time.perf_counter()
+    steps = max(1, n_items // 1000)
+    for _ in range(steps):
+        C.scatter(list(range(1000))).map(lambda x: x * 2)
+    wall = time.perf_counter() - t0
+    n_rank_tasks = steps * ranks
+    return {
+        "ranks": ranks, "supersteps": steps,
+        "rank_tasks_per_s": round(n_rank_tasks / wall, 1),
+        "mean_sync_gap_ms": round(1e3 * sum(C.gaps) / len(C.gaps), 4),
+        "crosscheck": C.straggler_crosscheck(),
+    }
+
+
+def run(quick: bool = True) -> dict:
+    n = 300 if quick else 2000
+    out = {"n_tasks": n, "schedulers": {}}
+    for name, fn in (("dwork", bench_dwork), ("pmake", bench_pmake),
+                     ("mpi-list", bench_mpilist)):
+        out["schedulers"][name] = {
+            f"workers={w}": fn(n, w) for w in WORKER_COUNTS}
+    return out
+
+
+if __name__ == "__main__":
+    quick = "--full" not in sys.argv
+    result = run(quick=quick)
+    path = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+    path.write_text(json.dumps(result, indent=1, default=str))
+    print(json.dumps(result, indent=1, default=str))
+    print(f"\nwrote {path}", file=sys.stderr)

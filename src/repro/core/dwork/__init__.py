@@ -15,7 +15,8 @@ from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
 from repro.core.dwork.server import TaskServer
 from repro.core.dwork.client import Client, InProcTransport, TCPTransport
 from repro.core.dwork.forwarder import Forwarder
+from repro.core.dwork.pool import run_pool
 
 __all__ = ["Create", "Steal", "Complete", "Transfer", "Exit", "TaskMsg",
            "NotFound", "ExitResp", "TaskServer", "Client", "InProcTransport",
-           "TCPTransport", "Forwarder"]
+           "TCPTransport", "Forwarder", "run_pool"]

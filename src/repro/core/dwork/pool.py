@@ -1,0 +1,43 @@
+"""dwork engine adapter: dispatch a TaskServer / ShardedHub through the
+unified worker pool.
+
+`run_pool(server, execute, workers=4)` replaces hand-rolled
+`Client.run_loop` driver code: the engine's pool speaks the same Steal /
+Complete / Exit protocol (Fig. 2) against the given server, with Steal-n
+batching, per-worker fault injection, and a lifecycle trace from which
+empirical per-task overhead and METG are computed
+(`report.overhead().summary()`).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+
+def run_pool(server, execute: Optional[Callable] = None, *,
+             workers: int = 4, steal_n: int = 1, transport: str = "inproc",
+             tracer=None, faults=None, clock=None, poll: float = 0.001,
+             **engine_kw):
+    """Run every task on `server` to a terminal state through the engine
+    pool.  `server` is a `TaskServer` or a `ShardedHub`;
+    `execute(name, meta)` returns bool | (ok, value) | None (success).
+    Returns the `EngineReport` (results, trace, errors, backend stats)."""
+    # lazy import: repro.core.engine.backends imports dwork submodules,
+    # so importing at module scope would create a package-level cycle
+    from repro.core.dwork.sharded import ShardedHub
+    from repro.core.engine.backends import ServerBackend, ShardedBackend
+    from repro.core.engine.executor import Engine
+
+    if isinstance(server, ShardedHub):
+        backend = ShardedBackend(hub=server, tracer=tracer)
+        lease = server.shards[0].lease_timeout if server.shards else None
+    else:
+        backend = ServerBackend(server=server, tracer=tracer)
+        lease = server.lease_timeout
+    # propagate the server's heartbeat lease so the engine's idle budget
+    # outlives lease expiry (a silently-dead worker's tasks must be
+    # reaped, not abandoned as a premature stall)
+    engine_kw.setdefault("lease_timeout", lease)
+    eng = Engine(workers=workers, transport=transport, steal_n=steal_n,
+                 backend=backend, tracer=tracer, faults=faults, clock=clock,
+                 poll=poll, **engine_kw)
+    return eng.run(execute)

@@ -19,14 +19,15 @@ import threading
 import time
 from collections import deque
 from pathlib import Path
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
                                   Release, Stats, Steal, TaskMsg, Transfer)
 
 
 class TaskServer:
-    def __init__(self, *, lease_timeout: Optional[float] = None):
+    def __init__(self, *, lease_timeout: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.joins: dict[str, list] = {}      # task -> [join_count, [succ]]
         self.meta: dict[str, dict] = {}
         self.ready: deque[str] = deque()
@@ -35,6 +36,9 @@ class TaskServer:
         self.completed: set[str] = set()
         self.errors: set[str] = set()
         self.lease_timeout = lease_timeout
+        # injectable heartbeat clock: the engine's fault layer passes a
+        # ManualClock so lease expiry is deterministic in tests
+        self.clock = clock or time.monotonic
         self.lock = threading.Lock()
         self.counters = {"created": 0, "stolen": 0, "completed": 0,
                          "requeued": 0, "errors": 0}
@@ -82,10 +86,12 @@ class TaskServer:
         out = []
         while self.ready and len(out) < max(1, msg.n):
             t = self.ready.popleft()          # FIFO: oldest ready first
-            if t in self.errors:
+            if t in self.errors or t in self.completed:
+                # completed: a stale ready entry left by a late Complete
+                # after a lease-timeout requeue — must not be re-executed
                 continue
             self.assigned.setdefault(msg.worker, set()).add(t)
-            self.lease[t] = time.monotonic()
+            self.lease[t] = self.clock()
             out.append((t, self.meta.get(t, {})))
         if out:
             self.counters["stolen"] += len(out)
@@ -163,7 +169,7 @@ class TaskServer:
     def _reap_leases(self):
         if self.lease_timeout is None:
             return
-        now = time.monotonic()
+        now = self.clock()
         expired = [t for t, ts in self.lease.items()
                    if now - ts > self.lease_timeout]
         for t in expired:

@@ -18,14 +18,15 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
-from repro.core.dwork.api import (Complete, Create, ExitResp, NotFound,
+from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
                                   Release, Steal, TaskMsg)
 from repro.core.dwork.server import TaskServer
 
 
 class ShardedHub:
-    def __init__(self, n_shards: int = 2, *, lease_timeout: Optional[float] = None):
-        self.shards = [TaskServer(lease_timeout=lease_timeout)
+    def __init__(self, n_shards: int = 2, *, lease_timeout: Optional[float] = None,
+                 clock=None):
+        self.shards = [TaskServer(lease_timeout=lease_timeout, clock=clock)
                        for _ in range(n_shards)]
         self.home: dict[str, int] = {}
         self.lock = threading.Lock()
@@ -96,6 +97,12 @@ class ShardedHub:
     def complete(self, worker: str, task: str, shard: int, ok: bool = True):
         return self.shards[shard].handle(Complete(worker=f"{worker}@{shard}",
                                                   task=task, ok=ok))
+
+    def exit_worker(self, worker: str):
+        """Node failure: recycle the worker's assignment on every shard
+        (workers steal under per-shard aliases `worker@shard`)."""
+        for i, s in enumerate(self.shards):
+            s.handle(Exit(worker=f"{worker}@{i}"))
 
     def stats(self) -> dict:
         per = [s.stats() for s in self.shards]

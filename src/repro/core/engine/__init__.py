@@ -1,0 +1,42 @@
+"""Unified execution engine: one worker-pool substrate for all three
+schedulers (Rogers 2021).
+
+The paper's central claim is that pmake, dwork, and mpi-list "have the
+same bottlenecks" and "well-understood per-task overhead".  This subsystem
+makes that claim *measurable* in one place instead of three ad-hoc loops:
+
+    model.py     Task / TaskResult / TraceEvent lifecycle data model
+                 (created -> ready -> stolen -> running -> completed/
+                  failed/requeued), mapped to the paper's Fig. 2 protocol
+    backends.py  scheduler state adapters (dwork TaskServer, ShardedHub)
+                 speaking the Table 2 verbs; every call timed as an `rpc`
+    executor.py  the worker pool: inproc + threaded transports, Steal-n
+                 batching, sharded routing, slots/priority (pmake EFT)
+    faults.py    heartbeat leases, dead-worker requeue, seeded fault and
+                 straggler injection (no wall-clock dependence in tests)
+    tracing.py   empirical per-task overhead + METG from event streams,
+                 cross-checked against the analytic laws in core/metg.py
+
+Scheduler adapters built on this substrate:
+    dwork    `repro.core.dwork.pool.run_pool`  (TaskServer / ShardedHub)
+    pmake    `repro.core.pmake.PMake.run`      (slots=nodes, EFT priority)
+    mpi-list `repro.core.mpi_list.Context(..., engine_workers=...)`
+"""
+from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
+                                        ShardedBackend)
+from repro.core.engine.executor import Engine, EngineReport
+from repro.core.engine.faults import FaultPlan
+from repro.core.engine.model import (COMPLETED, CREATED, FAILED, READY,
+                                     REQUEUED, RPC, RUN_END, RUN_START,
+                                     STOLEN, WORKER_DEAD, EngineTask,
+                                     ManualClock, TaskResult, TraceEvent)
+from repro.core.engine.tracing import (OverheadReport, TraceRecorder,
+                                       crosscheck)
+
+__all__ = [
+    "Engine", "EngineReport", "EngineTask", "TaskResult", "TraceEvent",
+    "TraceRecorder", "OverheadReport", "FaultPlan", "ManualClock",
+    "ServerBackend", "ShardedBackend", "crosscheck", "DONE", "EMPTY",
+    "CREATED", "READY", "STOLEN", "RUN_START", "RUN_END", "COMPLETED",
+    "FAILED", "REQUEUED", "WORKER_DEAD", "RPC",
+]

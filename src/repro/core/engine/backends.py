@@ -1,0 +1,149 @@
+"""Scheduler backends: the engine's view of a task database.
+
+A backend adapts a concrete scheduler state (dwork `TaskServer`, sharded
+`ShardedHub`) to the uniform protocol the worker pool speaks — the same
+five verbs as the paper's Table 2 wire API:
+
+    create(name, deps, meta)            Create
+    steal(worker, n) -> tasks|EMPTY|DONE   Steal -> TaskMsg|NotFound|Exit
+    complete(worker, name, ok)          Complete (ok=False poisons succs)
+    exit_worker(worker)                 Exit (recycle assignment)
+
+Every call is timed and emitted as an `rpc` trace event — the measured
+analog of the paper's 23 us per-task RTT (Table 4).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
+                                  Steal, TaskMsg)
+from repro.core.dwork.server import TaskServer
+from repro.core.dwork.sharded import ShardedHub
+from repro.core.engine.model import REQUEUED, RPC
+
+# steal() sentinels
+EMPTY = "empty"                 # nothing ready now, but work remains
+DONE = "done"                   # every task reached a terminal state
+
+
+class ServerBackend:
+    """Engine backend over a single dwork `TaskServer` (paper §2.2)."""
+
+    def __init__(self, server: Optional[TaskServer] = None, *,
+                 lease_timeout: Optional[float] = None, clock=None,
+                 tracer=None):
+        self.server = server or TaskServer(lease_timeout=lease_timeout,
+                                           clock=clock)
+        self.tracer = tracer
+
+    # ------------------------------------------------------------ timing
+    def _call(self, op: str, msg):
+        t0 = time.perf_counter()
+        resp = self.server.handle(msg)
+        if self.tracer is not None:
+            self.tracer.emit(RPC, op=op, dt=time.perf_counter() - t0)
+        return resp
+
+    def _note_requeues(self, before: int):
+        n = self.server.counters["requeued"] - before
+        if n > 0 and self.tracer is not None:
+            self.tracer.emit(REQUEUED, n=n, via="lease")
+
+    # ---------------------------------------------------------- protocol
+    def create(self, name: str, deps=(), meta=None):
+        self._call("create", Create(task=name, deps=list(deps),
+                                    meta=dict(meta or {})))
+
+    def steal(self, worker: str, n: int = 1):
+        before = self.server.counters["requeued"]
+        resp = self._call("steal", Steal(worker=worker, n=n))
+        self._note_requeues(before)
+        if isinstance(resp, TaskMsg):
+            return list(resp.tasks)
+        if isinstance(resp, ExitResp):
+            return DONE
+        return EMPTY
+
+    def complete(self, worker: str, name: str, ok: bool = True):
+        self._call("complete", Complete(worker=worker, task=name, ok=ok))
+
+    def exit_worker(self, worker: str):
+        before = self.server.counters["requeued"]
+        self._call("exit", Exit(worker=worker))
+        n = self.server.counters["requeued"] - before
+        if n > 0 and self.tracer is not None:
+            self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
+        return n
+
+    def errors(self) -> set:
+        return set(self.server.errors)
+
+    def stats(self) -> dict:
+        return self.server.stats()
+
+
+class ShardedBackend:
+    """Engine backend over a `ShardedHub` — sharded routing with worker
+    affinity and cross-shard stealing (paper §6 expansion item 4)."""
+
+    def __init__(self, hub: Optional[ShardedHub] = None, *, shards: int = 2,
+                 lease_timeout: Optional[float] = None, clock=None,
+                 tracer=None):
+        self.hub = hub or ShardedHub(shards, lease_timeout=lease_timeout,
+                                     clock=clock)
+        self.tracer = tracer
+        self._shard_of: dict[str, int] = {}   # stolen task -> serving shard
+
+    def _emit_rpc(self, op: str, dt: float):
+        if self.tracer is not None:
+            self.tracer.emit(RPC, op=op, dt=dt)
+
+    def create(self, name: str, deps=(), meta=None):
+        t0 = time.perf_counter()
+        self.hub.create(name, deps=deps, meta=meta)
+        self._emit_rpc("create", time.perf_counter() - t0)
+
+    def steal(self, worker: str, n: int = 1):
+        t0 = time.perf_counter()
+        affinity = None
+        if worker.rsplit("w", 1)[-1].isdigit():
+            affinity = int(worker.rsplit("w", 1)[-1])
+        resp, shard = self.hub.steal(worker, n=n, affinity=affinity)
+        self._emit_rpc("steal", time.perf_counter() - t0)
+        if isinstance(resp, TaskMsg):
+            for name, _meta in resp.tasks:
+                self._shard_of[name] = shard
+            return list(resp.tasks)
+        if isinstance(resp, ExitResp):
+            return DONE
+        return EMPTY
+
+    def complete(self, worker: str, name: str, ok: bool = True):
+        shard = self._shard_of.pop(name, None)
+        if shard is None:
+            # duplicate completion (e.g. clearing a suppressed re-steal's
+            # assignment): route by the hub's authoritative home map —
+            # never guess a shard
+            shard = self.hub.home.get(name)
+            if shard is None:
+                return
+        t0 = time.perf_counter()
+        self.hub.complete(worker, name, shard, ok=ok)
+        self._emit_rpc("complete", time.perf_counter() - t0)
+
+    def exit_worker(self, worker: str):
+        before = sum(s.counters["requeued"] for s in self.hub.shards)
+        self.hub.exit_worker(worker)
+        n = sum(s.counters["requeued"] for s in self.hub.shards) - before
+        if n > 0 and self.tracer is not None:
+            self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
+        return n
+
+    def errors(self) -> set:
+        return {t for s in self.hub.shards for t in s.errors
+                if not t.startswith("__")}
+
+    def stats(self) -> dict:
+        return self.hub.stats()

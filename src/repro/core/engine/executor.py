@@ -1,0 +1,360 @@
+"""The unified worker pool: one execution substrate for all three schedulers.
+
+A single dispatch loop drives virtual workers against a scheduler backend
+(`ServerBackend` / `ShardedBackend`), generalizing the paper's three
+execution loops:
+
+  * dwork  (§2.2) — workers Steal-n batches and Complete tasks; the loop
+    IS the paper's Fig. 2 CLIENT-LOOP, with per-worker fault injection.
+  * pmake  (§2.1) — tasks carry `slots` (nodes) and `priority` (EFT);
+    the launch step is pmake's "greedy highest-priority-first onto free
+    nodes", with `capacity` total slots.
+  * mpi-list (§2.3) — each bulk step submits one task per rank; per-rank
+    times (plus injected straggler jitter) feed the Gumbel sync-gap model.
+
+Transports:
+  * "inproc" — tasks run inline in the dispatch loop; fully deterministic
+    (round-robin steal order, no threads, injectable clock) — the default
+    for tests, fault injection, and pure-overhead measurement.
+  * "thread" — a slot-bounded thread pool; real concurrency for workloads
+    that block (pmake's popen'd scripts).
+
+Every lifecycle transition is emitted to the `TraceRecorder`, from which
+`tracing.OverheadReport` computes empirical per-task overhead and METG.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
+                                        ShardedBackend)
+from repro.core.engine.faults import FaultPlan
+from repro.core.engine.model import (COMPLETED, CREATED, FAILED, READY,
+                                     RUN_END, RUN_START, STOLEN, WORKER_DEAD,
+                                     EngineTask, TaskResult, next_seq)
+from repro.core.engine.tracing import OverheadReport, TraceRecorder
+
+
+class _SyncFuture:
+    """Immediately-done future: the inproc transport's result holder."""
+
+    def __init__(self, value):
+        self._value = value
+
+    def done(self) -> bool:
+        return True
+
+    def result(self):
+        return self._value
+
+
+@dataclass
+class EngineReport:
+    results: dict                      # task -> TaskResult (last execution)
+    trace: TraceRecorder
+    workers: int
+    wall_s: float
+    errors: set = field(default_factory=set)
+    stalled: bool = False
+    backend_stats: dict = field(default_factory=dict)
+
+    @property
+    def completed(self) -> set:
+        return {n for n, r in self.results.items() if r.ok}
+
+    def overhead(self) -> OverheadReport:
+        return self.trace.report(workers=self.workers)
+
+
+class Engine:
+    def __init__(self, *, workers: int = 1, capacity: Optional[int] = None,
+                 transport: str = "inproc", steal_n: int = 1, shards: int = 1,
+                 backend=None, tracer: Optional[TraceRecorder] = None,
+                 faults: Optional[FaultPlan] = None, clock=None,
+                 lease_timeout: Optional[float] = None, poll: float = 0.001,
+                 max_idle_rounds: Optional[int] = None):
+        if transport not in ("inproc", "thread"):
+            raise ValueError(f"unknown transport {transport!r}")
+        self.workers = max(int(workers), 0)
+        self.capacity = capacity if capacity is not None else max(workers, 1)
+        self.transport = transport
+        self.steal_n = max(int(steal_n), 1)
+        self.faults = faults
+        self.poll = poll
+        self.lease_timeout = lease_timeout
+        self.tracer = tracer or TraceRecorder(clock=clock)
+        if backend is None:
+            if shards > 1:
+                backend = ShardedBackend(shards=shards,
+                                         lease_timeout=lease_timeout,
+                                         clock=clock, tracer=self.tracer)
+            else:
+                backend = ServerBackend(lease_timeout=lease_timeout,
+                                        clock=clock, tracer=self.tracer)
+        elif getattr(backend, "tracer", None) is None:
+            backend.tracer = self.tracer
+        self.backend = backend
+        # long enough for a heartbeat lease to expire while idling
+        if max_idle_rounds is None:
+            max_idle_rounds = 500
+            if lease_timeout:
+                max_idle_rounds = max(500, int(2 * lease_timeout / poll))
+        self.max_idle_rounds = max_idle_rounds
+        # engine-local task registry (fn/priority/slots + ready tracking)
+        self.tasks: dict[str, EngineTask] = {}
+        self._waiting: dict[str, set] = {}
+        self._succs: dict[str, list] = {}
+
+    # ------------------------------------------------------------- submit
+    def submit(self, name: str, fn: Optional[Callable] = None, *,
+               deps=(), meta: Optional[dict] = None, priority: float = 0.0,
+               slots: int = 1) -> EngineTask:
+        """Register a task.  Submit producers before dependents: the task
+        server forward-declares an unknown dep as a READY stub and treats
+        a later Create of the same name as a no-op (dwork §2.2 semantics),
+        so a dependent submitted first would run before its producer."""
+        task = EngineTask(name=name, fn=fn, deps=tuple(deps),
+                          meta=dict(meta or {}), slots=max(int(slots), 1),
+                          priority=priority)
+        self.tasks[name] = task
+        self.backend.create(name, deps=task.deps, meta=task.meta)
+        self.tracer.emit(CREATED, task=name)
+        if task.deps:
+            self._waiting[name] = set(task.deps)
+            for d in task.deps:
+                self._succs.setdefault(d, []).append(name)
+        else:
+            self.tracer.emit(READY, task=name)
+        return task
+
+    def _on_terminal(self, name: str):
+        for succ in self._succs.pop(name, []):
+            w = self._waiting.get(succ)
+            if w is None:
+                continue
+            w.discard(name)
+            if not w:
+                del self._waiting[succ]
+                self.tracer.emit(READY, task=succ)
+
+    # -------------------------------------------------------------- exec
+    def _execute_registered(self, name: str, meta: dict):
+        task = self.tasks.get(name)
+        if task is None or task.fn is None:
+            return (True, None)
+        return (True, task.fn())
+
+    def _run_one(self, exec_fn, name: str, meta: dict,
+                 worker: str) -> TaskResult:
+        self.tracer.emit(RUN_START, task=name, worker=worker)
+        t0 = time.perf_counter()
+        ok, value, err = True, None, None
+        try:
+            out = exec_fn(name, meta)
+            if isinstance(out, tuple):
+                ok, value = bool(out[0]), out[1]
+            elif out is None:
+                ok = True
+            elif isinstance(out, bool):
+                ok = out
+            else:
+                ok, value = True, out
+        except Exception as e:                        # noqa: BLE001
+            ok, err = False, repr(e)
+        t1 = time.perf_counter()
+        virtual = 0.0
+        if self.faults is not None:
+            virtual = self.faults.delay_s(name, worker)
+            if self.faults.force_fail(name, worker):
+                ok, err = False, err or "injected fault"
+        self.tracer.emit(RUN_END, task=name, worker=worker,
+                         virtual_s=virtual)
+        return TaskResult(task=name, ok=ok, worker=worker, t_start=t0,
+                          t_end=t1, value=value, error=err,
+                          virtual_s=virtual)
+
+    # --------------------------------------------------------------- run
+    def run(self, execute: Optional[Callable] = None) -> EngineReport:
+        """Run until every task reaches a terminal state (or all workers
+        die / the pool stalls).  `execute(name, meta)` may return bool,
+        (ok, value), or None (success); default runs the submitted `fn`."""
+        exec_fn = execute or self._execute_registered
+        t_wall0 = time.perf_counter()
+        alive = [f"w{i}" for i in range(self.workers)]
+        dead: set[str] = set()
+        steals = {w: 0 for w in alive}
+        done_flag = {w: False for w in alive}
+        pending: list[dict] = []
+        running: dict[str, dict] = {}
+        shadows: dict[str, set] = {}   # task -> workers whose duplicate
+        results: dict[str, TaskResult] = {}   # steal was suppressed
+        free = self.capacity
+        idle_rounds = 0
+        stalled = False
+        pending_limit = max(self.workers, 1) * self.steal_n + self.capacity
+        pool = (ThreadPoolExecutor(max_workers=self.capacity)
+                if self.transport == "thread" else None)
+        rounds = 0
+        try:
+            while True:
+                rounds += 1
+                progress = False
+                # 1) reap finished tasks
+                for name in list(running):
+                    rec = running[name]
+                    if not rec["fut"].done():
+                        continue
+                    running.pop(name)
+                    free += rec["slots"]
+                    progress = True
+                    if rec["worker"] in dead:
+                        continue      # lost completion: requeued via Exit
+                    res: TaskResult = rec["fut"].result()
+                    results[name] = res
+                    self.backend.complete(rec["worker"], name, ok=res.ok)
+                    # a lease-expiry duplicate steal we suppressed left the
+                    # task in the re-stealer's assigned set; an idempotent
+                    # Complete on its behalf clears that server-side state
+                    for sw in shadows.pop(name, ()):
+                        if sw != rec["worker"]:
+                            self.backend.complete(sw, name, ok=res.ok)
+                    self.tracer.emit(COMPLETED if res.ok else FAILED,
+                                     task=name, worker=rec["worker"],
+                                     error=res.error)
+                    if res.ok:      # failed tasks never ready their succs
+                        self._on_terminal(name)
+                # 2) steal — a worker steals only while it holds fewer than
+                # steal_n outstanding tasks (the Fig. 2 client loop's
+                # batch-then-drain rhythm); rotation keeps the order fair
+                outstanding = {w: 0 for w in alive}
+                for it in pending:
+                    outstanding[it["worker"]] = \
+                        outstanding.get(it["worker"], 0) + 1
+                for rec in running.values():
+                    outstanding[rec["worker"]] = \
+                        outstanding.get(rec["worker"], 0) + 1
+                start = rounds % max(len(alive), 1)
+                for w in alive[start:] + alive[:start]:
+                    if w in dead or done_flag[w]:
+                        continue
+                    if outstanding.get(w, 0) >= self.steal_n \
+                            or len(pending) >= pending_limit:
+                        continue
+                    got = self.backend.steal(w, self.steal_n)
+                    if got == DONE:
+                        done_flag[w] = True
+                    elif got != EMPTY:
+                        steals[w] += len(got)
+                        pending_names = {it["name"] for it in pending}
+                        for name, meta in got:
+                            rec = running.get(name)
+                            if name in pending_names or (
+                                    rec is not None
+                                    and rec["worker"] not in dead):
+                                # lease-expiry re-steal of a task a LIVE
+                                # copy of this pool still holds: the first
+                                # copy will complete (idempotent server-
+                                # side); a second launch would leak slots
+                                # and double-count events.  A copy held
+                                # only by a DEAD worker is accepted — its
+                                # completion will be discarded, so this
+                                # re-steal is the task's only way forward.
+                                shadows.setdefault(name, set()).add(w)
+                                continue
+                            pending_names.add(name)
+                            self.tracer.emit(STOLEN, task=name, worker=w)
+                            pending.append({
+                                "name": name, "meta": meta, "worker": w,
+                                "priority": self._priority_of(name, meta),
+                                "slots": self._slots_of(name, meta),
+                                "seq": next_seq()})
+                        progress = True
+                # 3) fault injection: worker deaths (between steal & launch,
+                #    so a dying worker holds stolen-but-unstarted tasks)
+                if self.faults is not None:
+                    for w in alive:
+                        if w in dead:
+                            continue
+                        if self.faults.should_die(w, steals[w]):
+                            dead.add(w)
+                            silent = self.faults.dies_silently(w)
+                            self.tracer.emit(WORKER_DEAD, worker=w,
+                                             silent=silent)
+                            pending = [it for it in pending
+                                       if it["worker"] != w]
+                            if not silent:
+                                # announced death: Exit recycles assignment
+                                self.backend.exit_worker(w)
+                            # silent death: heartbeat-lease expiry recycles
+                            progress = True
+                # 4) launch: greedy highest-priority-first into free slots
+                if pending:
+                    pending.sort(key=lambda it: (-it["priority"], it["seq"]))
+                    held = []
+                    for it in pending:
+                        if it["worker"] in dead:
+                            continue
+                        if it["name"] in running:
+                            # a dead worker's copy is still in flight;
+                            # wait for it to drain before re-launching
+                            held.append(it)
+                            continue
+                        slots = min(it["slots"], self.capacity)
+                        if slots > free:
+                            held.append(it)
+                            continue
+                        free -= slots
+                        if pool is None:
+                            fut = _SyncFuture(self._run_one(
+                                exec_fn, it["name"], it["meta"],
+                                it["worker"]))
+                        else:
+                            fut = pool.submit(self._run_one, exec_fn,
+                                              it["name"], it["meta"],
+                                              it["worker"])
+                        running[it["name"]] = {"worker": it["worker"],
+                                               "fut": fut, "slots": slots}
+                        progress = True
+                    pending = held
+                # 5) termination
+                live = [w for w in alive if w not in dead]
+                if not running and not pending:
+                    if not live or all(done_flag[w] for w in live):
+                        break
+                if progress:
+                    idle_rounds = 0
+                elif not running:
+                    idle_rounds += 1
+                    if idle_rounds >= self.max_idle_rounds:
+                        stalled = True   # unresolvable (cycle / all leased)
+                        break
+                    time.sleep(self.poll)
+                else:
+                    time.sleep(self.poll)
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
+        # effective parallelism: the inproc transport runs tasks serially,
+        # so overhead accounting must not multiply wall time by the pool size
+        eff_workers = 1 if self.transport == "inproc" else self.workers
+        return EngineReport(
+            results=results, trace=self.tracer, workers=eff_workers,
+            wall_s=time.perf_counter() - t_wall0,
+            errors=self.backend.errors(), stalled=stalled,
+            backend_stats=self.backend.stats())
+
+    # ------------------------------------------------------------ helpers
+    def _priority_of(self, name: str, meta: dict) -> float:
+        task = self.tasks.get(name)
+        if task is not None:
+            return task.priority
+        return float(meta.get("priority", 0.0)) if meta else 0.0
+
+    def _slots_of(self, name: str, meta: dict) -> int:
+        task = self.tasks.get(name)
+        if task is not None:
+            return task.slots
+        return int(meta.get("slots", 1)) if meta else 1

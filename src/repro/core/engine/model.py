@@ -1,0 +1,111 @@
+"""Engine data model: tasks, results, and wall-clock-stamped trace events.
+
+Lifecycle (mirrors the paper's Fig. 2 message protocol, generalized to all
+three schedulers):
+
+    created  -> ready -> stolen -> run_start -> run_end -> completed
+                  ^                                     -> failed
+                  |________ requeued (Exit / lease expiry / Transfer) __|
+
+Mapping to Fig. 2 / Table 2 messages:
+    created   <- Create(task, deps)        (dwork) / build_graph (pmake)
+    stolen    <- Steal -> TaskMsg          (dwork) / greedy launch (pmake)
+                                           / rank-block dispatch (mpi-list)
+    completed <- Complete(worker, task, ok=True)
+    failed    <- Complete(ok=False)        (poisons transitive successors)
+    requeued  <- Exit(worker) recycle, lease-timeout reap, or Transfer
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+# ---------------------------------------------------------------- events
+CREATED = "created"
+READY = "ready"
+STOLEN = "stolen"
+RUN_START = "run_start"
+RUN_END = "run_end"
+COMPLETED = "completed"
+FAILED = "failed"
+REQUEUED = "requeued"
+WORKER_DEAD = "worker_dead"
+RPC = "rpc"                     # one scheduler round-trip (the paper's RTT)
+
+TERMINAL = (COMPLETED, FAILED)
+
+
+@dataclass
+class TraceEvent:
+    t: float                    # seconds on the recorder's clock
+    event: str
+    task: Optional[str] = None
+    worker: Optional[str] = None
+    extra: dict = field(default_factory=dict)
+
+
+@dataclass
+class EngineTask:
+    """A unit of work submitted to the engine.
+
+    `fn` is an optional zero-arg callable producing the task's value (used
+    by the mpi-list adapter and examples); schedulers that execute by name
+    (dwork's `execute(name, meta)`, pmake's script runner) leave it None.
+    `slots` is the number of pool slots the task occupies while running
+    (pmake: nodes, `nrs`); `priority` is greedy-highest-first (pmake EFT).
+    """
+    name: str
+    fn: Optional[Callable[[], Any]] = None
+    deps: tuple = ()
+    meta: dict = field(default_factory=dict)
+    slots: int = 1
+    priority: float = 0.0
+
+
+@dataclass
+class TaskResult:
+    task: str
+    ok: bool
+    worker: str
+    t_start: float = 0.0        # real clock (perf_counter) run span
+    t_end: float = 0.0
+    value: Any = None
+    error: Optional[str] = None
+    virtual_s: float = 0.0      # injected straggler time (never slept)
+
+    @property
+    def duration_s(self) -> float:
+        return (self.t_end - self.t_start) + self.virtual_s
+
+
+class ManualClock:
+    """Deterministic clock for tests: advances `tick` seconds per call plus
+    whatever `advance()` adds.  Using it for both the trace recorder and the
+    task server's lease clock makes heartbeat/lease expiry a pure function
+    of the number of scheduler operations — no wall-clock dependence."""
+
+    def __init__(self, start: float = 0.0, tick: float = 0.0):
+        self.now = start
+        self.tick = tick
+
+    def __call__(self) -> float:
+        self.now += self.tick
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        self.now += dt
+        return self.now
+
+
+_seq = itertools.count()
+
+
+def next_seq() -> int:
+    """Monotonic tie-breaker for priority scheduling (stable FIFO)."""
+    return next(_seq)
+
+
+def real_clock() -> float:
+    return time.perf_counter()

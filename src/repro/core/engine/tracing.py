@@ -1,0 +1,173 @@
+"""Trace recorder + empirical overhead / METG analysis.
+
+The recorder is an append-only, thread-safe list of `TraceEvent`s stamped
+by an injectable clock.  Analysis turns an event stream into the paper's
+quantities *measured from the running system* rather than modelled:
+
+  * per-task overhead   — wall time not spent computing, per completed task
+                          (the paper's "well-understood per-task overhead")
+  * rpc_per_task_s      — scheduler round-trip time per task (dwork's 23 us
+                          RTT analog, measured at the server boundary)
+  * tasks_per_s         — dispatch throughput
+  * empirical METG      — task duration at which measured overhead equals
+                          compute (§3: eff = t / (t + overhead) = 50%)
+
+`crosscheck()` compares an empirical value against the analytic scaling
+laws in `repro.core.metg` and reports whether they agree to within an
+order of magnitude — the engine's validation loop for the models.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.engine.model import (COMPLETED, FAILED, REQUEUED, RPC,
+                                     RUN_END, RUN_START, STOLEN, TraceEvent,
+                                     real_clock)
+from repro.core.metg import same_order
+
+
+class TraceRecorder:
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self.clock = clock or real_clock
+        self.events: list[TraceEvent] = []
+        self._lock = threading.Lock()
+
+    def emit(self, event: str, task: Optional[str] = None,
+             worker: Optional[str] = None, **extra):
+        ev = TraceEvent(self.clock(), event, task, worker, extra)
+        with self._lock:
+            self.events.append(ev)
+        return ev
+
+    # ------------------------------------------------------------ queries
+    def of(self, event: str) -> list[TraceEvent]:
+        with self._lock:
+            return [e for e in self.events if e.event == event]
+
+    def count(self, event: str) -> int:
+        return len(self.of(event))
+
+    def span_s(self) -> float:
+        with self._lock:
+            if not self.events:
+                return 0.0
+            ts = [e.t for e in self.events]
+            return max(ts) - min(ts)
+
+    def report(self, workers: int = 1) -> "OverheadReport":
+        return OverheadReport.from_trace(self, workers=workers)
+
+
+@dataclass
+class OverheadReport:
+    """Empirical per-task overhead computed from an event stream."""
+    n_tasks: int = 0                 # tasks that reached a terminal event
+    n_failed: int = 0
+    n_requeued: int = 0
+    workers: int = 1
+    wall_s: float = 0.0
+    compute_s: float = 0.0           # sum of real run durations
+    virtual_s: float = 0.0           # injected straggler time (not walled)
+    rpc_s: float = 0.0               # total scheduler round-trip time
+    n_rpc: int = 0
+    dispatch_s: float = 0.0          # total stolen -> run_start latency
+
+    @classmethod
+    def from_trace(cls, trace: TraceRecorder, workers: int = 1
+                   ) -> "OverheadReport":
+        # pair lifecycle events sequentially per task: a requeued task
+        # re-executes and emits a second stolen/run_start/run_end triple,
+        # so last-write-wins dicts would pair across executions and
+        # produce negative durations
+        compute = virtual = dispatch = 0.0
+        open_start: dict = {}
+        open_steal: dict = {}
+        with trace._lock:
+            events = list(trace.events)
+        for e in events:
+            if e.event == STOLEN:
+                open_steal[e.task] = e.t
+            elif e.event == RUN_START:
+                open_start[e.task] = e.t
+                t_stolen = open_steal.pop(e.task, None)
+                if t_stolen is not None:
+                    dispatch += e.t - t_stolen
+            elif e.event == RUN_END:
+                t_start = open_start.pop(e.task, None)
+                if t_start is not None:
+                    compute += e.t - t_start
+                virtual += e.extra.get("virtual_s", 0.0)
+        rpcs = trace.of(RPC)
+        requeued = sum(e.extra.get("n", 1) for e in trace.of(REQUEUED))
+        return cls(
+            n_tasks=trace.count(COMPLETED) + trace.count(FAILED),
+            n_failed=trace.count(FAILED),
+            n_requeued=requeued,
+            workers=max(workers, 1),
+            wall_s=trace.span_s(),
+            compute_s=compute,
+            virtual_s=virtual,
+            rpc_s=sum(e.extra.get("dt", 0.0) for e in rpcs),
+            n_rpc=len(rpcs),
+            dispatch_s=dispatch,
+        )
+
+    # ------------------------------------------------------------ derived
+    @property
+    def tasks_per_s(self) -> float:
+        return self.n_tasks / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def per_task_overhead_s(self) -> float:
+        """Worker-seconds not spent computing, per terminal task.  With the
+        serial in-proc transport (workers=1) this is exactly
+        (wall - compute) / n: the scheduler's cost per task."""
+        if self.n_tasks == 0:
+            return 0.0
+        idle = self.wall_s * self.workers - self.compute_s
+        return max(idle, 0.0) / self.n_tasks
+
+    @property
+    def rpc_per_task_s(self) -> float:
+        """Server-side handling time per terminal task (dwork RTT analog)."""
+        return self.rpc_s / self.n_tasks if self.n_tasks else 0.0
+
+    @property
+    def queue_latency_per_task_s(self) -> float:
+        """Mean stolen -> run_start latency.  NOTE: includes time waiting
+        for a free slot (backlog), so it measures queue pressure, not pure
+        scheduler cost — use `rpc_per_task_s` / `per_task_overhead_s` for
+        overhead accounting."""
+        return self.dispatch_s / self.n_tasks if self.n_tasks else 0.0
+
+    def empirical_metg(self) -> float:
+        """Task duration at which measured overhead = compute (50% eff)."""
+        return self.per_task_overhead_s
+
+    def summary(self) -> dict:
+        return {
+            "n_tasks": self.n_tasks, "n_failed": self.n_failed,
+            "n_requeued": self.n_requeued, "workers": self.workers,
+            "wall_s": round(self.wall_s, 6),
+            "tasks_per_s": round(self.tasks_per_s, 1),
+            "per_task_overhead_us": round(self.per_task_overhead_s * 1e6, 2),
+            "rpc_per_task_us": round(self.rpc_per_task_s * 1e6, 2),
+            "empirical_metg_s": self.empirical_metg(),
+        }
+
+
+def crosscheck(scheduler: str, empirical_s: float, analytic_s: float,
+               factor: float = 10.0) -> dict:
+    """Cross-check an empirical overhead/METG against the analytic law
+    value from `repro.core.metg`.  `same_order` is True when the two agree
+    to within `factor` (default: one order of magnitude)."""
+    ratio = (empirical_s / analytic_s) if analytic_s > 0 else float("inf")
+    return {
+        "scheduler": scheduler,
+        "empirical_s": empirical_s,
+        "analytic_s": analytic_s,
+        "ratio": ratio,
+        "same_order": same_order(empirical_s, analytic_s, factor=factor),
+    }

@@ -54,6 +54,17 @@ class METGModel:
         sa, sb = fit_log({p: v for p, v in PAPER_MPILIST_SYNC.items()})
         return cls(jsrun_a=ja, jsrun_b=jb, sync_a=sa, sync_b=sb)
 
+    @classmethod
+    def from_measured(cls, *, launch_s: float = 0.0, alloc_s: float = 0.0,
+                      rtt_s: float = PAPER_DWORK_RTT) -> "METGModel":
+        """Instantiate the scaling laws with constants measured on the
+        running system (engine trace / benchmarks) instead of the paper's
+        Summit numbers: launch_s -> flat jsrun cost, rtt_s -> dwork
+        dispatch RTT.  Used by `engine.tracing.crosscheck` to validate the
+        law *shapes* against empirical event streams."""
+        return cls(jsrun_a=launch_s, jsrun_b=0.0, alloc=alloc_s,
+                   dwork_rtt=rtt_s)
+
     # -- scaling laws ------------------------------------------------------
     def jsrun_time(self, ranks: int) -> float:
         return self.jsrun_a + self.jsrun_b * math.log(max(ranks, 1))
@@ -78,6 +89,14 @@ class METGModel:
     def metg(self, scheduler: str, ranks: int, **kw) -> float:
         return {"pmake": self.pmake_metg, "dwork": self.dwork_metg,
                 "mpi-list": self.mpilist_metg}[scheduler](ranks, **kw)
+
+
+def same_order(a: float, b: float, factor: float = 10.0) -> bool:
+    """True when two positive quantities agree to within `factor` (default:
+    one order of magnitude) — the engine's empirical-vs-analytic check."""
+    if a <= 0.0 or b <= 0.0:
+        return False
+    return max(a, b) / min(a, b) <= factor
 
 
 def efficiency(task_time: float, metg: float) -> float:

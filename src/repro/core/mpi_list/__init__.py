@@ -4,9 +4,15 @@ A `Context` holds the communicator; a `DFM` (distributed free monoid) is an
 ordered global list with a contiguous ascending block per rank:
 rank p of P stores the subsequence starting at ``p*(N//P) + min(p, N%P)``.
 
-Two backends:
+Three backends:
   * in-process rank simulation (`Context(n_ranks)`) — semantics-exact SPMD,
     used by the data pipeline, tests, and METG benchmarks;
+  * engine-backed multi-rank mode (`Context(n_ranks, engine_workers=W)`) —
+    the map-family bulk steps (map / flatMap / filter) dispatch one task
+    per rank on the unified engine pool (`repro.core.engine`), with
+    seeded straggler injection feeding the Gumbel sync-gap law
+    (`Context.straggler_crosscheck`); reductions and data movement
+    (reduce / scan / repartition / group) stay in-process;
   * mesh bridge (`repro.core.mpi_list.mesh_ops`) — the same bulk ops lowered
     onto a jax mesh data axis (map -> sharded elementwise, reduce -> psum,
     scan -> associative prefix, repartition/group -> all-to-all), which is

@@ -4,6 +4,17 @@ The rank loop is sequential (one process), but every operation is expressed
 rank-locally — the same code shape as the mpi4py original — and the
 partition invariant (contiguous ascending blocks, paper §2.3) is enforced
 and property-tested.
+
+Engine-backed multi-rank mode: `Context(P, engine_workers=W)` dispatches
+the map-family bulk steps (map / flatMap / filter — the `_timed` path)
+as tasks on the unified engine pool (`repro.core.engine`), one task per
+rank per superstep — the BSP analog of the paper's Fig. 2 dispatch.
+Reductions and data movement (reduce / scan / repartition / group) stay
+in-process.  Seeded straggler injection (`straggler_sigma`) adds
+deterministic virtual jitter to per-rank times; the accumulated max-min
+sync gaps feed the Gumbel extreme-value law
+`METGModel.mpilist_metg(P, per_rank_sigma=sigma)` via
+`Context.straggler_crosscheck()`.
 """
 from __future__ import annotations
 
@@ -20,13 +31,31 @@ def partition_bounds(N: int, P: int, p: int) -> tuple[int, int]:
 
 class Context:
     """Communicator stand-in. `procs` ranks, rank-local jitter optional
-    (straggler modelling for the METG benchmark)."""
+    (straggler modelling for the METG benchmark).
 
-    def __init__(self, procs: int = 1, *, jitter: Optional[Callable[[int], float]] = None):
+    With `engine_workers` (or `straggler_sigma` > 0) set, bulk operations
+    run through the unified engine pool — one task per rank per superstep —
+    and per-step sync gaps are recorded in `self.gaps`/`self.rank_times`.
+    """
+
+    def __init__(self, procs: int = 1, *,
+                 jitter: Optional[Callable[[int], float]] = None,
+                 engine_workers: Optional[int] = None,
+                 straggler_sigma: float = 0.0, seed: int = 0):
         self.procs = procs
         self.rank = 0                   # in-proc: we "are" every rank in turn
         self.jitter = jitter
         self.sync_time = 0.0            # accumulated straggler gap (modelled)
+        self.engine_workers = engine_workers
+        self.straggler_sigma = straggler_sigma
+        self.seed = seed
+        self.engine_enabled = engine_workers is not None or straggler_sigma > 0
+        self.step = 0                   # superstep counter (engine mode)
+        self.gaps: list[float] = []     # per-step max-min rank-time gap
+        self.rank_times: list[list[float]] = []
+        # injected-jitter-only gaps: exactly reproducible for a fixed seed
+        # (real per-rank times always carry wall-clock noise)
+        self.virtual_gaps: list[float] = []
 
     # -- constructors ------------------------------------------------------
     def iterates(self, N: int) -> "DFM":
@@ -49,6 +78,64 @@ class Context:
         if per_rank_times:
             self.sync_time += max(per_rank_times) - min(per_rank_times)
 
+    # -- engine-backed superstep (one task per rank) -----------------------
+    def _engine_step(self, parts: list, g: Callable) -> list:
+        """Dispatch one bulk operation through the engine pool: rank p's
+        block becomes task `rank{p}.step{s}`; per-rank times (real + any
+        injected virtual straggler jitter) are recorded and synced."""
+        from repro.core.engine.executor import Engine
+        from repro.core.engine.faults import FaultPlan
+
+        faults = None
+        if self.straggler_sigma > 0:
+            faults = FaultPlan(seed=self.seed * 1_000_003 + self.step)
+            faults.stragglers(self.straggler_sigma)
+        workers = self.engine_workers or min(self.procs, 8)
+        eng = Engine(workers=max(workers, 1), transport="inproc",
+                     steal_n=max(1, self.procs // max(workers, 1)),
+                     faults=faults)
+        names = [f"rank{p}.step{self.step}" for p in range(self.procs)]
+        for p, blk in enumerate(parts):
+            eng.submit(names[p], fn=(lambda blk=blk: g(blk)))
+        report = eng.run()
+        out, times, virtuals = [], [], []
+        for p, name in enumerate(names):
+            res = report.results.get(name)
+            if res is None or not res.ok:
+                err = res.error if res is not None else "lost task"
+                raise RuntimeError(f"mpi-list rank {p} failed: {err}")
+            out.append(res.value)
+            dt = res.duration_s
+            if self.jitter is not None:
+                dt += self.jitter(p)
+            times.append(dt)
+            virtuals.append(res.virtual_s)
+        self.step += 1
+        self.rank_times.append(times)
+        self.gaps.append(max(times) - min(times))
+        self.virtual_gaps.append(max(virtuals) - min(virtuals))
+        self._sync(times)
+        return out
+
+    def straggler_crosscheck(self, factor: float = 10.0) -> dict:
+        """Empirical mean sync gap vs the Gumbel law sigma*sqrt(2 ln P)
+        (paper §3, ref [31]) evaluated at the injected sigma."""
+        from repro.core.engine.tracing import crosscheck
+        from repro.core.metg import METGModel
+
+        if not self.gaps:
+            raise ValueError("no engine-mode supersteps recorded")
+        if self.straggler_sigma <= 0.0:
+            raise ValueError(
+                "straggler_crosscheck needs injected jitter "
+                "(straggler_sigma > 0); with sigma=0 the model side would "
+                "fall back to the paper's Summit-fitted sync curve, which "
+                "says nothing about this run")
+        emp = sum(self.gaps) / len(self.gaps)
+        ana = METGModel.from_paper().mpilist_metg(
+            self.procs, per_rank_sigma=self.straggler_sigma)
+        return crosscheck("mpi-list", emp, ana, factor=factor)
+
 
 class DFM:
     """Distributed free monoid: list of per-rank blocks."""
@@ -69,6 +156,8 @@ class DFM:
         return self._timed(lambda blk: [x for x in blk if pred(x)])
 
     def _timed(self, g: Callable) -> "DFM":
+        if self.C.engine_enabled:
+            return DFM(self.C, self.C._engine_step(self.parts, g))
         out, times = [], []
         for p, blk in enumerate(self.parts):
             t0 = time.perf_counter()

@@ -5,16 +5,22 @@ script), executed with popen, logged to `rulename.n.log`.  {mpirun} expands
 per the ambient batch scheduler (Slurm srun / LSF jsrun / local fallback),
 as in the paper.  Completed outputs are trusted (file-sync restart);
 non-zero exit poisons transitive successors.
+
+Execution runs on the unified engine pool (`repro.core.engine`): tasks
+carry `slots` (= nrs nodes, clamped to the allocation) and the EFT
+priority; the engine's launch step is exactly the paper's "greedy
+highest-priority-first onto free nodes", and its trace provides the
+empirical per-task launch overhead that the METG jsrun law models.
 """
 from __future__ import annotations
 
 import os
 import subprocess
-import threading
 import time
 from pathlib import Path
 from typing import Callable, Optional
 
+from repro.core.engine.executor import Engine
 from repro.core.pmake.graph import Task, build_graph
 from repro.core.pmake.rules import parse_rules, parse_targets, staged_format
 
@@ -32,7 +38,8 @@ def detect_mpirun(resources) -> str:
 class PMake:
     def __init__(self, rules_text: str, targets_text: str, *, root: str = ".",
                  total_nodes: int = 1, poll: float = 0.02,
-                 runner: Optional[Callable] = None):
+                 runner: Optional[Callable] = None, transport: str = "thread",
+                 tracer=None, faults=None):
         self.root = Path(root)
         self.rules = parse_rules(rules_text)
         self.targets = parse_targets(targets_text)
@@ -40,6 +47,10 @@ class PMake:
         self.total_nodes = total_nodes
         self.poll = poll
         self.runner = runner          # override for tests/simulation
+        self.transport = transport    # engine transport ("thread"/"inproc")
+        self.tracer = tracer          # optional engine TraceRecorder
+        self.faults = faults          # optional engine FaultPlan
+        self.report = None            # EngineReport of the last run()
         self.log: list[dict] = []     # schedule trace
         self.errors: set[str] = set()
 
@@ -77,11 +88,14 @@ class PMake:
 
     # ------------------------------------------------------------------
     def run(self) -> dict:
-        """Greedy EFT loop; returns summary stats."""
+        """Greedy EFT run on the engine pool; returns summary stats.
+
+        The engine's launch step (sort stolen tasks by priority, fill free
+        slots) replaces the old popen polling loop; `slots` carries the
+        clamped node count so node-limited allocations serialize exactly
+        as before, and failures poison transitive successors server-side.
+        """
         done: set[str] = set()
-        running: dict[str, threading.Thread] = {}
-        results: dict[str, bool] = {}
-        free = self.total_nodes
         t0 = time.perf_counter()
 
         def outputs_exist(t: Task) -> bool:
@@ -92,62 +106,60 @@ class PMake:
             if t.outputs and outputs_exist(t):
                 done.add(k)
 
-        def runnable():
-            for k, t in self.tasks.items():
-                if (k in done or k in running or k in self.errors
-                        or not t.deps <= done):
-                    continue
-                if any(d in self.errors for d in t.deps):
-                    continue
-                yield t
-
-        def poison(key: str):
-            stack = [key]
+        # steal window = the whole task set: the launch step then sorts
+        # every ready task by EFT priority, reproducing the old loop's
+        # global "greedy highest-priority-first onto free nodes" (a narrow
+        # window would only prioritize within each stolen batch)
+        eng = Engine(workers=self.total_nodes, transport=self.transport,
+                     steal_n=max(4, len(self.tasks)), poll=self.poll,
+                     tracer=self.tracer, faults=self.faults)
+        # submit in dependency (topological) order: the task server
+        # forward-declares unknown deps as READY stubs and ignores a later
+        # duplicate Create, so a dependent submitted before its producer
+        # would silently drop the producer's own dependency edges
+        order, seen = [], set()
+        for root_key in self.tasks:
+            if root_key in seen:
+                continue
+            seen.add(root_key)
+            stack = [(root_key, iter(sorted(self.tasks[root_key].deps)))]
             while stack:
-                cur = stack.pop()
-                if cur in self.errors:
-                    continue
-                self.errors.add(cur)
-                stack.extend(self.tasks[cur].succs)
+                key, deps_it = stack[-1]
+                for d in deps_it:
+                    if d in self.tasks and d not in seen:
+                        seen.add(d)
+                        stack.append((d, iter(sorted(self.tasks[d].deps))))
+                        break
+                else:
+                    order.append(key)
+                    stack.pop()
+        for k in order:
+            t = self.tasks[k]
+            if k in done:
+                continue
+            eng.submit(k, deps=[d for d in t.deps if d not in done],
+                       priority=t.priority,
+                       slots=min(t.rule.resources.nrs, self.total_nodes),
+                       meta={"rule": t.rule.name})
+        report = eng.run(lambda name, meta: self._run_task(self.tasks[name]))
+        self.report = report
 
-        while len(done) + len(self.errors & set(self.tasks)) < len(self.tasks):
-            # launch as many as fit, highest priority first
-            cands = sorted(runnable(), key=lambda t: -t.priority)
-            for t in cands:
-                need = min(t.rule.resources.nrs, self.total_nodes)
-                if need > free:
-                    continue
-                free -= need
-
-                def work(task=t, need=need):
-                    ok = False
-                    try:
-                        ok = self._run_task(task)
-                    finally:
-                        results[task.key] = ok
-
-                th = threading.Thread(target=work, daemon=True)
-                running[t.key] = th
-                self.log.append({"task": t.key, "event": "start",
-                                 "t": time.perf_counter() - t0,
-                                 "priority": t.priority, "nodes": need})
-                th.start()
-            # reap
-            for k in list(running):
-                if k in results:
-                    running.pop(k).join()
-                    free += min(self.tasks[k].rule.resources.nrs,
-                                self.total_nodes)
-                    if results[k]:
-                        done.add(k)
-                    else:
-                        poison(k)
-                    self.log.append({"task": k, "event": "done",
-                                     "ok": results[k],
-                                     "t": time.perf_counter() - t0})
-            if not running and not any(True for _ in runnable()):
-                break
-            time.sleep(self.poll)
+        for name, res in report.results.items():
+            if res.ok:
+                done.add(name)
+        self.errors |= report.errors
+        # legacy schedule trace: start/done records interleaved in
+        # wall-clock order, as the old polling loop emitted them
+        records = []
+        for name, res in report.results.items():
+            t = self.tasks[name]
+            records.append({"task": name, "event": "start",
+                            "t": res.t_start - t0, "priority": t.priority,
+                            "nodes": min(t.rule.resources.nrs,
+                                         self.total_nodes)})
+            records.append({"task": name, "event": "done", "ok": res.ok,
+                            "t": res.t_end - t0})
+        self.log.extend(sorted(records, key=lambda r: r["t"]))
 
         return {"tasks": len(self.tasks), "done": len(done),
                 "errors": len(self.errors),

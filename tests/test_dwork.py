@@ -2,6 +2,9 @@
 failure poisoning, crash recovery, deque order, persistence (paper §2.2)."""
 import tempfile
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -98,6 +101,51 @@ def test_lease_timeout_requeues_stragglers():
     cl2 = Client(InProcTransport(srv), "fast")
     r = cl2.steal()                        # straggler's task re-stolen
     assert isinstance(r, TaskMsg) and r.tasks[0][0] == "a"
+
+
+def test_lease_requeue_front_once_no_double_complete():
+    """Regression: an expired lease re-queues the task to the FRONT of the
+    deque and bumps counters["requeued"] exactly once; when the straggling
+    worker later Completes, the stale ready entry must NOT be served (and
+    so never double-executed)."""
+    clock = {"now": 0.0}
+    srv = TaskServer(lease_timeout=1.0, clock=lambda: clock["now"])
+    slow = Client(InProcTransport(srv), "slow")
+    slow.create("a")
+    slow.create("b")
+    assert slow.steal().tasks[0][0] == "a"
+    clock["now"] = 2.0                     # lease on "a" expires
+    fast = Client(InProcTransport(srv), "fast")
+    r = fast.steal()                       # reap requeues "a" to the FRONT
+    assert r.tasks[0][0] == "a"            # ahead of "b" (LIFO re-insert)
+    assert srv.counters["requeued"] == 1
+    # straggler finally reports Complete — must be idempotent
+    slow.complete("a")
+    assert srv.counters["requeued"] == 1   # no double-requeue
+    assert srv.counters["completed"] == 1  # completed exactly once
+    assert fast.steal().tasks[0][0] == "b"
+    fast.complete("b")
+    assert isinstance(fast.steal(), ExitResp)
+
+
+def test_lease_requeue_stale_entry_never_served():
+    """Regression for the double-execution variant: lease expires, task is
+    requeued, the straggler Completes BEFORE anyone re-steals — the stale
+    ready entry must be skipped, not served again."""
+    clock = {"now": 0.0}
+    srv = TaskServer(lease_timeout=1.0, clock=lambda: clock["now"])
+    slow = Client(InProcTransport(srv), "slow")
+    slow.create("a")
+    assert slow.steal().tasks[0][0] == "a"
+    clock["now"] = 2.0
+    fast = Client(InProcTransport(srv), "fast")
+    srv._reap_leases()                     # "a" back on the ready deque
+    assert srv.counters["requeued"] == 1
+    slow.complete("a")                     # late completion wins
+    r = fast.steal()                       # stale "a" must be skipped
+    assert isinstance(r, ExitResp)         # all done; "a" not re-served
+    assert srv.counters["completed"] == 1
+    assert srv.counters["stolen"] == 1     # stolen once, ever
 
 
 def test_persistence_reconstructs_ready():

@@ -13,6 +13,10 @@ from repro.models.model import build_model
 from repro.optim.adamw import init_opt
 from repro.runtime.train_step import make_train_step
 
+# model forward/train smoke is minutes-long on CPU; the scheduler core must
+# give fast signal without it (CI runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 OPTS = Options(q_block=32, kv_block=32, moe_group=64)
 
 

@@ -1,6 +1,9 @@
 """mpi-list unit + property tests: the partition law and the monoid/functor
 laws the DFM must satisfy (paper §2.3)."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

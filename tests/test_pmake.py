@@ -3,6 +3,9 @@ priority, file-based restart, failure poisoning (paper §2.1)."""
 import tempfile
 from pathlib import Path
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
