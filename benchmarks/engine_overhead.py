@@ -5,9 +5,18 @@ Seeds the repo's perf trajectory: every future scaling PR (forwarding
 trees, async serving, multi-backend) should move these numbers, and the
 empirical-vs-analytic METG crosscheck keeps the `core/metg.py` laws
 honest against the running code.
+
+Modes:
+    (default)   quick run -> BENCH_engine.json (+ stdout)
+    --full      2000 tasks instead of 300
+    --sweep     steal_n x shards x transport sweep -> BENCH_engine_sweep.json
+    --check     quick dwork run compared against the committed
+                BENCH_engine.json; exits non-zero if per-task overhead
+                regressed > CHECK_TOLERANCE (the CI perf gate)
 """
 from __future__ import annotations
 
+import gc
 import json
 import sys
 import tempfile
@@ -21,23 +30,57 @@ from repro.core.mpi_list import Context
 from repro.core.pmake import PMake
 
 WORKER_COUNTS = (1, 4, 16)
+CHECK_TOLERANCE = 1.25          # CI fails if overhead grows > 25%
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BASELINE = REPO_ROOT / "BENCH_engine.json"
+SWEEP_OUT = REPO_ROOT / "BENCH_engine_sweep.json"
 
 
-def bench_dwork(n_tasks: int, workers: int, steal_n: int = 4) -> dict:
-    srv = TaskServer()
-    boss = Client(InProcTransport(srv), "boss")
-    for i in range(n_tasks):
-        boss.create(f"t{i}", meta={"x": i})
-    rep = run_pool(srv, lambda name, meta: (True, meta["x"] * 2),
-                   workers=workers, steal_n=steal_n)
-    ov = rep.overhead()
+def _dwork_once(n_tasks: int, workers: int, steal_n: int,
+                shards: int, transport: str):
+    if shards > 1:
+        from repro.core.dwork.sharded import ShardedHub
+        srv = ShardedHub(shards)
+        for i in range(n_tasks):
+            srv.create(f"t{i}", meta={"x": i})
+    else:
+        srv = TaskServer()
+        boss = Client(InProcTransport(srv), "boss")
+        for i in range(n_tasks):
+            boss.create(f"t{i}", meta={"x": i})
+    return run_pool(srv, lambda name, meta: (True, meta["x"] * 2),
+                    workers=workers, steal_n=steal_n, transport=transport)
+
+
+def bench_dwork(n_tasks: int, workers: int, steal_n: int = 4,
+                shards: int = 1, transport: str = "inproc",
+                repeats: int = 3) -> dict:
+    # best-of-N: scheduler/GC hiccups only ever ADD time, so the minimum
+    # is the stable estimate of per-task cost — and both the committed
+    # baseline and the CI --check gate use the same estimator, which
+    # keeps the 25% regression tolerance meaningful
+    best = None
+    for _ in range(max(repeats, 1)):
+        gc.collect()
+        rep_i = _dwork_once(n_tasks, workers, steal_n, shards, transport)
+        ov_i = rep_i.overhead()
+        if best is None or ov_i.per_task_overhead_s < best[1].per_task_overhead_s:
+            best = (rep_i, ov_i)
+    rep, ov = best
     model = METGModel.from_measured(rtt_s=ov.rpc_per_task_s)
     # rpc_per_task_s is already amortized over the Steal-n batch, so the
-    # analytic law is evaluated at steal_n=1 (no double-counting)
+    # analytic law is evaluated at steal_n=1 (no double-counting).  The
+    # law's P is the number of CONCURRENT clients hammering the server,
+    # which for the serial inline transports is ov.workers == 1, not the
+    # configured pool size — evaluating at the pool size would predict a
+    # 16x dispatch bound that a serial dispatch loop never exhibits.
+    # The reported "workers" field IS the configured pool size
+    # (rep.pool_workers).
     return {
         **ov.summary(),
+        "workers": rep.pool_workers,
         "crosscheck": crosscheck("dwork", ov.per_task_overhead_s,
-                                 model.dwork_metg(workers)),
+                                 model.dwork_metg(ov.workers)),
         "rtt_vs_paper": crosscheck("dwork-rtt", ov.rpc_per_task_s,
                                    PAPER_DWORK_RTT, factor=30.0),
     }
@@ -56,6 +99,7 @@ def bench_pmake(n_tasks: int, workers: int) -> dict:
     model = METGModel.from_measured(launch_s=ov.rpc_per_task_s)
     return {
         **ov.summary(),
+        "workers": pm.report.pool_workers,
         "done": stats["done"],
         "crosscheck": crosscheck("pmake", ov.per_task_overhead_s,
                                  model.pmake_metg(workers)),
@@ -80,9 +124,34 @@ def bench_mpilist(n_items: int, workers: int, ranks: int = 16,
     }
 
 
+def _warmup():
+    """One throwaway run so the measured runs see warm bytecode/caches
+    (the first dispatch loop of a process is ~2x slower)."""
+    bench_dwork(100, 1)
+    gc.collect()
+
+
+def _calibrate_us() -> float:
+    """Machine-speed probe: a pure-Python spin loop, independent of the
+    code under test.  Committed alongside the baseline so the --check
+    gate can scale absolute microsecond limits when it runs on slower
+    hardware (e.g. a shared CI runner) than the machine that produced
+    the baseline."""
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        total = 0
+        for i in range(100000):
+            total += i * i
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
 def run(quick: bool = True) -> dict:
     n = 300 if quick else 2000
-    out = {"n_tasks": n, "schedulers": {}}
+    _warmup()
+    out = {"n_tasks": n, "calibration_us": round(_calibrate_us(), 1),
+           "schedulers": {}}
     for name, fn in (("dwork", bench_dwork), ("pmake", bench_pmake),
                      ("mpi-list", bench_mpilist)):
         out["schedulers"][name] = {
@@ -90,10 +159,88 @@ def run(quick: bool = True) -> dict:
     return out
 
 
+def run_sweep(quick: bool = True) -> dict:
+    """steal_n x shards x transport sweep for the dwork adapter — the
+    perf trajectory for the engine's three dispatch knobs.  The tree
+    transport forwards to a single hub, so tree x shards>1 cells are
+    skipped (shard the hub behind the tree instead)."""
+    n = 300 if quick else 2000
+    workers = 4
+    _warmup()
+    out = {"n_tasks": n, "workers": workers, "cells": []}
+    for transport in ("inproc", "thread", "tree"):
+        for shards in (1, 2, 4):
+            if transport == "tree" and shards > 1:
+                continue
+            for steal_n in (1, 4, 8):
+                r = bench_dwork(n, workers, steal_n=steal_n,
+                                shards=shards, transport=transport)
+                out["cells"].append({
+                    "transport": transport, "shards": shards,
+                    "steal_n": steal_n,
+                    "tasks_per_s": r["tasks_per_s"],
+                    "per_task_overhead_us": r["per_task_overhead_us"],
+                    "rpc_per_task_us": r["rpc_per_task_us"],
+                })
+    return out
+
+
+def run_check() -> int:
+    """CI perf gate: re-measure dwork and fail (exit 1) if per-task
+    overhead regressed more than CHECK_TOLERANCE vs the committed
+    baseline.  Both sides are best-of-repeats (bench_dwork), so one
+    noisy CI scheduling hiccup can't fail the build."""
+    baseline = json.loads(BASELINE.read_text())
+    committed = baseline["schedulers"]["dwork"]
+    _warmup()
+    # absolute microseconds don't transfer across machines: scale the
+    # committed limits by the calibration-loop ratio (>= 1 only — a
+    # faster machine must still beat the baseline, and the relaxation is
+    # capped so a broken calibration can't grant unlimited slack)
+    scale = 1.0
+    base_cal = baseline.get("calibration_us")
+    if base_cal:
+        scale = min(max(_calibrate_us() / base_cal, 1.0), 4.0)
+    print(f"machine-speed scale vs baseline: {scale:.2f}x")
+    failures = []
+    for w in WORKER_COUNTS:
+        base = committed[f"workers={w}"]["per_task_overhead_us"]
+        limit = base * CHECK_TOLERANCE * scale
+        # a regression must reproduce: CPU-throttling bursts on shared
+        # runners can span one best-of-5 window, so an over-limit result
+        # gets two fresh re-measurements (with a settle pause) and fails
+        # only if every attempt exceeds the limit
+        best = None
+        for attempt in range(3):
+            meas = bench_dwork(300, w, repeats=5)["per_task_overhead_us"]
+            best = meas if best is None else min(best, meas)
+            if best <= limit:
+                break
+            time.sleep(2)
+        status = "OK" if best <= limit else "REGRESSED"
+        print(f"dwork workers={w}: {best:.2f}us vs baseline {base:.2f}us "
+              f"(limit {limit:.2f}us) {status}")
+        if best > limit:
+            failures.append(w)
+    if failures:
+        print(f"perf regression at workers={failures} "
+              f"(> {CHECK_TOLERANCE:.0%} of committed BENCH_engine.json)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(run_check())
     quick = "--full" not in sys.argv
-    result = run(quick=quick)
-    path = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
-    path.write_text(json.dumps(result, indent=1, default=str))
-    print(json.dumps(result, indent=1, default=str))
-    print(f"\nwrote {path}", file=sys.stderr)
+    if "--sweep" in sys.argv:
+        result = run_sweep(quick=quick)
+        SWEEP_OUT.write_text(json.dumps(result, indent=1, default=str))
+        print(json.dumps(result, indent=1, default=str))
+        print(f"\nwrote {SWEEP_OUT}", file=sys.stderr)
+    else:
+        result = run(quick=quick)
+        BASELINE.write_text(json.dumps(result, indent=1, default=str))
+        print(json.dumps(result, indent=1, default=str))
+        print(f"\nwrote {BASELINE}", file=sys.stderr)

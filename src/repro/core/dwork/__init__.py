@@ -10,13 +10,14 @@ The paper's ZeroMQ+protobuf+TKRZW stack is adapted to an offline-friendly
 equivalent: length-prefixed msgpack over TCP, plus an in-proc transport for
 overhead benchmarks, and file persistence with ready-state reconstruction.
 """
-from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
-                                  Steal, TaskMsg, Transfer)
+from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
+                                  ExitResp, NotFound, Steal, TaskMsg,
+                                  Transfer)
 from repro.core.dwork.server import TaskServer
 from repro.core.dwork.client import Client, InProcTransport, TCPTransport
 from repro.core.dwork.forwarder import Forwarder
 from repro.core.dwork.pool import run_pool
 
-__all__ = ["Create", "Steal", "Complete", "Transfer", "Exit", "TaskMsg",
-           "NotFound", "ExitResp", "TaskServer", "Client", "InProcTransport",
-           "TCPTransport", "Forwarder", "run_pool"]
+__all__ = ["Create", "Steal", "Complete", "CompleteSteal", "Transfer",
+           "Exit", "TaskMsg", "NotFound", "ExitResp", "TaskServer", "Client",
+           "InProcTransport", "TCPTransport", "Forwarder", "run_pool"]

@@ -1,8 +1,15 @@
 """dwork wire API (paper Table 2).
 
 Queries:  Create(task, deps) | Steal(worker, n) | Complete(worker, task)
-          | Transfer(worker, task, new_deps) | Exit(worker)
+          | CompleteSteal(worker, done, n) | Transfer(worker, task, new_deps)
+          | Exit(worker)
 Responses: TaskMsg(tasks) | NotFound | ExitResp
+
+`CompleteSteal` is the Fig. 2 batch-then-drain rhythm collapsed into one
+round-trip: a worker reports every task it finished since its last call
+and (optionally) steals its next batch in the same message, so `steal_n`
+amortizes both directions of the protocol.  With `n=0` it degenerates to
+a batched Complete.
 
 Workers are strings; tasks are (name, meta-dict) — the protobuf analog.
 Serialization is msgpack (JSON fallback) with a one-byte tag.
@@ -57,6 +64,16 @@ class Complete:
 
 
 @dataclass
+class CompleteSteal:
+    """Piggyback a batch of completions onto the next steal (one RTT for
+    both protocol directions).  `done` is [(task, ok), ...]; `n=0` means
+    complete-only (the response is ExitResp, not a steal result)."""
+    worker: str
+    done: list = field(default_factory=list)
+    n: int = 0
+
+
+@dataclass
 class Transfer:
     """Replace a running task back into the queue with NEW dependencies
     (paper: dynamic task graphs; cycles via Transfer are the documented
@@ -92,9 +109,9 @@ class Stats:
 
 
 _TAGS = {"Create": Create, "Steal": Steal, "Complete": Complete,
-         "Transfer": Transfer, "Exit": Exit, "TaskMsg": TaskMsg,
-         "NotFound": NotFound, "ExitResp": ExitResp, "Stats": Stats,
-         "Release": Release}
+         "CompleteSteal": CompleteSteal, "Transfer": Transfer, "Exit": Exit,
+         "TaskMsg": TaskMsg, "NotFound": NotFound, "ExitResp": ExitResp,
+         "Stats": Stats, "Release": Release}
 
 
 def encode(msg) -> bytes:

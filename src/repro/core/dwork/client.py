@@ -12,9 +12,9 @@ import struct
 import threading
 from typing import Callable, Optional
 
-from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
-                                  Stats, Steal, TaskMsg, Transfer, decode,
-                                  encode, encode_stats)
+from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
+                                  ExitResp, NotFound, Stats, Steal, TaskMsg,
+                                  Transfer, decode, encode, encode_stats)
 from repro.core.dwork.server import TaskServer
 
 
@@ -113,6 +113,12 @@ class Client:
     def complete(self, task: str, ok: bool = True):
         return self.t.request(Complete(worker=self.worker, task=task, ok=ok))
 
+    def complete_steal(self, done, n: int = 0):
+        """Report a batch of finished tasks and steal the next batch in the
+        same round-trip (`done` is [(task, ok), ...]; n=0 completes only)."""
+        return self.t.request(CompleteSteal(worker=self.worker,
+                                            done=list(done), n=n))
+
     def transfer(self, task: str, new_deps):
         return self.t.request(Transfer(worker=self.worker, task=task,
                                        new_deps=list(new_deps)))
@@ -128,12 +134,16 @@ class Client:
                  max_idle: int = 1000):
         """CLIENT-LOOP from Fig. 2: steal -> execute -> complete, until the
         server responds Exit.  `execute` returns success; failures are
-        reported (error poisoning on the server)."""
+        reported (error poisoning on the server).  The finished batch rides
+        on the next steal (`CompleteSteal`), so each loop iteration costs
+        one round-trip regardless of `steal_n`."""
         import time as _time
         idle = 0
         done = 0
+        finished: list = []
         while True:
-            resp = self.steal(n=steal_n)
+            resp = self.complete_steal(finished, n=steal_n)
+            finished = []
             if isinstance(resp, ExitResp):
                 return done
             if isinstance(resp, NotFound):
@@ -149,5 +159,5 @@ class Client:
                     ok = execute(name, meta)
                 except Exception:
                     ok = False
-                self.complete(name, ok=ok)
+                finished.append((name, ok))
                 done += 1

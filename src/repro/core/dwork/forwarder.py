@@ -1,49 +1,180 @@
 """Message-forwarding tree (paper §4: 2-level rack-leader tree on Summit).
 
-A Forwarder accepts downstream dwork connections and relays every frame to
-a single upstream connection — maintaining constant open connections per
-rack and avoiding per-worker TCP setup at the hub.  Chaining forwarders
-builds deeper trees for larger machines.
+A Forwarder accepts downstream dwork connections and relays every frame
+over ONE shared upstream connection — constant open connections per rack
+leader, no per-worker TCP setup at the hub.  Chaining forwarders builds
+deeper trees for larger machines (`Engine(transport="tree")` assembles
+one automatically).
+
+Relaying is pipelined: a downstream handler enqueues its frame and waits
+on its own reply slot while other handlers keep sending, so frames from
+different downstream connections overlap on the upstream link instead of
+serializing one round-trip at a time.  Request/response matching uses the
+upstream connection's FIFO ordering as the tag: replies are handed back
+in the order frames were sent (the upstream hub serves one connection's
+frames in order, so this is exact).
+
+Failure behavior: an upstream error wakes every waiting handler, closes
+the downstream connections (both directions — no half-open relays), and
+is surfaced on `Forwarder.upstream_error` instead of being swallowed.
 """
 from __future__ import annotations
 
 import socket
 import socketserver
-import struct
 import threading
+import time
+from collections import deque
 
 from repro.core.dwork.client import _recv_frame, _send_frame
 
 
+class _Reply:
+    """One-shot reply slot a downstream handler waits on."""
+
+    __slots__ = ("event", "frame")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.frame = None
+
+    def set(self, frame):
+        self.frame = frame
+        self.event.set()
+
+
 class _RelayHandler(socketserver.BaseRequestHandler):
     def handle(self):
-        up = socket.create_connection(self.server.upstream)
-        up.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         try:
             while True:
                 frame = _recv_frame(self.request)
                 if frame is None:
-                    return
-                with self.server.up_lock:
-                    _send_frame(up, frame)
-                    resp = _recv_frame(up)
-                if resp is None:
-                    return
+                    return                    # downstream closed cleanly
+                resp = self.server.relay(frame)
                 _send_frame(self.request, resp)
+        except ConnectionError:
+            # upstream died (or an abrupt downstream disconnect raced a
+            # send): close our side so the client sees the failure now
+            # instead of hanging on a half-open relay
+            pass
         finally:
-            up.close()
+            try:
+                self.request.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            self.request.close()
 
 
 class Forwarder(socketserver.ThreadingTCPServer):
     allow_reuse_address = True
     daemon_threads = True
 
-    def __init__(self, addr, upstream):
+    def __init__(self, addr, upstream, *, tracer=None, label: str = "fwd"):
         super().__init__(addr, _RelayHandler)
         self.upstream = upstream
-        self.up_lock = threading.Lock()
+        self.tracer = tracer                  # emits one `rpc` per hop
+        self.label = label
+        self.upstream_error: str | None = None
+        self.relayed = 0                      # frames relayed upstream
+        self.reply_timeout = 60.0             # per-request wait, seconds
+        self._up_sock = None                  # lazily-opened shared link
+        self._send_lock = threading.Lock()    # orders sends + FIFO tags
+        self._pending: deque[_Reply] = deque()
+        self._pending_lock = threading.Lock()
+        self._reader: threading.Thread | None = None
 
+    # ------------------------------------------------------------- relay
+    def _ensure_upstream(self):
+        if self._up_sock is None:
+            sock = socket.create_connection(self.upstream)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._up_sock = sock
+            self._reader = threading.Thread(target=self._read_upstream,
+                                            daemon=True)
+            self._reader.start()
+        return self._up_sock
+
+    def relay(self, frame: bytes) -> bytes:
+        """Send one frame upstream, return its response.  Thread-safe and
+        pipelined: the send lock is held only while writing, never across
+        the upstream round-trip."""
+        reply = _Reply()
+        t0 = time.perf_counter()
+        with self._send_lock:
+            if self.upstream_error is not None:
+                raise ConnectionError(self.upstream_error)
+            # local snapshot: the reader thread may null self._up_sock on
+            # an upstream error mid-send; sendall on the closed local
+            # socket raises OSError (handled), never AttributeError
+            sock = self._ensure_upstream()
+            with self._pending_lock:
+                self._pending.append(reply)
+            try:
+                _send_frame(sock, frame)
+            except OSError as e:
+                self._fail(repr(e))
+                raise ConnectionError(self.upstream_error) from e
+            self.relayed += 1
+            if self.upstream_error is not None:
+                # the reader failed while we were sending: our slot may
+                # have been appended after _fail drained the FIFO, so
+                # nobody would ever wake us — fail fast instead
+                with self._pending_lock:
+                    try:
+                        self._pending.remove(reply)
+                    except ValueError:
+                        pass
+                raise ConnectionError(self.upstream_error)
+        if not reply.event.wait(timeout=self.reply_timeout):
+            # transient stall: abandon THIS request only.  The slot stays
+            # in the FIFO (a late response is absorbed by it, keeping
+            # request/response matching aligned) and the shared link
+            # survives for every other downstream client.
+            raise ConnectionError("upstream response timed out")
+        if reply.frame is None:
+            raise ConnectionError(self.upstream_error or "upstream closed")
+        if self.tracer is not None:
+            self.tracer.emit("rpc", op=f"hop:{self.label}",
+                             dt=time.perf_counter() - t0)
+        return reply.frame
+
+    def _read_upstream(self):
+        sock = self._up_sock
+        try:
+            while True:
+                resp = _recv_frame(sock)
+                if resp is None:
+                    raise ConnectionError("upstream closed")
+                with self._pending_lock:
+                    reply = self._pending.popleft()
+                reply.set(resp)
+        except Exception as e:                # noqa: BLE001
+            self._fail(repr(e))
+
+    def _fail(self, error: str):
+        """Surface an upstream failure: record it, wake every waiter with
+        an empty reply, and close the shared link (both directions die —
+        handlers propagate by closing their downstream sockets)."""
+        if self.upstream_error is None:
+            self.upstream_error = error
+        with self._pending_lock:
+            waiters, self._pending = list(self._pending), deque()
+        for reply in waiters:
+            reply.set(None)
+        sock, self._up_sock = self._up_sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------ control
     def serve_background(self) -> threading.Thread:
         th = threading.Thread(target=self.serve_forever, daemon=True)
         th.start()
         return th
+
+    def close(self):
+        self.shutdown()
+        self._fail("forwarder closed")
+        self.server_close()

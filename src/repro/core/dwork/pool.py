@@ -16,20 +16,36 @@ from typing import Callable, Optional
 def run_pool(server, execute: Optional[Callable] = None, *,
              workers: int = 4, steal_n: int = 1, transport: str = "inproc",
              tracer=None, faults=None, clock=None, poll: float = 0.001,
-             **engine_kw):
+             tree_fanout: int = 4, tree_levels: int = 1, **engine_kw):
     """Run every task on `server` to a terminal state through the engine
     pool.  `server` is a `TaskServer` or a `ShardedHub`;
     `execute(name, meta)` returns bool | (ok, value) | None (success).
-    Returns the `EngineReport` (results, trace, errors, backend stats)."""
+    With `transport="tree"` every worker RPC crosses a forwarding tree
+    (`tree_fanout` workers per leaf Forwarder, `tree_levels` relay
+    layers) in front of the server.  Returns the `EngineReport` (results,
+    trace, errors, backend stats)."""
     # lazy import: repro.core.engine.backends imports dwork submodules,
     # so importing at module scope would create a package-level cycle
     from repro.core.dwork.sharded import ShardedHub
-    from repro.core.engine.backends import ServerBackend, ShardedBackend
+    from repro.core.engine.backends import (ServerBackend, ShardedBackend,
+                                            TreeBackend)
     from repro.core.engine.executor import Engine
 
     if isinstance(server, ShardedHub):
+        if transport == "tree":
+            raise ValueError("tree transport forwards to a single hub; "
+                             "pass a TaskServer")
         backend = ShardedBackend(hub=server, tracer=tracer)
         lease = server.shards[0].lease_timeout if server.shards else None
+    elif transport == "tree":
+        # the Forwarders capture the tracer at construction, so it must
+        # exist BEFORE the tree is built or hop events are silently lost
+        from repro.core.engine.tracing import TraceRecorder
+        tracer = tracer or TraceRecorder(clock=clock)
+        backend = TreeBackend(server=server, workers=workers,
+                              fanout=tree_fanout, levels=tree_levels,
+                              tracer=tracer)
+        lease = server.lease_timeout
     else:
         backend = ServerBackend(server=server, tracer=tracer)
         lease = server.lease_timeout
@@ -40,4 +56,8 @@ def run_pool(server, execute: Optional[Callable] = None, *,
     eng = Engine(workers=workers, transport=transport, steal_n=steal_n,
                  backend=backend, tracer=tracer, faults=faults, clock=clock,
                  poll=poll, **engine_kw)
-    return eng.run(execute)
+    try:
+        return eng.run(execute)
+    finally:
+        if transport == "tree":
+            backend.close()     # run_pool owns the tree's sockets/threads

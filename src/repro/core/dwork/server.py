@@ -21,8 +21,9 @@ from collections import deque
 from pathlib import Path
 from typing import Callable, Optional
 
-from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
-                                  Release, Stats, Steal, TaskMsg, Transfer)
+from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
+                                  ExitResp, NotFound, Release, Stats, Steal,
+                                  TaskMsg, Transfer)
 
 
 class TaskServer:
@@ -33,6 +34,7 @@ class TaskServer:
         self.ready: deque[str] = deque()
         self.assigned: dict[str, set] = {}    # worker -> {task}
         self.lease: dict[str, float] = {}     # task -> steal time
+        self.requeued_tasks: set[str] = set()  # may have duplicate holders
         self.completed: set[str] = set()
         self.errors: set[str] = set()
         self.lease_timeout = lease_timeout
@@ -46,12 +48,14 @@ class TaskServer:
     # ------------------------------------------------------------------ API
     def handle(self, msg):
         with self.lock:
-            if isinstance(msg, Create):
-                return self._create(msg)
+            if isinstance(msg, CompleteSteal):
+                return self._complete_steal(msg)
             if isinstance(msg, Steal):
                 return self._steal(msg)
             if isinstance(msg, Complete):
                 return self._complete(msg)
+            if isinstance(msg, Create):
+                return self._create(msg)
             if isinstance(msg, Transfer):
                 return self._transfer(msg)
             if isinstance(msg, Exit):
@@ -101,14 +105,26 @@ class TaskServer:
         return NotFound()
 
     def _complete(self, msg: Complete):
-        t = msg.task
-        self.assigned.get(msg.worker, set()).discard(t)
+        self._finish(msg.worker, msg.task, msg.ok)
+        return ExitResp()
+
+    def _finish(self, worker: str, t: str, ok: bool):
+        self.assigned.get(worker, set()).discard(t)
         self.lease.pop(t, None)
+        if t in self.requeued_tasks:
+            # the task was requeued (lease expiry / Exit) so it may have
+            # been re-stolen: a terminal task's assignment is stale
+            # wherever it lives — clear every holder (exactly-once
+            # terminal).  Never-requeued tasks (the hot path) have
+            # exactly one holder and skip the all-workers scan.
+            self.requeued_tasks.discard(t)
+            for held in self.assigned.values():
+                held.discard(t)
         if t in self.completed:
-            return ExitResp()                 # exactly-once: idempotent
-        if not msg.ok:
+            return                            # exactly-once: idempotent
+        if not ok:
             self._poison(t)
-            return ExitResp()
+            return
         self.completed.add(t)
         self.counters["completed"] += 1
         for succ in self.joins.get(t, [0, []])[1]:
@@ -116,7 +132,15 @@ class TaskServer:
             j[0] -= 1
             if j[0] == 0 and succ not in self.completed:
                 self.ready.append(succ)
-        return ExitResp()
+
+    def _complete_steal(self, msg: CompleteSteal):
+        """Fig. 2 batch-then-drain in one round-trip: apply the finished
+        batch, then serve the next steal — all under one lock hold."""
+        for t, ok in msg.done:
+            self._finish(msg.worker, t, ok)
+        if msg.n <= 0:
+            return ExitResp()                 # complete-only
+        return self._steal(Steal(worker=msg.worker, n=msg.n))
 
     def _transfer(self, msg: Transfer):
         """Move a task back from worker to manager, adding dependencies.
@@ -142,6 +166,7 @@ class TaskServer:
         for t in sorted(self.assigned.pop(msg.worker, set())):
             self.lease.pop(t, None)
             self.ready.appendleft(t)
+            self.requeued_tasks.add(t)
             self.counters["requeued"] += 1
         return ExitResp()
 
@@ -177,6 +202,7 @@ class TaskServer:
                 ts.discard(t)
             self.lease.pop(t, None)
             self.ready.appendleft(t)
+            self.requeued_tasks.add(t)
             self.counters["requeued"] += 1
 
     def _all_done(self) -> bool:

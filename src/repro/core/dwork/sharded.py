@@ -18,8 +18,9 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
-from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
-                                  Release, Steal, TaskMsg)
+from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
+                                  ExitResp, NotFound, Release, Steal,
+                                  TaskMsg)
 from repro.core.dwork.server import TaskServer
 
 
@@ -97,6 +98,22 @@ class ShardedHub:
     def complete(self, worker: str, task: str, shard: int, ok: bool = True):
         return self.shards[shard].handle(Complete(worker=f"{worker}@{shard}",
                                                   task=task, ok=ok))
+
+    def complete_steal(self, worker: str, done, n: int = 0,
+                       affinity: Optional[int] = None):
+        """The batched CompleteSteal verb generalized over shards: `done`
+        is [(task, ok, shard), ...] — completions are grouped per serving
+        shard and applied first, then the next steal is served.  Returns
+        (response, shard) like `steal`."""
+        by_shard: dict[int, list] = {}
+        for name, ok, shard in done:
+            by_shard.setdefault(shard, []).append((name, ok))
+        for shard, batch in by_shard.items():
+            self.shards[shard].handle(
+                CompleteSteal(worker=f"{worker}@{shard}", done=batch, n=0))
+        if n <= 0:
+            return ExitResp(), -1
+        return self.steal(worker, n=n, affinity=affinity)
 
     def exit_worker(self, worker: str):
         """Node failure: recycle the worker's assignment on every shard

@@ -8,22 +8,50 @@ makes that claim *measurable* in one place instead of three ad-hoc loops:
     model.py     Task / TaskResult / TraceEvent lifecycle data model
                  (created -> ready -> stolen -> running -> completed/
                   failed/requeued), mapped to the paper's Fig. 2 protocol
-    backends.py  scheduler state adapters (dwork TaskServer, ShardedHub)
-                 speaking the Table 2 verbs; every call timed as an `rpc`
-    executor.py  the worker pool: inproc + threaded transports, Steal-n
-                 batching, sharded routing, slots/priority (pmake EFT)
+    backends.py  scheduler state adapters (dwork TaskServer, ShardedHub,
+                 forwarding-tree TreeBackend) speaking the Table 2 verbs
+                 incl. the batched CompleteSteal; every call timed as an
+                 `rpc` event (tree hops as `op="hop:L<k>"`)
+    executor.py  the worker pool: inproc / thread / tree transports,
+                 CompleteSteal piggybacking (complete+steal in one RTT),
+                 Steal-n batching, sharded routing, heap-scheduled
+                 slots/priority launch (pmake EFT)
     faults.py    heartbeat leases, dead-worker requeue, seeded fault and
                  straggler injection (no wall-clock dependence in tests)
-    tracing.py   empirical per-task overhead + METG from event streams,
-                 cross-checked against the analytic laws in core/metg.py
+    tracing.py   empirical per-task overhead + METG from event streams
+                 (optionally rpc-sampled), cross-checked against the
+                 analytic laws in core/metg.py
 
 Scheduler adapters built on this substrate:
     dwork    `repro.core.dwork.pool.run_pool`  (TaskServer / ShardedHub)
     pmake    `repro.core.pmake.PMake.run`      (slots=nodes, EFT priority)
     mpi-list `repro.core.mpi_list.Context(..., engine_workers=...)`
+
+Tuning `transport=` / `steal_n` against the METG laws (core/metg.py):
+
+  * dwork's dispatch bound is METG(P) = rtt * P / (steal_n * shards)
+    (§3, Table 4).  `steal_n` is the cheapest lever: it divides BOTH
+    protocol directions now that completions piggyback on the next steal
+    (`CompleteSteal`), at the cost of coarser work distribution — keep
+    steal_n * task_duration well under the straggler horizon, and below
+    the DAG's width / P so the tail of a batch can't serialize a level.
+  * `transport="inproc"` measures pure scheduler cost (deterministic;
+    use it for METG benchmarking and fault tests).  `transport="thread"`
+    adds real concurrency for blocking tasks — use when task bodies hold
+    the GIL < ~50% (popen'd scripts, I/O).  `transport="tree"` inserts a
+    real forwarding tree (paper §4) in front of the hub: per-task rtt
+    RISES by the per-hop relay cost (visible under `rpc_by_op` as
+    `hop:L<k>`), but open connections at the hub drop from P to
+    P/fanout^levels — pick it when connection count, not rtt, is the
+    binding constraint, and size `tree_fanout` so each relay stays below
+    ~fanout concurrent downstream frames per upstream round-trip.
+  * `shards=N` multiplies dispatch rate by N for independent-task loads;
+    cross-shard dependencies pay a proxy/notify round-trip, so shard
+    only DAGs whose cut between shards is small (hash routing makes the
+    cut ~ (1 - 1/N) of edges — prefer wide, shallow graphs).
 """
 from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
-                                        ShardedBackend)
+                                        ShardedBackend, TreeBackend)
 from repro.core.engine.executor import Engine, EngineReport
 from repro.core.engine.faults import FaultPlan
 from repro.core.engine.model import (COMPLETED, CREATED, FAILED, READY,
@@ -36,7 +64,8 @@ from repro.core.engine.tracing import (OverheadReport, TraceRecorder,
 __all__ = [
     "Engine", "EngineReport", "EngineTask", "TaskResult", "TraceEvent",
     "TraceRecorder", "OverheadReport", "FaultPlan", "ManualClock",
-    "ServerBackend", "ShardedBackend", "crosscheck", "DONE", "EMPTY",
+    "ServerBackend", "ShardedBackend", "TreeBackend", "crosscheck",
+    "DONE", "EMPTY",
     "CREATED", "READY", "STOLEN", "RUN_START", "RUN_END", "COMPLETED",
     "FAILED", "REQUEUED", "WORKER_DEAD", "RPC",
 ]

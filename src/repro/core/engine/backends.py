@@ -1,24 +1,32 @@
 """Scheduler backends: the engine's view of a task database.
 
 A backend adapts a concrete scheduler state (dwork `TaskServer`, sharded
-`ShardedHub`) to the uniform protocol the worker pool speaks — the same
-five verbs as the paper's Table 2 wire API:
+`ShardedHub`, or a TaskServer behind a forwarding tree) to the uniform
+protocol the worker pool speaks — the paper's Table 2 wire API:
 
     create(name, deps, meta)            Create
     steal(worker, n) -> tasks|EMPTY|DONE   Steal -> TaskMsg|NotFound|Exit
     complete(worker, name, ok)          Complete (ok=False poisons succs)
+    complete_steal(worker, done, n)     CompleteSteal: batched completions
+                                        piggybacked on the next steal —
+                                        ONE round-trip per batch in both
+                                        protocol directions (Fig. 2)
     exit_worker(worker)                 Exit (recycle assignment)
+    close()                             release transports (tree sockets)
 
 Every call is timed and emitted as an `rpc` trace event — the measured
-analog of the paper's 23 us per-task RTT (Table 4).
+analog of the paper's 23 us per-task RTT (Table 4).  `TreeBackend` hops
+additionally emit `op="hop:<label>"` events so `OverheadReport.rpc_by_op`
+attributes forwarding-tree latency per level.
 """
 from __future__ import annotations
 
+import math
 import time
 from typing import Optional
 
-from repro.core.dwork.api import (Complete, Create, Exit, ExitResp, NotFound,
-                                  Steal, TaskMsg)
+from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
+                                  ExitResp, NotFound, Steal, TaskMsg)
 from repro.core.dwork.server import TaskServer
 from repro.core.dwork.sharded import ShardedHub
 from repro.core.engine.model import REQUEUED, RPC
@@ -26,6 +34,16 @@ from repro.core.engine.model import REQUEUED, RPC
 # steal() sentinels
 EMPTY = "empty"                 # nothing ready now, but work remains
 DONE = "done"                   # every task reached a terminal state
+
+
+def _steal_result(resp):
+    """Decode a Steal/CompleteSteal response into the engine's uniform
+    (tasks | EMPTY | DONE) — one ladder shared by every backend."""
+    if isinstance(resp, TaskMsg):
+        return [tuple(t) for t in resp.tasks]
+    if isinstance(resp, ExitResp):
+        return DONE
+    return EMPTY
 
 
 class ServerBackend:
@@ -39,11 +57,20 @@ class ServerBackend:
         self.tracer = tracer
 
     # ------------------------------------------------------------ timing
+    def _request(self, msg):
+        """Deliver one protocol message — subclasses reroute this (the
+        tree sends it over the calling worker's forwarder connection)."""
+        return self.server.handle(msg)
+
     def _call(self, op: str, msg):
+        tracer = self.tracer
+        if tracer is None or not tracer.sample_rpc():
+            # unsampled: skip the perf_counter pair AND the event
+            # allocation — the call is still counted in tracer.rpc_seen
+            return self._request(msg)
         t0 = time.perf_counter()
-        resp = self.server.handle(msg)
-        if self.tracer is not None:
-            self.tracer.emit(RPC, op=op, dt=time.perf_counter() - t0)
+        resp = self._request(msg)
+        tracer.emit(RPC, op=op, dt=time.perf_counter() - t0)
         return resp
 
     def _note_requeues(self, before: int):
@@ -60,14 +87,18 @@ class ServerBackend:
         before = self.server.counters["requeued"]
         resp = self._call("steal", Steal(worker=worker, n=n))
         self._note_requeues(before)
-        if isinstance(resp, TaskMsg):
-            return list(resp.tasks)
-        if isinstance(resp, ExitResp):
-            return DONE
-        return EMPTY
+        return _steal_result(resp)
 
     def complete(self, worker: str, name: str, ok: bool = True):
         self._call("complete", Complete(worker=worker, task=name, ok=ok))
+
+    def complete_steal(self, worker: str, done, n: int = 0):
+        """Batched completions + the next steal in ONE round-trip."""
+        before = self.server.counters["requeued"]
+        resp = self._call("complete_steal",
+                          CompleteSteal(worker=worker, done=list(done), n=n))
+        self._note_requeues(before)
+        return _steal_result(resp) if n > 0 else EMPTY
 
     def exit_worker(self, worker: str):
         before = self.server.counters["requeued"]
@@ -83,6 +114,9 @@ class ServerBackend:
     def stats(self) -> dict:
         return self.server.stats()
 
+    def close(self):
+        pass
+
 
 class ShardedBackend:
     """Engine backend over a `ShardedHub` — sharded routing with worker
@@ -96,22 +130,32 @@ class ShardedBackend:
         self.tracer = tracer
         self._shard_of: dict[str, int] = {}   # stolen task -> serving shard
 
+    def _sampled(self) -> bool:
+        return self.tracer is not None and self.tracer.sample_rpc()
+
     def _emit_rpc(self, op: str, dt: float):
-        if self.tracer is not None:
-            self.tracer.emit(RPC, op=op, dt=dt)
+        self.tracer.emit(RPC, op=op, dt=dt)
+
+    @staticmethod
+    def _affinity(worker: str):
+        """Shard affinity from the engine's worker naming (w<i>)."""
+        tail = worker.rsplit("w", 1)[-1]
+        return int(tail) if tail.isdigit() else None
 
     def create(self, name: str, deps=(), meta=None):
-        t0 = time.perf_counter()
+        sampled = self._sampled()
+        t0 = time.perf_counter() if sampled else 0.0
         self.hub.create(name, deps=deps, meta=meta)
-        self._emit_rpc("create", time.perf_counter() - t0)
+        if sampled:
+            self._emit_rpc("create", time.perf_counter() - t0)
 
     def steal(self, worker: str, n: int = 1):
-        t0 = time.perf_counter()
-        affinity = None
-        if worker.rsplit("w", 1)[-1].isdigit():
-            affinity = int(worker.rsplit("w", 1)[-1])
-        resp, shard = self.hub.steal(worker, n=n, affinity=affinity)
-        self._emit_rpc("steal", time.perf_counter() - t0)
+        sampled = self._sampled()
+        t0 = time.perf_counter() if sampled else 0.0
+        resp, shard = self.hub.steal(worker, n=n,
+                                     affinity=self._affinity(worker))
+        if sampled:
+            self._emit_rpc("steal", time.perf_counter() - t0)
         if isinstance(resp, TaskMsg):
             for name, _meta in resp.tasks:
                 self._shard_of[name] = shard
@@ -123,15 +167,44 @@ class ShardedBackend:
     def complete(self, worker: str, name: str, ok: bool = True):
         shard = self._shard_of.pop(name, None)
         if shard is None:
-            # duplicate completion (e.g. clearing a suppressed re-steal's
-            # assignment): route by the hub's authoritative home map —
-            # never guess a shard
+            # duplicate completion (e.g. a late report for a re-stolen
+            # task): route by the hub's authoritative home map — never
+            # guess a shard
             shard = self.hub.home.get(name)
             if shard is None:
                 return
-        t0 = time.perf_counter()
+        sampled = self._sampled()
+        t0 = time.perf_counter() if sampled else 0.0
         self.hub.complete(worker, name, shard, ok=ok)
-        self._emit_rpc("complete", time.perf_counter() - t0)
+        if sampled:
+            self._emit_rpc("complete", time.perf_counter() - t0)
+
+    def complete_steal(self, worker: str, done, n: int = 0):
+        """Batched completions grouped per home shard, then the next steal
+        — one timed backend round-trip for the whole batch."""
+        sampled = self._sampled()
+        t0 = time.perf_counter() if sampled else 0.0
+        routed = []
+        for name, ok in done:
+            shard = self._shard_of.pop(name, None)
+            if shard is None:
+                shard = self.hub.home.get(name)
+                if shard is None:
+                    continue
+            routed.append((name, ok, shard))
+        resp, shard = self.hub.complete_steal(
+            worker, routed, n=n, affinity=self._affinity(worker))
+        out = EMPTY
+        if n > 0:
+            if isinstance(resp, TaskMsg):
+                for name, _meta in resp.tasks:
+                    self._shard_of[name] = shard
+                out = list(resp.tasks)
+            elif isinstance(resp, ExitResp):
+                out = DONE
+        if sampled:
+            self._emit_rpc("complete_steal", time.perf_counter() - t0)
+        return out
 
     def exit_worker(self, worker: str):
         before = sum(s.counters["requeued"] for s in self.hub.shards)
@@ -147,3 +220,123 @@ class ShardedBackend:
 
     def stats(self) -> dict:
         return self.hub.stats()
+
+    def close(self):
+        pass
+
+
+class TreeBackend(ServerBackend):
+    """ServerBackend whose workers reach the hub through a
+    message-forwarding tree (paper §4-§5): the TaskServer is hosted behind
+    a TCP frame server, `levels` layers of `Forwarder`s relay frames with
+    a shared pipelined upstream link per node, and each worker holds one
+    connection to its leaf forwarder (`fanout` workers per leaf).
+
+    Every worker-side call is timed end-to-end as an `rpc` event; each
+    forwarder hop additionally emits `op="hop:L<level>"` events, so
+    `OverheadReport.rpc_by_op` attributes where tree latency accrues.
+    """
+
+    def __init__(self, server: Optional[TaskServer] = None, *,
+                 workers: int = 1, fanout: int = 4, levels: int = 1,
+                 lease_timeout: Optional[float] = None, clock=None,
+                 tracer=None):
+        # lazy import: client.py is also imported by forwarder.py
+        from repro.core.dwork.client import TCPServer, TCPTransport
+
+        self.forwarders: list = []    # exists before the tracer setter runs
+        super().__init__(server=server, lease_timeout=lease_timeout,
+                         clock=clock, tracer=tracer)
+        self.fanout = max(int(fanout), 1)
+        self.levels = max(int(levels), 1)
+        self._TCPTransport = TCPTransport
+        self.tcp = TCPServer(("127.0.0.1", 0), self.server)
+        self.tcp.serve_background()
+        self.forwarders = self._build_tree(max(int(workers), 1))
+        self.leaves = self.forwarders[-1]
+        self._conn: dict[str, object] = {}    # worker -> TCPTransport
+        self._boss = None                     # create/stats link to the hub
+        self._next_leaf = 0
+
+    def _build_tree(self, workers: int):
+        """Build `levels` forwarder layers bottom-up in size, top-down in
+        wiring: layer 1 feeds the hub, the leaf layer serves workers."""
+        from repro.core.dwork.forwarder import Forwarder
+
+        n_leaves = max(1, math.ceil(workers / self.fanout))
+        sizes = [n_leaves]
+        for _ in range(self.levels - 1):
+            sizes.append(max(1, math.ceil(sizes[-1] / self.fanout)))
+        sizes.reverse()                       # top (hub-facing) first
+        layers = []
+        upstreams = [self.tcp.server_address]
+        for level, size in enumerate(sizes, start=1):
+            layer = []
+            for i in range(size):
+                up = upstreams[i % len(upstreams)]
+                fwd = Forwarder(("127.0.0.1", 0), up, tracer=self.tracer,
+                                label=f"L{level}")
+                fwd.serve_background()
+                layer.append(fwd)
+            upstreams = [f.server_address for f in layer]
+            layers.append(layer)
+        return layers
+
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, tracer):
+        # the Forwarders capture the tracer at construction; a backend
+        # built without one (and patched later by Engine.__init__) must
+        # propagate it or every hop:L<k> event is silently lost
+        self._tracer = tracer
+        for layer in self.forwarders:
+            for fwd in layer:
+                fwd.tracer = tracer
+
+    # --------------------------------------------------------- transports
+    def _transport(self, worker: str):
+        tr = self._conn.get(worker)
+        if tr is None:
+            leaf = self.leaves[self._next_leaf % len(self.leaves)]
+            self._next_leaf += 1
+            tr = self._TCPTransport(*leaf.server_address)
+            self._conn[worker] = tr
+        return tr
+
+    def _request(self, msg):
+        """Route the shared protocol verbs over real sockets: worker
+        messages go through the calling worker's forwarder connection,
+        worker-less ones (Create) over the boss link to the hub."""
+        worker = getattr(msg, "worker", None)
+        if worker is None:
+            if self._boss is None:            # boss talks to the hub direct
+                self._boss = self._TCPTransport(*self.tcp.server_address)
+            return self._boss.request(msg)
+        return self._transport(worker).request(msg)
+
+    # ------------------------------------------------------ introspection
+    def stats(self) -> dict:
+        stats = self.server.stats()
+        stats["tree"] = {
+            "levels": self.levels, "fanout": self.fanout,
+            "forwarders": [len(layer) for layer in self.forwarders],
+            "relayed": [sum(f.relayed for f in layer)
+                        for layer in self.forwarders],
+        }
+        return stats
+
+    def close(self):
+        for tr in self._conn.values():
+            tr.close()
+        self._conn.clear()
+        if self._boss is not None:
+            self._boss.close()
+            self._boss = None
+        for layer in reversed(self.forwarders):
+            for fwd in layer:
+                fwd.close()
+        self.tcp.shutdown()
+        self.tcp.server_close()

@@ -1,8 +1,8 @@
 """The unified worker pool: one execution substrate for all three schedulers.
 
 A single dispatch loop drives virtual workers against a scheduler backend
-(`ServerBackend` / `ShardedBackend`), generalizing the paper's three
-execution loops:
+(`ServerBackend` / `ShardedBackend` / `TreeBackend`), generalizing the
+paper's three execution loops:
 
   * dwork  (§2.2) — workers Steal-n batches and Complete tasks; the loop
     IS the paper's Fig. 2 CLIENT-LOOP, with per-worker fault injection.
@@ -18,8 +18,17 @@ Transports:
     for tests, fault injection, and pure-overhead measurement.
   * "thread" — a slot-bounded thread pool; real concurrency for workloads
     that block (pmake's popen'd scripts).
+  * "tree"   — like inproc, but every worker RPC crosses a real TCP
+    message-forwarding tree (paper §4): `tree_fanout` workers per leaf
+    `Forwarder`, `tree_levels` relay layers, pipelined shared upstream
+    links, per-hop `rpc` trace events.
 
-Every lifecycle transition is emitted to the `TraceRecorder`, from which
+Hot path: completions are buffered per worker and piggybacked onto that
+worker's next steal as ONE `CompleteSteal` round-trip (the Fig. 2
+batch-then-drain rhythm — `steal_n` amortizes both protocol directions),
+the pending set is a priority heap with incrementally-maintained
+per-worker outstanding counts (no per-round rescans/sorts), and every
+lifecycle transition is emitted to the `TraceRecorder`, from which
 `tracing.OverheadReport` computes empirical per-task overhead and METG.
 """
 from __future__ import annotations
@@ -27,36 +36,27 @@ from __future__ import annotations
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
+from heapq import heapify, heappop, heappush
 from typing import Callable, Optional
 
 from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
-                                        ShardedBackend)
+                                        ShardedBackend, TreeBackend)
 from repro.core.engine.faults import FaultPlan
 from repro.core.engine.model import (COMPLETED, CREATED, FAILED, READY,
                                      RUN_END, RUN_START, STOLEN, WORKER_DEAD,
-                                     EngineTask, TaskResult, next_seq)
+                                     EngineTask, TaskResult)
 from repro.core.engine.tracing import OverheadReport, TraceRecorder
 
-
-class _SyncFuture:
-    """Immediately-done future: the inproc transport's result holder."""
-
-    def __init__(self, value):
-        self._value = value
-
-    def done(self) -> bool:
-        return True
-
-    def result(self):
-        return self._value
+TRANSPORTS = ("inproc", "thread", "tree")
 
 
 @dataclass
 class EngineReport:
     results: dict                      # task -> TaskResult (last execution)
     trace: TraceRecorder
-    workers: int
+    workers: int                       # effective parallelism (overhead math)
     wall_s: float
+    pool_workers: int = 1              # configured pool size (reporting)
     errors: set = field(default_factory=set)
     stalled: bool = False
     backend_stats: dict = field(default_factory=dict)
@@ -75,9 +75,13 @@ class Engine:
                  backend=None, tracer: Optional[TraceRecorder] = None,
                  faults: Optional[FaultPlan] = None, clock=None,
                  lease_timeout: Optional[float] = None, poll: float = 0.001,
-                 max_idle_rounds: Optional[int] = None):
-        if transport not in ("inproc", "thread"):
+                 max_idle_rounds: Optional[int] = None, tree_fanout: int = 4,
+                 tree_levels: int = 1):
+        if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}")
+        if transport == "tree" and shards > 1:
+            raise ValueError("tree transport forwards to a single hub; "
+                             "use shards=1 (shard the hub behind it instead)")
         self.workers = max(int(workers), 0)
         self.capacity = capacity if capacity is not None else max(workers, 1)
         self.transport = transport
@@ -86,8 +90,14 @@ class Engine:
         self.poll = poll
         self.lease_timeout = lease_timeout
         self.tracer = tracer or TraceRecorder(clock=clock)
+        self._owns_backend = backend is None
         if backend is None:
-            if shards > 1:
+            if transport == "tree":
+                backend = TreeBackend(workers=self.workers,
+                                      fanout=tree_fanout, levels=tree_levels,
+                                      lease_timeout=lease_timeout,
+                                      clock=clock, tracer=self.tracer)
+            elif shards > 1:
                 backend = ShardedBackend(shards=shards,
                                          lease_timeout=lease_timeout,
                                          clock=clock, tracer=self.tracer)
@@ -149,7 +159,8 @@ class Engine:
 
     def _run_one(self, exec_fn, name: str, meta: dict,
                  worker: str) -> TaskResult:
-        self.tracer.emit(RUN_START, task=name, worker=worker)
+        tracer = self.tracer
+        tracer.emit4(RUN_START, name, worker)
         t0 = time.perf_counter()
         ok, value, err = True, None, None
         try:
@@ -170,8 +181,9 @@ class Engine:
             virtual = self.faults.delay_s(name, worker)
             if self.faults.force_fail(name, worker):
                 ok, err = False, err or "injected fault"
-        self.tracer.emit(RUN_END, task=name, worker=worker,
-                         virtual_s=virtual)
+            tracer.emit(RUN_END, task=name, worker=worker, virtual_s=virtual)
+        else:
+            tracer.emit4(RUN_END, name, worker)
         return TaskResult(task=name, ok=ok, worker=worker, t_start=t0,
                           t_end=t1, value=value, error=err,
                           virtual_s=virtual)
@@ -184,145 +196,236 @@ class Engine:
         exec_fn = execute or self._execute_registered
         t_wall0 = time.perf_counter()
         alive = [f"w{i}" for i in range(self.workers)]
+        n_alive = max(len(alive), 1)
         dead: set[str] = set()
         steals = {w: 0 for w in alive}
         done_flag = {w: False for w in alive}
-        pending: list[dict] = []
-        running: dict[str, dict] = {}
-        shadows: dict[str, set] = {}   # task -> workers whose duplicate
-        results: dict[str, TaskResult] = {}   # steal was suppressed
+        # hot-path state, all maintained incrementally (no per-round scans):
+        heap: list = []                # (-priority, seq, item) pending launch
+        n_pending = 0
+        pending_names: set[str] = set()
+        outstanding = {w: 0 for w in alive}   # stolen, not yet finished
+        finished = {w: [] for w in alive}     # (name, ok) awaiting piggyback
+        running: dict[str, dict] = {}         # thread transport in-flight
+        results: dict[str, TaskResult] = {}
         free = self.capacity
         idle_rounds = 0
         stalled = False
         pending_limit = max(self.workers, 1) * self.steal_n + self.capacity
-        pool = (ThreadPoolExecutor(max_workers=self.capacity)
-                if self.transport == "thread" else None)
+        inline = self.transport != "thread"
+        pool = (None if inline
+                else ThreadPoolExecutor(max_workers=self.capacity))
+        # local bindings keep the per-round constant cost down
+        emit = self.tracer.emit
+        emit4 = self.tracer.emit4
+        complete_steal = self.backend.complete_steal
+        run_one = self._run_one
+        on_terminal = self._on_terminal
+        priority_of = self._priority_of
+        steal_n = self.steal_n
+        capacity = self.capacity
+        faults = self.faults
+        # fault-free inline runs drain a priority-0 batch straight from
+        # the steal response — no heap round-trip, no pending bookkeeping.
+        # (With faults the slow path keeps the steal->death->launch window
+        # so a dying worker observably holds stolen-but-unstarted tasks.)
+        fast_drain = inline and faults is None
+        seq = 0
         rounds = 0
+        # launch gate: popping the heap is pointless until something can
+        # change the outcome (a slot freed, new steals, a death scrub) —
+        # without it a full backlog gets drained/re-pushed every poll
+        try_launch = True
         try:
             while True:
                 rounds += 1
                 progress = False
-                # 1) reap finished tasks
-                for name in list(running):
-                    rec = running[name]
-                    if not rec["fut"].done():
+                # 1) reap finished thread-pool tasks into per-worker batches
+                if running:
+                    for name in [n for n, r in running.items()
+                                 if r["fut"].done()]:
+                        rec = running.pop(name)
+                        free += rec["slots"]
+                        progress = True
+                        try_launch = True
+                        w = rec["worker"]
+                        if w in dead:
+                            continue  # lost completion: requeued via Exit
+                        outstanding[w] -= 1
+                        res: TaskResult = rec["fut"].result()
+                        results[name] = res
+                        finished[w].append((name, res.ok))
+                        emit(COMPLETED if res.ok else FAILED, task=name,
+                             worker=w, error=res.error)
+                        if res.ok:  # failed tasks never ready their succs
+                            self._on_terminal(name)
+                # 2) complete+steal — one RPC flushes a worker's finished
+                # batch AND steals its next one (Fig. 2 batch-then-drain);
+                # a worker steals only while it holds fewer than steal_n
+                # outstanding tasks; rotation keeps the order fair
+                if n_alive == 1:
+                    rotation = alive
+                else:
+                    start = rounds % n_alive
+                    rotation = alive[start:] + alive[:start]
+                for w in rotation:
+                    if w in dead:
                         continue
-                    running.pop(name)
-                    free += rec["slots"]
-                    progress = True
-                    if rec["worker"] in dead:
-                        continue      # lost completion: requeued via Exit
-                    res: TaskResult = rec["fut"].result()
-                    results[name] = res
-                    self.backend.complete(rec["worker"], name, ok=res.ok)
-                    # a lease-expiry duplicate steal we suppressed left the
-                    # task in the re-stealer's assigned set; an idempotent
-                    # Complete on its behalf clears that server-side state
-                    for sw in shadows.pop(name, ()):
-                        if sw != rec["worker"]:
-                            self.backend.complete(sw, name, ok=res.ok)
-                    self.tracer.emit(COMPLETED if res.ok else FAILED,
-                                     task=name, worker=rec["worker"],
-                                     error=res.error)
-                    if res.ok:      # failed tasks never ready their succs
-                        self._on_terminal(name)
-                # 2) steal — a worker steals only while it holds fewer than
-                # steal_n outstanding tasks (the Fig. 2 client loop's
-                # batch-then-drain rhythm); rotation keeps the order fair
-                outstanding = {w: 0 for w in alive}
-                for it in pending:
-                    outstanding[it["worker"]] = \
-                        outstanding.get(it["worker"], 0) + 1
-                for rec in running.values():
-                    outstanding[rec["worker"]] = \
-                        outstanding.get(rec["worker"], 0) + 1
-                start = rounds % max(len(alive), 1)
-                for w in alive[start:] + alive[:start]:
-                    if w in dead or done_flag[w]:
+                    batch = finished[w]
+                    want_steal = (not done_flag[w]
+                                  and outstanding[w] < steal_n
+                                  and n_pending < pending_limit)
+                    if not batch and not want_steal:
                         continue
-                    if outstanding.get(w, 0) >= self.steal_n \
-                            or len(pending) >= pending_limit:
+                    got = complete_steal(w, batch,
+                                         steal_n if want_steal else 0)
+                    if batch:
+                        finished[w] = []
+                        progress = True
+                    if not want_steal:
                         continue
-                    got = self.backend.steal(w, self.steal_n)
                     if got == DONE:
                         done_flag[w] = True
                     elif got != EMPTY:
                         steals[w] += len(got)
-                        pending_names = {it["name"] for it in pending}
+                        accepted = []
                         for name, meta in got:
                             rec = running.get(name)
-                            if name in pending_names or (
-                                    rec is not None
-                                    and rec["worker"] not in dead):
-                                # lease-expiry re-steal of a task a LIVE
-                                # copy of this pool still holds: the first
-                                # copy will complete (idempotent server-
-                                # side); a second launch would leak slots
-                                # and double-count events.  A copy held
-                                # only by a DEAD worker is accepted — its
-                                # completion will be discarded, so this
-                                # re-steal is the task's only way forward.
-                                shadows.setdefault(name, set()).add(w)
+                            if (name in pending_names or name in results
+                                    or (rec is not None
+                                        and rec["worker"] not in dead)):
+                                # duplicate steal after a lease-expiry
+                                # requeue while a LIVE copy is still held
+                                # (pending, in flight, or complete-pending):
+                                # the copy's Complete clears every stale
+                                # assignment server-side, so just drop it.
+                                # A copy held only by a DEAD worker is
+                                # accepted — its completion was discarded,
+                                # so this re-steal is the only way forward.
                                 continue
-                            pending_names.add(name)
-                            self.tracer.emit(STOLEN, task=name, worker=w)
-                            pending.append({
-                                "name": name, "meta": meta, "worker": w,
-                                "priority": self._priority_of(name, meta),
-                                "slots": self._slots_of(name, meta),
-                                "seq": next_seq()})
+                            accepted.append((name, meta))
+                        if not accepted:
+                            continue
                         progress = True
+                        # drain a batch inline ONLY when nothing in it (or
+                        # already pending) carries a priority — otherwise a
+                        # prio-0 item would run before a higher-priority
+                        # one later in the same batch/heap
+                        drain = fast_drain and not heap and all(
+                            priority_of(name, meta) == 0.0
+                            for name, meta in accepted)
+                        if drain:
+                            for name, meta in accepted:
+                                # steal order == seq order: complete rides
+                                # on this worker's next CompleteSteal
+                                emit4(STOLEN, name, w)
+                                res = run_one(exec_fn, name, meta, w)
+                                results[name] = res
+                                finished[w].append((name, res.ok))
+                                if res.ok:
+                                    emit4(COMPLETED, name, w)
+                                    on_terminal(name)
+                                else:
+                                    emit(FAILED, task=name, worker=w,
+                                         error=res.error)
+                            continue
+                        for name, meta in accepted:
+                            emit4(STOLEN, name, w)
+                            pending_names.add(name)
+                            outstanding[w] += 1
+                            seq += 1
+                            heappush(heap, (
+                                -priority_of(name, meta), seq,
+                                {"name": name, "meta": meta, "worker": w,
+                                 "slots": self._slots_of(name, meta)}))
+                            n_pending += 1
+                        try_launch = True
                 # 3) fault injection: worker deaths (between steal & launch,
                 #    so a dying worker holds stolen-but-unstarted tasks)
-                if self.faults is not None:
+                if faults is not None:
+                    scrub = False
                     for w in alive:
                         if w in dead:
                             continue
-                        if self.faults.should_die(w, steals[w]):
+                        if faults.should_die(w, steals[w]):
                             dead.add(w)
-                            silent = self.faults.dies_silently(w)
-                            self.tracer.emit(WORKER_DEAD, worker=w,
-                                             silent=silent)
-                            pending = [it for it in pending
-                                       if it["worker"] != w]
+                            silent = faults.dies_silently(w)
+                            emit(WORKER_DEAD, worker=w, silent=silent)
+                            if finished[w]:
+                                # already-reported completions (step 2 ran
+                                # first) — flush the stragglers so a result
+                                # the engine recorded is never lost
+                                complete_steal(w, finished[w], 0)
+                                finished[w] = []
+                            scrub = True
                             if not silent:
                                 # announced death: Exit recycles assignment
                                 self.backend.exit_worker(w)
                             # silent death: heartbeat-lease expiry recycles
                             progress = True
+                    if scrub and heap:
+                        kept = [e for e in heap if e[2]["worker"] not in dead]
+                        if len(kept) != len(heap):
+                            for e in heap:
+                                if e[2]["worker"] in dead:
+                                    pending_names.discard(e[2]["name"])
+                            heap = kept
+                            heapify(heap)
+                            n_pending = len(heap)
+                            try_launch = True
                 # 4) launch: greedy highest-priority-first into free slots
-                if pending:
-                    pending.sort(key=lambda it: (-it["priority"], it["seq"]))
+                if heap and try_launch:
+                    try_launch = False
                     held = []
-                    for it in pending:
-                        if it["worker"] in dead:
+                    while heap:
+                        entry = heappop(heap)
+                        it = entry[2]
+                        name = it["name"]
+                        if it["worker"] in dead:      # late scrub
+                            pending_names.discard(name)
+                            n_pending -= 1
                             continue
-                        if it["name"] in running:
+                        if name in running:
                             # a dead worker's copy is still in flight;
                             # wait for it to drain before re-launching
-                            held.append(it)
+                            held.append(entry)
                             continue
-                        slots = min(it["slots"], self.capacity)
+                        slots = min(it["slots"], capacity)
                         if slots > free:
-                            held.append(it)
+                            held.append(entry)
                             continue
-                        free -= slots
-                        if pool is None:
-                            fut = _SyncFuture(self._run_one(
-                                exec_fn, it["name"], it["meta"],
-                                it["worker"]))
+                        pending_names.discard(name)
+                        n_pending -= 1
+                        w = it["worker"]
+                        if inline:
+                            res = self._run_one(exec_fn, name, it["meta"], w)
+                            outstanding[w] -= 1
+                            results[name] = res
+                            finished[w].append((name, res.ok))
+                            emit(COMPLETED if res.ok else FAILED, task=name,
+                                 worker=w, error=res.error)
+                            if res.ok:
+                                self._on_terminal(name)
                         else:
-                            fut = pool.submit(self._run_one, exec_fn,
-                                              it["name"], it["meta"],
-                                              it["worker"])
-                        running[it["name"]] = {"worker": it["worker"],
-                                               "fut": fut, "slots": slots}
+                            free -= slots
+                            fut = pool.submit(self._run_one, exec_fn, name,
+                                              it["meta"], w)
+                            running[name] = {"worker": w, "fut": fut,
+                                             "slots": slots}
                         progress = True
-                    pending = held
+                    for entry in held:
+                        heappush(heap, entry)
                 # 5) termination
-                live = [w for w in alive if w not in dead]
-                if not running and not pending:
-                    if not live or all(done_flag[w] for w in live):
+                if not running and not n_pending:
+                    live = [w for w in alive if w not in dead]
+                    if not live:
+                        # every worker died: unless one of them saw the
+                        # server's DONE first, work remains unserved —
+                        # that is a stall, not a clean finish
+                        stalled = not any(done_flag.values())
+                        break
+                    if all(done_flag[w] for w in live) \
+                            and not any(finished[w] for w in live):
                         break
                 if progress:
                     idle_rounds = 0
@@ -337,11 +440,18 @@ class Engine:
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
-        # effective parallelism: the inproc transport runs tasks serially,
-        # so overhead accounting must not multiply wall time by the pool size
-        eff_workers = 1 if self.transport == "inproc" else self.workers
+            if self._owns_backend:
+                # in the finally so a mid-run RPC failure can't leak the
+                # tree's sockets/threads; stats()/errors() below only
+                # read in-process state and stay valid after close
+                self.backend.close()
+        # effective parallelism: the inline transports run tasks serially,
+        # and the thread pool is sized by `capacity`, so overhead
+        # accounting must not multiply wall time by phantom workers
+        eff_workers = 1 if inline else min(self.workers, self.capacity)
         return EngineReport(
             results=results, trace=self.tracer, workers=eff_workers,
+            pool_workers=self.workers,
             wall_s=time.perf_counter() - t_wall0,
             errors=self.backend.errors(), stalled=stalled,
             backend_stats=self.backend.stats())

@@ -37,13 +37,25 @@ RPC = "rpc"                     # one scheduler round-trip (the paper's RTT)
 TERMINAL = (COMPLETED, FAILED)
 
 
-@dataclass
 class TraceEvent:
-    t: float                    # seconds on the recorder's clock
-    event: str
-    task: Optional[str] = None
-    worker: Optional[str] = None
-    extra: dict = field(default_factory=dict)
+    """One lifecycle/rpc event.  A plain slotted class (not a dataclass):
+    it is allocated 4-5 times per task on the hot path, and the per-event
+    dict + generated __init__ of a dataclass are measurable there."""
+
+    __slots__ = ("t", "event", "task", "worker", "extra")
+
+    def __init__(self, t: float, event: str, task: Optional[str] = None,
+                 worker: Optional[str] = None, extra: Optional[dict] = None):
+        self.t = t
+        self.event = event
+        self.task = task
+        self.worker = worker
+        self.extra = extra if extra is not None else {}
+
+    def __repr__(self):
+        return (f"TraceEvent(t={self.t!r}, event={self.event!r}, "
+                f"task={self.task!r}, worker={self.worker!r}, "
+                f"extra={self.extra!r})")
 
 
 @dataclass
@@ -64,7 +76,7 @@ class EngineTask:
     priority: float = 0.0
 
 
-@dataclass
+@dataclass(slots=True)
 class TaskResult:
     task: str
     ok: bool
@@ -107,5 +119,5 @@ def next_seq() -> int:
     return next(_seq)
 
 
-def real_clock() -> float:
-    return time.perf_counter()
+# the default trace clock IS perf_counter — no wrapper frame on the hot path
+real_clock = time.perf_counter

@@ -29,16 +29,37 @@ from repro.core.metg import same_order
 
 
 class TraceRecorder:
-    def __init__(self, clock: Optional[Callable[[], float]] = None):
+    def __init__(self, clock: Optional[Callable[[], float]] = None,
+                 rpc_sample: int = 1):
         self.clock = clock or real_clock
         self.events: list[TraceEvent] = []
         self._lock = threading.Lock()
+        # rpc sampling: record every k-th round-trip instead of all of
+        # them.  Backends call `sample_rpc()` BEFORE timing a call; a
+        # False return means "skip the perf_counter pair and the event
+        # allocation entirely" — the unsampled calls are still counted
+        # (`rpc_seen`) so `OverheadReport` can scale the totals back up.
+        self.rpc_sample = max(int(rpc_sample), 1)
+        self.rpc_seen = 0
+
+    def sample_rpc(self) -> bool:
+        """Should the next backend round-trip be timed + recorded?"""
+        self.rpc_seen += 1
+        return self.rpc_sample == 1 or self.rpc_seen % self.rpc_sample == 0
 
     def emit(self, event: str, task: Optional[str] = None,
              worker: Optional[str] = None, **extra):
         ev = TraceEvent(self.clock(), event, task, worker, extra)
-        with self._lock:
-            self.events.append(ev)
+        # list.append is atomic under the GIL — no lock on the hot path;
+        # readers still lock to snapshot a consistent view
+        self.events.append(ev)
+        return ev
+
+    def emit4(self, event: str, task: str, worker: str):
+        """No-extra fast emit for the 3-4 per-task lifecycle events on the
+        dispatch hot path (skips kwargs packing)."""
+        ev = TraceEvent(self.clock(), event, task, worker)
+        self.events.append(ev)
         return ev
 
     # ------------------------------------------------------------ queries
@@ -73,6 +94,7 @@ class OverheadReport:
     rpc_s: float = 0.0               # total scheduler round-trip time
     n_rpc: int = 0
     dispatch_s: float = 0.0          # total stolen -> run_start latency
+    rpc_by_op: dict = field(default_factory=dict)  # op -> (count, total_s)
 
     @classmethod
     def from_trace(cls, trace: TraceRecorder, workers: int = 1
@@ -99,7 +121,26 @@ class OverheadReport:
                 if t_start is not None:
                     compute += e.t - t_start
                 virtual += e.extra.get("virtual_s", 0.0)
-        rpcs = trace.of(RPC)
+        # rpc accounting: forwarding-tree hop events (op="hop:L<k>") are
+        # nested inside the worker's end-to-end round-trip measurement, so
+        # they go in the per-op breakdown (latency attribution) but NOT in
+        # the rpc_s/n_rpc totals (that would double-count the tree)
+        by_op: dict = {}
+        rpc_s = 0.0
+        n_rpc = 0
+        for e in trace.of(RPC):
+            op = e.extra.get("op", "?")
+            dt = e.extra.get("dt", 0.0)
+            cnt, tot = by_op.get(op, (0, 0.0))
+            by_op[op] = (cnt + 1, tot + dt)
+            if not op.startswith("hop:"):
+                rpc_s += dt
+                n_rpc += 1
+        # sampled tracing: scale the recorded round-trips back up to the
+        # true call count (rpc_seen counts every call, sampled or not)
+        if trace.rpc_seen > n_rpc > 0:
+            rpc_s *= trace.rpc_seen / n_rpc
+            n_rpc = trace.rpc_seen
         requeued = sum(e.extra.get("n", 1) for e in trace.of(REQUEUED))
         return cls(
             n_tasks=trace.count(COMPLETED) + trace.count(FAILED),
@@ -109,9 +150,10 @@ class OverheadReport:
             wall_s=trace.span_s(),
             compute_s=compute,
             virtual_s=virtual,
-            rpc_s=sum(e.extra.get("dt", 0.0) for e in rpcs),
-            n_rpc=len(rpcs),
+            rpc_s=rpc_s,
+            n_rpc=n_rpc,
             dispatch_s=dispatch,
+            rpc_by_op=by_op,
         )
 
     # ------------------------------------------------------------ derived

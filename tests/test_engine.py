@@ -61,6 +61,17 @@ def test_lifecycle_event_order_deterministic_clock():
                 <= ts[RUN_END] <= ts[COMPLETED]), (task, ts)
 
 
+def test_priority_order_within_one_steal_batch_fast_path():
+    """Regression: the fault-free inline fast path must not drain a
+    prio-0 task before a higher-priority one later in the SAME batch."""
+    order = []
+    eng = Engine(workers=1, transport="inproc", steal_n=4)
+    eng.submit("low", fn=lambda: order.append("low"), priority=0.0)
+    eng.submit("high", fn=lambda: order.append("high"), priority=9.0)
+    rep = eng.run()
+    assert order == ["high", "low"] and rep.completed == {"high", "low"}
+
+
 def test_priority_and_slots_pmake_semantics():
     """The launch step is pmake's greedy highest-priority-first; a task
     wanting more slots than the allocation is clamped, not starved."""
@@ -87,6 +98,80 @@ def test_sharded_routing():
     assert len(rep.backend_stats["shards"]) == 2
     # both shards actually served tasks (hash routing + work stealing)
     assert all(s["completed"] > 0 for s in rep.backend_stats["shards"])
+
+
+# ---------------------------------------------- the CompleteSteal batch verb
+
+
+def test_complete_steal_one_round_trip_both_directions():
+    """CompleteSteal applies the finished batch FIRST, then serves the
+    steal — so completing a producer and stealing its freed successor
+    works in a single round-trip."""
+    from repro.core.dwork.api import ExitResp, TaskMsg
+    srv = TaskServer()
+    cl = Client(InProcTransport(srv), "w0")
+    cl.create("a")
+    cl.create("b", deps=["a"])
+    cl.create("c")
+    got = cl.steal(n=2)
+    assert [t for t, _m in got.tasks] == ["a", "c"]
+    r = cl.complete_steal([("a", True), ("c", True)], n=2)
+    assert isinstance(r, TaskMsg)
+    assert [t for t, _m in r.tasks] == ["b"]       # freed by the batch
+    assert srv.counters["completed"] == 2
+    # complete-only (n=0) returns ExitResp and never steals
+    assert isinstance(cl.complete_steal([("b", True)], n=0), ExitResp)
+    assert srv.counters["completed"] == 3
+    assert isinstance(cl.steal(), ExitResp)        # everything terminal
+
+
+def test_complete_steal_failed_batch_entry_poisons():
+    from repro.core.dwork.api import ExitResp
+    srv = TaskServer()
+    cl = Client(InProcTransport(srv), "w0")
+    cl.create("a")
+    cl.create("kid", deps=["a"])
+    cl.steal()
+    assert isinstance(cl.complete_steal([("a", False)], n=1), ExitResp)
+    assert srv.errors == {"a", "kid"}
+
+
+def test_complete_clears_duplicate_assignment_after_requeue():
+    """A late Complete for a task that was lease-requeued and re-stolen
+    must clear the re-stealer's assignment too (exactly-once terminal:
+    no stale server-side state for any holder)."""
+    srv = TaskServer(lease_timeout=0.0)    # immediate expiry
+    slow = Client(InProcTransport(srv), "slow")
+    slow.create("a")
+    assert slow.steal().tasks[0][0] == "a"
+    fast = Client(InProcTransport(srv), "fast")
+    assert fast.steal().tasks[0][0] == "a"         # re-stolen after expiry
+    slow.complete("a")                             # late straggler report
+    assert srv.assigned.get("fast", set()) == set()
+    assert srv.assigned.get("slow", set()) == set()
+    assert srv.counters["completed"] == 1
+
+
+def test_complete_steal_wire_round_trip():
+    from repro.core.dwork.api import CompleteSteal, decode, encode
+    msg = CompleteSteal(worker="w0", done=[("a", True), ("b", False)], n=3)
+    back = decode(encode(msg))
+    assert isinstance(back, CompleteSteal)
+    assert back.worker == "w0" and back.n == 3
+    assert [(t, bool(ok)) for t, ok in back.done] == \
+        [("a", True), ("b", False)]
+
+
+def test_engine_batches_rpcs_via_complete_steal():
+    """The engine's dispatch loop must piggyback completions on steals:
+    at steal_n=8 a 200-task flat run needs far fewer round-trips than
+    one per task (plus the 200 creates)."""
+    rep = flat_engine(200, steal_n=8).run()
+    ov = rep.overhead()
+    ops = {op for op in ov.rpc_by_op}
+    assert "complete_steal" in ops
+    assert "complete" not in ops           # no unbatched completes
+    assert ov.n_rpc < 200 + 200 // 4       # creates + amortized dispatch
 
 
 # --------------------------------------------------------- fault injection
@@ -305,6 +390,35 @@ def test_overhead_report_pairs_reexecutions_sequentially():
     rep = tr.report(workers=1)
     assert rep.compute_s == pytest.approx(3.0)
     assert rep.dispatch_s == pytest.approx(2.0)   # 1s + 1s stolen->start
+
+
+def test_all_workers_dead_with_remaining_work_reports_stall():
+    """Every worker dying mid-run must NOT look like a clean finish:
+    the abandoned tasks are a stall the caller can detect."""
+    faults = (FaultPlan(seed=1).kill_worker("w0", after_steals=1)
+              .kill_worker("w1", after_steals=1))
+    eng = Engine(workers=2, steal_n=2, faults=faults, max_idle_rounds=30)
+    for i in range(50):
+        eng.submit(f"t{i}", fn=lambda: None)
+    rep = eng.run()
+    assert len(rep.completed) < 50
+    assert rep.stalled                           # not a clean exit
+
+
+def test_thread_overhead_accounting_capped_by_capacity():
+    """ThreadPoolExecutor is sized by `capacity`; phantom workers above
+    it must not be billed as idle scheduler overhead."""
+    import time as _t
+    eng = Engine(workers=8, capacity=2, transport="thread", steal_n=1,
+                 poll=0.002)
+    for i in range(8):
+        eng.submit(f"t{i}", fn=lambda: _t.sleep(0.03))
+    rep = eng.run()
+    assert len(rep.completed) == 8
+    assert rep.workers == 2                      # min(workers, capacity)
+    # 8 x 30ms over 2 real slots: overhead must stay far below the
+    # ~90ms/task that billing 6 phantom workers would produce
+    assert rep.overhead().per_task_overhead_s < 0.03
 
 
 # -------------------------------------- the 1,000-task METG acceptance run

@@ -1,0 +1,259 @@
+"""Forwarding-tree tests (paper §4-§5): pipelined relay correctness under
+concurrent clients, 2-level chaining, upstream-failure surfacing, and the
+engine lifecycle suite (requeue, announced/silent death, straggler
+jitter) running unchanged over `transport="tree"`."""
+import threading
+import time
+
+import pytest
+
+from repro.core.dwork import (Client, Forwarder, InProcTransport, TaskServer,
+                              run_pool)
+from repro.core.dwork.client import TCPServer, TCPTransport
+from repro.core.engine import (COMPLETED, RPC, STOLEN, Engine, FaultPlan,
+                               ManualClock)
+
+
+def hub_with_tasks(n, prefix="t", lease_timeout=None, clock=None):
+    srv = TaskServer(lease_timeout=lease_timeout, clock=clock)
+    boss = Client(InProcTransport(srv), "boss")
+    for i in range(n):
+        boss.create(f"{prefix}{i}", meta={"x": i})
+    return srv
+
+
+def serve(srv):
+    tcp = TCPServer(("127.0.0.1", 0), srv)
+    tcp.serve_background()
+    return tcp
+
+
+# ------------------------------------------------------------- forwarder
+
+
+def test_relay_correctness_single_client():
+    srv = hub_with_tasks(20)
+    tcp = serve(srv)
+    fwd = Forwarder(("127.0.0.1", 0), tcp.server_address)
+    fwd.serve_background()
+    try:
+        cl = Client(TCPTransport(*fwd.server_address), "w0")
+        done = cl.run_loop(lambda name, meta: True, steal_n=4)
+        assert done == 20
+        assert srv.counters["completed"] == 20
+        assert fwd.relayed > 0 and fwd.upstream_error is None
+    finally:
+        fwd.close()
+        tcp.shutdown()
+
+
+def test_relay_correctness_concurrent_clients():
+    """8 workers through ONE forwarder (one shared pipelined upstream
+    link): every task completes exactly once, none lost or duplicated."""
+    srv = hub_with_tasks(200)
+    tcp = serve(srv)
+    fwd = Forwarder(("127.0.0.1", 0), tcp.server_address)
+    fwd.serve_background()
+    counts = {}
+    lock = threading.Lock()
+
+    def work(w):
+        cl = Client(TCPTransport(*fwd.server_address), w)
+        cl.run_loop(lambda name, meta: counts.__setitem__(
+            name, counts.get(name, 0) + 1) or True, steal_n=2)
+
+    try:
+        threads = [threading.Thread(target=work, args=(f"w{i}",))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert srv.counters["completed"] == 200
+        assert len(counts) == 200
+        assert all(v == 1 for v in counts.values())    # exactly once
+        assert fwd.upstream_error is None
+    finally:
+        fwd.close()
+        tcp.shutdown()
+
+
+def test_two_level_chaining():
+    """worker -> leaf forwarder -> mid forwarder -> hub."""
+    srv = hub_with_tasks(30)
+    tcp = serve(srv)
+    mid = Forwarder(("127.0.0.1", 0), tcp.server_address)
+    mid.serve_background()
+    leaf = Forwarder(("127.0.0.1", 0), mid.server_address)
+    leaf.serve_background()
+    try:
+        cl = Client(TCPTransport(*leaf.server_address), "w0")
+        done = cl.run_loop(lambda name, meta: True, steal_n=4)
+        assert done == 30 and srv.counters["completed"] == 30
+        assert leaf.relayed > 0 and mid.relayed > 0
+    finally:
+        leaf.close()
+        mid.close()
+        tcp.shutdown()
+
+
+def test_upstream_failure_surfaced_not_swallowed():
+    """A hub that dies mid-conversation must close the downstream side
+    and record the error on the forwarder — not hang or pass silently."""
+    import socket
+
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+
+    def doomed_hub():
+        conn, _ = lst.accept()
+        conn.recv(4)                                 # read part of a frame
+        conn.close()                                 # ... then die on it
+
+    th = threading.Thread(target=doomed_hub, daemon=True)
+    th.start()
+    fwd = Forwarder(("127.0.0.1", 0), lst.getsockname())
+    fwd.serve_background()
+    try:
+        cl = Client(TCPTransport(*fwd.server_address), "w0")
+        with pytest.raises((ConnectionError, OSError)):
+            cl.steal(n=1)
+        deadline = time.time() + 5
+        while fwd.upstream_error is None and time.time() < deadline:
+            time.sleep(0.01)
+        assert fwd.upstream_error is not None        # surfaced
+    finally:
+        fwd.close()
+        lst.close()
+
+
+def test_abrupt_downstream_disconnect_keeps_serving():
+    """A client vanishing mid-stream must not wedge the shared upstream
+    link for the other clients."""
+    srv = hub_with_tasks(40)
+    tcp = serve(srv)
+    fwd = Forwarder(("127.0.0.1", 0), tcp.server_address)
+    fwd.serve_background()
+    try:
+        rude = TCPTransport(*fwd.server_address)
+        Client(rude, "rude").steal(n=1)
+        rude.sock.close()                            # abrupt, no goodbye
+        cl = Client(TCPTransport(*fwd.server_address), "w0")
+        done = cl.run_loop(lambda name, meta: True, steal_n=4)
+        assert done >= 39                            # rude's steal is lost
+        assert fwd.upstream_error is None            # link still healthy
+    finally:
+        fwd.close()
+        tcp.shutdown()
+
+
+# ------------------------------------------- engine over transport="tree"
+
+
+def test_tree_transport_dag_execution():
+    eng = Engine(workers=2, transport="tree", steal_n=2)
+    eng.submit("a", fn=lambda: 1)
+    eng.submit("b", fn=lambda: 2, deps=["a"])
+    eng.submit("c", fn=lambda: 3, deps=["a", "b"])
+    rep = eng.run()
+    assert rep.completed == {"a", "b", "c"} and not rep.stalled
+    assert rep.results["c"].value == 3
+
+
+def test_tree_hop_events_attributed_not_double_counted():
+    eng = Engine(workers=4, transport="tree", steal_n=4, tree_fanout=2,
+                 tree_levels=2)
+    for i in range(60):
+        eng.submit(f"t{i}", fn=lambda: None)
+    rep = eng.run()
+    assert len(rep.completed) == 60
+    assert rep.backend_stats["tree"]["forwarders"] == [1, 2]
+    ov = rep.overhead()
+    assert "hop:L1" in ov.rpc_by_op and "hop:L2" in ov.rpc_by_op
+    # hops are attribution-only: excluded from the end-to-end rpc totals
+    hop_n = sum(c for op, (c, _t) in ov.rpc_by_op.items()
+                if op.startswith("hop:"))
+    total_n = sum(c for c, _t in ov.rpc_by_op.values())
+    assert ov.n_rpc == total_n - hop_n
+    # every worker round-trip crossed both levels
+    lvl = rep.backend_stats["tree"]["relayed"]
+    assert lvl[0] == lvl[1] > 0
+
+
+def test_tree_announced_death_zero_lost_tasks():
+    """Worker death behind a forwarder: Exit recycles its assignment at
+    the hub and the survivors finish everything (zero lost tasks)."""
+    faults = FaultPlan(seed=7).kill_worker("w1", after_steals=4)
+    eng = Engine(workers=3, transport="tree", steal_n=4, faults=faults)
+    for i in range(120):
+        eng.submit(f"t{i}", fn=lambda: None)
+    rep = eng.run()
+    assert not rep.stalled
+    assert len(rep.completed) == 120                 # zero lost tasks
+    assert rep.overhead().n_requeued >= 1
+    assert rep.backend_stats["completed"] == 120
+    assert rep.backend_stats["assigned"] == 0
+
+
+def test_tree_silent_death_recovered_by_lease():
+    clk = ManualClock(tick=1e-3)
+    faults = FaultPlan(seed=3).kill_worker("w1", after_steals=2, silent=True)
+    eng = Engine(workers=2, transport="tree", steal_n=2, clock=clk,
+                 lease_timeout=0.05, faults=faults)
+    for i in range(20):
+        eng.submit(f"x{i}", fn=lambda: None)
+    rep = eng.run()
+    assert len(rep.completed) == 20 and not rep.stalled
+    assert rep.overhead().n_requeued >= 1
+
+
+def test_tree_straggler_jitter_recorded():
+    faults = FaultPlan(seed=11).stragglers(1e-3)
+    eng = Engine(workers=2, transport="tree", steal_n=2, faults=faults)
+    for i in range(16):
+        eng.submit(f"j{i}", fn=lambda: None)
+    rep = eng.run()
+    assert len(rep.completed) == 16
+    assert rep.overhead().virtual_s != 0.0           # jitter traced
+
+
+def test_run_pool_tree_matches_inproc_results():
+    srv = hub_with_tasks(50)
+    rep = run_pool(srv, lambda name, meta: (True, meta["x"] * 2),
+                   workers=4, steal_n=4, transport="tree", tree_fanout=2)
+    assert len(rep.completed) == 50 and not rep.stalled
+    assert all(rep.results[f"t{i}"].value == 2 * i for i in range(50))
+    assert rep.backend_stats["tree"]["relayed"][0] > 0
+    # regression: the default-tracer path must still attribute hops
+    # (the Forwarders capture the tracer at construction time)
+    assert any(op.startswith("hop:")
+               for op in rep.overhead().rpc_by_op), rep.overhead().rpc_by_op
+
+
+def test_tree_backend_built_without_tracer_still_attributes_hops():
+    """A TreeBackend constructed bare and handed to Engine gets the
+    engine's tracer patched in AFTER the forwarders were built — the
+    assignment must propagate down or hop events silently vanish."""
+    from repro.core.engine import TreeBackend
+    backend = TreeBackend(workers=2, fanout=2)
+    eng = Engine(workers=2, transport="tree", steal_n=2, backend=backend)
+    for i in range(20):
+        eng.submit(f"t{i}", fn=lambda: None)
+    try:
+        rep = eng.run()
+    finally:
+        backend.close()                       # engine doesn't own it
+    assert len(rep.completed) == 20
+    assert any(op.startswith("hop:") for op in rep.overhead().rpc_by_op)
+
+
+def test_tree_trace_counts_conserved():
+    eng = Engine(workers=2, transport="tree", steal_n=2)
+    for i in range(40):
+        eng.submit(f"t{i}", fn=lambda: None)
+    rep = eng.run()
+    tr = rep.trace
+    assert tr.count(COMPLETED) == 40
+    assert tr.count(STOLEN) >= 40
+    assert tr.count(RPC) > 0
