@@ -1,0 +1,167 @@
+"""Serving latency benchmark: a seeded open-loop arrival process against
+the resident engine + METG-batching frontend, emitted as
+BENCH_serving.json — the serving-layer companion to BENCH_engine.json.
+
+Open-loop means arrival times are drawn up front (seeded Poisson) and
+paced on the wall clock regardless of how fast the server responds, so a
+slow server shows up as queue growth and tail latency, not as a politely
+slowed-down client.  The run doubles as the subsystem's acceptance demo:
+>= 1000 requests served through dynamic batching, one worker killed
+mid-stream (seeded FaultPlan), zero requests lost, p50/p95/p99 latency
+reported from the trace.
+
+Modes:
+    (default)   quick run -> BENCH_serving.json (+ stdout)
+    --full      5000 requests instead of 1000
+    --check     re-measure and compare against the committed
+                BENCH_serving.json; exits non-zero if p95 latency or
+                throughput regressed past tolerance (the CI perf gate)
+"""
+from __future__ import annotations
+
+import gc
+import json
+import random
+import sys
+import time
+from pathlib import Path
+
+from repro.core.engine import REQUEUED, Engine, FaultPlan
+from repro.core.serving import Frontend
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BASELINE = REPO_ROOT / "BENCH_serving.json"
+WORKERS = 4
+MEAN_GAP_S = 150e-6            # ~6.7k req/s offered load
+MAX_WAIT_S = 0.002             # frontend deadline (bounds p50 from below)
+MAX_BATCH = 32
+KILL_AFTER_STEALS = 5          # w1 dies once it has stolen 5 batch tasks
+# latency tolerances are looser than the engine-overhead gate (1.25x):
+# tail percentiles on a shared runner are far noisier than best-of means
+CHECK_P95_TOLERANCE = 2.0
+CHECK_THROUGHPUT_TOLERANCE = 2.0
+
+
+def _calibrate_us() -> float:
+    """Machine-speed probe (same estimator as engine_overhead): lets the
+    --check gate scale latency limits on slower hardware."""
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        total = 0
+        for i in range(100000):
+            total += i * i
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run_once(n: int = 1000, *, seed: int = 0, kill: bool = True) -> dict:
+    faults = FaultPlan(seed).kill_worker(
+        "w1", after_steals=KILL_AFTER_STEALS) if kill else None
+    eng = Engine(workers=WORKERS, resident=True, steal_n=4, faults=faults)
+    fe = Frontend(eng, lambda ps: [p * 3 + 1 for p in ps],
+                  max_queue=4096, max_batch=MAX_BATCH,
+                  max_wait_s=MAX_WAIT_S, per_request_s0=2e-6)
+    fe.start()
+    rng = random.Random(seed)
+    gaps = [rng.expovariate(1.0 / MEAN_GAP_S) for _ in range(n)]
+    reqs = []
+    t0 = time.perf_counter()
+    t_next = t0
+    for i, gap in enumerate(gaps):
+        t_next += gap
+        # open-loop pacing; oversleep self-corrects (t_next is absolute)
+        # and sleep(0) yields the GIL so pacing can't starve the server
+        while True:
+            remaining = t_next - time.perf_counter()
+            if remaining <= 0:
+                break
+            time.sleep(remaining if remaining > 1e-3 else 0)
+        reqs.append(fe.submit(i))
+    lost = 0
+    for r in reqs:
+        if not r.wait(60):
+            lost += 1
+    wall = time.perf_counter() - t0
+    fe.close()
+    rep = eng.shutdown()
+    bad = sum(1 for i, r in enumerate(reqs)
+              if not r.ok or r.value != 3 * i + 1)
+    lat = rep.overhead().requests
+    requeued = sum(e.extra.get("n", 1) for e in rep.trace.of(REQUEUED))
+    out = {
+        "n_requests": n,
+        "workers": WORKERS,
+        "mean_gap_us": MEAN_GAP_S * 1e6,
+        "max_wait_ms": MAX_WAIT_S * 1e3,
+        "wall_s": round(wall, 4),
+        "throughput_rps": round(n / wall, 1),
+        "lost": lost,
+        "bad_responses": bad,
+        "workers_killed": rep.trace.count("worker_dead"),
+        "n_requeued": requeued,
+        **lat.summary(),
+    }
+    if lost or bad:
+        raise AssertionError(f"request loss/corruption: {out}")
+    if kill and (out["workers_killed"] != 1 or requeued < 1):
+        raise AssertionError(f"injected kill did not bite: {out}")
+    return out
+
+
+def run(n: int = 1000, repeats: int = 3) -> dict:
+    """Best-of-N on p95 (hiccups only ever ADD latency); the committed
+    baseline and the --check gate use the same estimator."""
+    best = None
+    for _ in range(max(repeats, 1)):
+        gc.collect()
+        r = run_once(n)
+        if best is None or r["latency_ms"]["p95"] < best["latency_ms"]["p95"]:
+            best = r
+    best["calibration_us"] = round(_calibrate_us(), 1)
+    return best
+
+
+def run_check() -> int:
+    """CI perf gate: fail (exit 1) if serving p95 latency or throughput
+    regressed past tolerance vs the committed baseline.  Zero request
+    loss is asserted by every run regardless."""
+    baseline = json.loads(BASELINE.read_text())
+    scale = 1.0
+    base_cal = baseline.get("calibration_us")
+    if base_cal:
+        scale = min(max(_calibrate_us() / base_cal, 1.0), 4.0)
+    print(f"machine-speed scale vs baseline: {scale:.2f}x")
+    p95_limit = baseline["latency_ms"]["p95"] * CHECK_P95_TOLERANCE * scale
+    tp_floor = baseline["throughput_rps"] / (CHECK_THROUGHPUT_TOLERANCE
+                                             * scale)
+    best_p95, best_tp = None, None
+    for attempt in range(3):
+        meas = run(baseline["n_requests"], repeats=3)
+        p95 = meas["latency_ms"]["p95"]
+        tp = meas["throughput_rps"]
+        best_p95 = p95 if best_p95 is None else min(best_p95, p95)
+        best_tp = tp if best_tp is None else max(best_tp, tp)
+        if best_p95 <= p95_limit and best_tp >= tp_floor:
+            break
+        time.sleep(2)
+    ok = best_p95 <= p95_limit and best_tp >= tp_floor
+    print(f"serving p95: {best_p95:.3f}ms vs baseline "
+          f"{baseline['latency_ms']['p95']:.3f}ms (limit {p95_limit:.3f}ms); "
+          f"throughput: {best_tp:.0f} rps (floor {tp_floor:.0f}) "
+          f"{'OK' if ok else 'REGRESSED'}")
+    if not ok:
+        print("serving latency regression vs committed BENCH_serving.json",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(run_check())
+    n = 5000 if "--full" in sys.argv else 1000
+    result = run(n)
+    BASELINE.write_text(json.dumps(result, indent=1))
+    print(json.dumps(result, indent=1))
+    print(f"\nwrote {BASELINE}", file=sys.stderr)

@@ -1,5 +1,6 @@
-"""dwork-scheduled batched inference example: generation requests are dwork
-tasks; the worker steals METG-sized batches, prefills + decodes, completes.
+"""Continuous-serving inference example: generation requests flow through
+the resident engine + METG-batching frontend (`repro.core.serving`) —
+bounded admission, dynamic batch sizing, per-request latency percentiles.
 
     PYTHONPATH=src python examples/serve_dwork.py
 """

@@ -44,6 +44,10 @@ class TaskServer:
         self.lock = threading.Lock()
         self.counters = {"created": 0, "stolen": 0, "completed": 0,
                          "requeued": 0, "errors": 0}
+        # tasks that reached completed OR errors, counted once: keeps
+        # _all_done() O(1) — a resident engine probes it on every empty
+        # steal, and a full joins-table scan there is O(history)
+        self._n_terminal = 0
 
     # ------------------------------------------------------------------ API
     def handle(self, msg):
@@ -69,6 +73,16 @@ class TaskServer:
     def _create(self, msg: Create):
         if msg.task in self.joins:
             return NotFound()                 # duplicate create is a no-op
+        if any(d in self.errors for d in msg.deps):
+            # a dependency already failed: poison at create time — wiring
+            # it up as a live dep would leave a join count that no
+            # Complete can ever release (the server poisons successors at
+            # failure time, so a dependent created later would dangle)
+            self.joins[msg.task] = [0, []]
+            self.meta[msg.task] = dict(msg.meta)
+            self.counters["created"] += 1
+            self._poison(msg.task)
+            return ExitResp()
         live_deps = [d for d in msg.deps if d not in self.completed]
         # hold: delegation-as-assignment (paper §6) — an extra join count
         # released by a remote database/worker via Release
@@ -127,6 +141,8 @@ class TaskServer:
             return
         self.completed.add(t)
         self.counters["completed"] += 1
+        if t not in self.errors:
+            self._n_terminal += 1
         for succ in self.joins.get(t, [0, []])[1]:
             j = self.joins[succ]
             j[0] -= 1
@@ -189,6 +205,8 @@ class TaskServer:
                 continue
             self.errors.add(cur)
             self.counters["errors"] += 1
+            if cur not in self.completed:
+                self._n_terminal += 1
             stack.extend(self.joins.get(cur, [0, []])[1])
 
     def _reap_leases(self):
@@ -206,7 +224,7 @@ class TaskServer:
             self.counters["requeued"] += 1
 
     def _all_done(self) -> bool:
-        return all(t in self.completed or t in self.errors for t in self.joins)
+        return self._n_terminal >= len(self.joins)
 
     def stats(self) -> dict:
         return {
@@ -232,6 +250,7 @@ class TaskServer:
         srv.meta = state["meta"]
         srv.completed = set(state["completed"])
         srv.errors = set(state["errors"])
+        srv._n_terminal = len(srv.completed | srv.errors)
         # reconstruct ready: join==0, not completed/errored (assigned tasks
         # from the previous run are implicitly requeued — crash tolerance)
         for t, (j, _succ) in srv.joins.items():

@@ -111,6 +111,11 @@ class ServerBackend:
     def errors(self) -> set:
         return set(self.server.errors)
 
+    def ready_depth(self) -> int:
+        """Tasks ready-to-steal right now (no RPC — a monitoring probe for
+        the serving layer's queue-depth accounting, not a protocol verb)."""
+        return len(self.server.ready)
+
     def stats(self) -> dict:
         return self.server.stats()
 
@@ -217,6 +222,9 @@ class ShardedBackend:
     def errors(self) -> set:
         return {t for s in self.hub.shards for t in s.errors
                 if not t.startswith("__")}
+
+    def ready_depth(self) -> int:
+        return sum(len(s.ready) for s in self.hub.shards)
 
     def stats(self) -> dict:
         return self.hub.stats()

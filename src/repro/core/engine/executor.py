@@ -23,6 +23,24 @@ Transports:
     `Forwarder`, `tree_levels` relay layers, pipelined shared upstream
     links, per-hop `rpc` trace events.
 
+Modes:
+  * batch (default) — `run()` drains a pre-submitted task universe and
+    returns when every task reaches a terminal state (or the pool stalls).
+  * resident (`Engine(resident=True)`) — `start()` runs the same dispatch
+    loop open-ended in a background thread; `submit()` keeps accepting
+    work while workers are live (thread-safe), `drain()` blocks until the
+    submitted universe is terminal, `shutdown()` stops the loop and
+    returns the `EngineReport`.  `add_worker()` / `lose_worker()` change
+    pool membership on the fly, and `self.steal_n` is re-read every round
+    so batch size can track the live worker count.  Faults, heartbeat
+    leases, and lifecycle tracing behave exactly as in batch mode; a
+    server-side "all done" is treated as "idle" rather than termination
+    until `shutdown()` is requested.  While idle, steals back off to one
+    probe per `IDLE_PROBE_ROUNDS` rounds (a new `submit()` wakes the pool
+    immediately via a submission epoch) so an idle service doesn't flood
+    the trace with empty round-trips.  `repro.core.serving.Frontend`
+    layers admission control and dynamic request batching on top.
+
 Hot path: completions are buffered per worker and piggybacked onto that
 worker's next steal as ONE `CompleteSteal` round-trip (the Fig. 2
 batch-then-drain rhythm — `steal_n` amortizes both protocol directions),
@@ -33,7 +51,9 @@ lifecycle transition is emitted to the `TraceRecorder`, from which
 """
 from __future__ import annotations
 
+import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from heapq import heapify, heappop, heappush
@@ -44,10 +64,15 @@ from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
 from repro.core.engine.faults import FaultPlan
 from repro.core.engine.model import (COMPLETED, CREATED, FAILED, READY,
                                      RUN_END, RUN_START, STOLEN, WORKER_DEAD,
-                                     EngineTask, TaskResult)
+                                     EngineTask, TaskResult, WorkerCrash)
 from repro.core.engine.tracing import OverheadReport, TraceRecorder
 
 TRANSPORTS = ("inproc", "thread", "tree")
+
+# resident idle backoff: with no pending submissions, each worker probes
+# the server once per this many rounds (lease reaping still happens on
+# probes); a submit() bumps the epoch and re-enables steals immediately
+IDLE_PROBE_ROUNDS = 16
 
 
 @dataclass
@@ -76,7 +101,7 @@ class Engine:
                  faults: Optional[FaultPlan] = None, clock=None,
                  lease_timeout: Optional[float] = None, poll: float = 0.001,
                  max_idle_rounds: Optional[int] = None, tree_fanout: int = 4,
-                 tree_levels: int = 1):
+                 tree_levels: int = 1, resident: bool = False):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}")
         if transport == "tree" and shards > 1:
@@ -89,6 +114,7 @@ class Engine:
         self.faults = faults
         self.poll = poll
         self.lease_timeout = lease_timeout
+        self.resident = bool(resident)
         self.tracer = tracer or TraceRecorder(clock=clock)
         self._owns_backend = backend is None
         if backend is None:
@@ -117,6 +143,23 @@ class Engine:
         self.tasks: dict[str, EngineTask] = {}
         self._waiting: dict[str, set] = {}
         self._succs: dict[str, list] = {}
+        self._pass_worker = False
+        # ---------------------------------------------- resident-mode state
+        # _cond guards the registry + counters that submit() (any thread)
+        # and the dispatch loop both touch; batch mode never takes it.
+        self._cond = threading.Condition()
+        self._inflight = 0              # submitted, not yet terminal
+        self._terminal: set[str] = set()
+        self._failed: set[str] = set()
+        self._epoch = 0                 # bumped on submit/requeue: wakes idle
+        self._commands: deque = deque()  # ("add"|"lose", worker) membership
+        self._live = self.workers       # live (not dead) worker count
+        self._next_wid = self.workers   # auto worker naming for add_worker()
+        self._stop = False              # drain-then-exit requested
+        self._abort = False             # exit now, abandon pending work
+        self._thread: Optional[threading.Thread] = None
+        self._report: Optional[EngineReport] = None
+        self._loop_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------- submit
     def submit(self, name: str, fn: Optional[Callable] = None, *,
@@ -125,22 +168,71 @@ class Engine:
         """Register a task.  Submit producers before dependents: the task
         server forward-declares an unknown dep as a READY stub and treats
         a later Create of the same name as a no-op (dwork §2.2 semantics),
-        so a dependent submitted first would run before its producer."""
+        so a dependent submitted first would run before its producer.
+        In resident mode this is thread-safe and may be called while the
+        dispatch loop is running."""
         task = EngineTask(name=name, fn=fn, deps=tuple(deps),
                           meta=dict(meta or {}), slots=max(int(slots), 1),
                           priority=priority)
-        self.tasks[name] = task
+        if not self.resident:
+            self.tasks[name] = task
+            self.backend.create(name, deps=task.deps, meta=task.meta)
+            self.tracer.emit(CREATED, task=name)
+            if task.deps:
+                self._waiting[name] = set(task.deps)
+                for d in task.deps:
+                    self._succs.setdefault(d, []).append(name)
+            else:
+                self.tracer.emit(READY, task=name)
+            return task
+        with self._cond:
+            if name in self.tasks:
+                # the task server keys history by name forever, so a
+                # duplicate Create is a server-side no-op — accepting it
+                # here would count an _inflight slot that never drains
+                # and wedge drain()/shutdown().  Names are single-use.
+                raise ValueError(f"task name {name!r} already submitted "
+                                 "(resident task names are single-use)")
+            self.tasks[name] = task
+            failed_dep = next((d for d in task.deps if d in self._failed),
+                              None)
+            if failed_dep is not None:
+                # the producer already failed: creating this server-side
+                # would dangle forever (the server poisons successors at
+                # failure time, not at create time) — fail it engine-side
+                self._terminal.add(name)
+                self._failed.add(name)
+                self.tracer.emit(CREATED, task=name)
+                self.tracer.emit(FAILED, task=name,
+                                 error=f"dependency {failed_dep} failed")
+                return task
+            self._inflight += 1
+            live = [d for d in task.deps if d not in self._terminal]
+            if live:
+                self._waiting[name] = set(live)
+                for d in live:
+                    self._succs.setdefault(d, []).append(name)
+            self._epoch += 1
         self.backend.create(name, deps=task.deps, meta=task.meta)
+        # re-bump AFTER the create is server-visible: the idle gate could
+        # otherwise arm against the pre-create bump (a probe between the
+        # two finds nothing) and sit on the task for a whole probe period.
+        # Lock-free: losing a racing increment is fine — only "changed
+        # since the loop's snapshot" matters, not the value.
+        self._epoch += 1
         self.tracer.emit(CREATED, task=name)
-        if task.deps:
-            self._waiting[name] = set(task.deps)
-            for d in task.deps:
-                self._succs.setdefault(d, []).append(name)
-        else:
+        if not live:
             self.tracer.emit(READY, task=name)
         return task
 
     def _on_terminal(self, name: str):
+        if self.resident:
+            with self._cond:
+                self._on_terminal_unlocked(name)
+        else:
+            self._on_terminal_unlocked(name)
+
+    def _on_terminal_unlocked(self, name: str):
         for succ in self._succs.pop(name, []):
             w = self._waiting.get(succ)
             if w is None:
@@ -149,6 +241,135 @@ class Engine:
             if not w:
                 del self._waiting[succ]
                 self.tracer.emit(READY, task=succ)
+
+    def _note_terminal(self, name: str, ok: bool):
+        """Resident bookkeeping: count a task's FIRST terminal state so
+        `drain()` can wait on the submitted universe.  A failure walks the
+        engine-side successor graph the way the server poisons its own, so
+        transitively-doomed tasks count as terminal too."""
+        with self._cond:
+            if name in self._terminal:
+                return
+            self._terminal.add(name)
+            n = 1
+            if not ok:
+                self._failed.add(name)
+                stack = [name]
+                while stack:
+                    for succ in self._succs.pop(stack.pop(), []):
+                        self._waiting.pop(succ, None)
+                        if succ in self._terminal:
+                            continue
+                        self._terminal.add(succ)
+                        self._failed.add(succ)
+                        self.tracer.emit(FAILED, task=succ,
+                                         error=f"poisoned by {name}")
+                        n += 1
+                        stack.append(succ)
+            self._inflight -= n
+            if self._inflight <= 0:
+                self._cond.notify_all()
+
+    # ---------------------------------------------------- resident control
+    def start(self, execute: Optional[Callable] = None, *,
+              pass_worker: bool = False) -> "Engine":
+        """Launch the dispatch loop in a background thread (resident mode
+        only).  `execute(name, meta)` as in `run()`; with
+        `pass_worker=True` the callback receives `(name, meta, worker)` so
+        per-worker behavior (runtime.elastic) needs no engine surgery."""
+        if not self.resident:
+            raise RuntimeError("start() requires Engine(resident=True); "
+                               "use run() for batch mode")
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._stop = self._abort = False
+        self._report = None
+        self._loop_error = None
+        self._thread = threading.Thread(
+            target=self._serve, args=(execute, pass_worker),
+            name="engine-resident", daemon=True)
+        self._thread.start()
+        return self
+
+    def _serve(self, execute, pass_worker):
+        try:
+            self._report = self.run(execute, pass_worker=pass_worker)
+        except BaseException as e:  # noqa: BLE001 — surfaced by shutdown()
+            self._loop_error = e
+        finally:
+            with self._cond:
+                self._cond.notify_all()   # unblock drain() on a loop crash
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted task is terminal (True) or the
+        timeout expires (False).  Does not stop the loop."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._inflight <= 0 or self._loop_error is not None,
+                timeout)
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: Optional[float] = None) -> EngineReport:
+        """Stop the resident loop and return its EngineReport.  With
+        `drain=True` (default) outstanding work finishes first; with
+        `drain=False` pending work is abandoned (the server keeps it)."""
+        if self._thread is None:
+            raise RuntimeError("engine not started")
+        if drain:
+            self.drain(timeout)
+        else:
+            self._abort = True
+        self._stop = True
+        self._thread.join(timeout)
+        if self._thread.is_alive():      # wedged mid-drain: force exit
+            self._abort = True
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                # execute() is blocked and cannot observe the abort flag;
+                # keep the handle so a later shutdown() can retry, and
+                # report the bounded stop honestly instead of hanging
+                raise RuntimeError(
+                    "resident loop did not stop within timeout "
+                    "(execute blocked?)")
+        self._thread = None
+        if self._loop_error is not None:
+            raise self._loop_error
+        return self._report
+
+    @property
+    def started(self) -> bool:
+        """True while the resident dispatch loop is running."""
+        return self._thread is not None
+
+    def live_workers(self) -> int:
+        """Workers currently alive (pool size minus deaths) — the P that
+        METG-aware batching should adapt to."""
+        return max(self._live, 0)
+
+    def add_worker(self, name: Optional[str] = None) -> str:
+        """Grow the live pool (resident mode): the worker joins the steal
+        rotation at the top of the next dispatch round."""
+        if not self.resident:
+            raise RuntimeError("membership changes require "
+                               "Engine(resident=True)")
+        if name is None:
+            name = f"w{self._next_wid}"
+        self._next_wid += 1
+        with self._cond:
+            self._commands.append(("add", name))
+            self._epoch += 1
+        return name
+
+    def lose_worker(self, name: str):
+        """Driver-side failure detection (paper: Exit may be called by the
+        user to recover from a node failure): mark the worker dead and
+        recycle everything it still holds."""
+        if not self.resident:
+            raise RuntimeError("membership changes require "
+                               "Engine(resident=True)")
+        with self._cond:
+            self._commands.append(("lose", name))
+            self._epoch += 1
 
     # -------------------------------------------------------------- exec
     def _execute_registered(self, name: str, meta: dict):
@@ -162,9 +383,12 @@ class Engine:
         tracer = self.tracer
         tracer.emit4(RUN_START, name, worker)
         t0 = time.perf_counter()
-        ok, value, err = True, None, None
+        ok, value, err, crashed = True, None, None, False
         try:
-            out = exec_fn(name, meta)
+            if self._pass_worker:
+                out = exec_fn(name, meta, worker)
+            else:
+                out = exec_fn(name, meta)
             if isinstance(out, tuple):
                 ok, value = bool(out[0]), out[1]
             elif out is None:
@@ -173,6 +397,8 @@ class Engine:
                 ok = out
             else:
                 ok, value = True, out
+        except WorkerCrash as e:
+            ok, err, crashed = False, repr(e), True
         except Exception as e:                        # noqa: BLE001
             ok, err = False, repr(e)
         t1 = time.perf_counter()
@@ -186,17 +412,22 @@ class Engine:
             tracer.emit4(RUN_END, name, worker)
         return TaskResult(task=name, ok=ok, worker=worker, t_start=t0,
                           t_end=t1, value=value, error=err,
-                          virtual_s=virtual)
+                          virtual_s=virtual, crashed=crashed)
 
     # --------------------------------------------------------------- run
-    def run(self, execute: Optional[Callable] = None) -> EngineReport:
+    def run(self, execute: Optional[Callable] = None, *,
+            pass_worker: bool = False) -> EngineReport:
         """Run until every task reaches a terminal state (or all workers
         die / the pool stalls).  `execute(name, meta)` may return bool,
-        (ok, value), or None (success); default runs the submitted `fn`."""
+        (ok, value), or None (success); default runs the submitted `fn`.
+        In resident mode the loop instead runs until `shutdown()`."""
         exec_fn = execute or self._execute_registered
+        self._pass_worker = pass_worker and execute is not None
+        resident = self.resident
         t_wall0 = time.perf_counter()
         alive = [f"w{i}" for i in range(self.workers)]
         n_alive = max(len(alive), 1)
+        peak_workers = len(alive)
         dead: set[str] = set()
         steals = {w: 0 for w in alive}
         done_flag = {w: False for w in alive}
@@ -211,7 +442,8 @@ class Engine:
         free = self.capacity
         idle_rounds = 0
         stalled = False
-        pending_limit = max(self.workers, 1) * self.steal_n + self.capacity
+        steal_n = self.steal_n
+        pending_limit = max(self.workers, 1) * steal_n + self.capacity
         inline = self.transport != "thread"
         pool = (None if inline
                 else ThreadPoolExecutor(max_workers=self.capacity))
@@ -221,8 +453,8 @@ class Engine:
         complete_steal = self.backend.complete_steal
         run_one = self._run_one
         on_terminal = self._on_terminal
+        note_terminal = self._note_terminal if resident else None
         priority_of = self._priority_of
-        steal_n = self.steal_n
         capacity = self.capacity
         faults = self.faults
         # fault-free inline runs drain a priority-0 batch straight from
@@ -232,14 +464,91 @@ class Engine:
         fast_drain = inline and faults is None
         seq = 0
         rounds = 0
+        quiet_epoch = -1            # resident idle gate (see IDLE_PROBE_...)
         # launch gate: popping the heap is pointless until something can
         # change the outcome (a slot freed, new steals, a death scrub) —
         # without it a full backlog gets drained/re-pushed every poll
         try_launch = True
+        progress = False
+
+        def bury(w: str, *, announce: bool, **extra):
+            """Retire a dead worker mid-stream: flush the completions it
+            already reported (a result the engine recorded is never lost),
+            recycle its assignment (announced Exit; silent deaths rely on
+            heartbeat-lease expiry), and scrub its pending launches."""
+            nonlocal heap, n_pending, try_launch, progress
+            dead.add(w)
+            emit(WORKER_DEAD, worker=w, **extra)
+            if finished[w]:
+                complete_steal(w, finished[w], 0)
+                finished[w] = []
+            if announce:
+                self.backend.exit_worker(w)
+            if heap:
+                kept = [e for e in heap if e[2]["worker"] not in dead]
+                if len(kept) != len(heap):
+                    for e in heap:
+                        if e[2]["worker"] in dead:
+                            pending_names.discard(e[2]["name"])
+                    heap = kept
+                    heapify(heap)
+                    n_pending = len(heap)
+            try_launch = True
+            progress = True
+            self._live = len(alive) - len(dead)
+            if resident:
+                self._epoch += 1     # its requeued work is stealable again
+
         try:
             while True:
                 rounds += 1
                 progress = False
+                stopping = not resident or self._stop
+                # 0) resident: abort / membership commands / live retuning
+                if resident:
+                    if self._abort:
+                        break
+                    if self._commands:
+                        with self._cond:
+                            cmds = list(self._commands)
+                            self._commands.clear()
+                        for cmd, w in cmds:
+                            if cmd == "add":
+                                if w in steals and w not in dead:
+                                    continue            # already live
+                                if w in dead:
+                                    # a recovered node rejoining under its
+                                    # old id: revive with a clean slate —
+                                    # only copies still in flight from the
+                                    # old incarnation stay attributed
+                                    dead.discard(w)
+                                    done_flag[w] = False
+                                    finished[w] = []
+                                    outstanding[w] = sum(
+                                        1 for r in running.values()
+                                        if r["worker"] == w)
+                                else:
+                                    alive.append(w)
+                                    steals[w] = 0
+                                    done_flag[w] = False
+                                    outstanding[w] = 0
+                                    finished[w] = []
+                                self._live = len(alive) - len(dead)
+                                peak_workers = max(peak_workers, len(alive))
+                            elif cmd == "lose" and w in steals \
+                                    and w not in dead:
+                                bury(w, announce=True, reason="lose")
+                        n_alive = max(len(alive), 1)
+                    # steal_n is re-read every round so membership-aware
+                    # batching (elastic: pick_batch_size on remesh) applies
+                    # without restarting the loop
+                    steal_n = max(int(self.steal_n), 1)
+                    pending_limit = n_alive * steal_n + capacity
+                    epoch0 = self._epoch
+                    steal_ok = (stopping or epoch0 != quiet_epoch
+                                or rounds % IDLE_PROBE_ROUNDS == 0)
+                else:
+                    steal_ok = True
                 # 1) reap finished thread-pool tasks into per-worker batches
                 if running:
                     for name in [n for n, r in running.items()
@@ -251,14 +560,19 @@ class Engine:
                         w = rec["worker"]
                         if w in dead:
                             continue  # lost completion: requeued via Exit
-                        outstanding[w] -= 1
                         res: TaskResult = rec["fut"].result()
+                        if res.crashed:
+                            bury(w, announce=True, crash=True)
+                            continue
+                        outstanding[w] -= 1
                         results[name] = res
+                        if note_terminal:
+                            note_terminal(name, res.ok)
                         finished[w].append((name, res.ok))
                         emit(COMPLETED if res.ok else FAILED, task=name,
                              worker=w, error=res.error)
                         if res.ok:  # failed tasks never ready their succs
-                            self._on_terminal(name)
+                            on_terminal(name)
                 # 2) complete+steal — one RPC flushes a worker's finished
                 # batch AND steals its next one (Fig. 2 batch-then-drain);
                 # a worker steals only while it holds fewer than steal_n
@@ -272,7 +586,8 @@ class Engine:
                     if w in dead:
                         continue
                     batch = finished[w]
-                    want_steal = (not done_flag[w]
+                    want_steal = (steal_ok
+                                  and not done_flag[w]
                                   and outstanding[w] < steal_n
                                   and n_pending < pending_limit)
                     if not batch and not want_steal:
@@ -285,7 +600,11 @@ class Engine:
                     if not want_steal:
                         continue
                     if got == DONE:
-                        done_flag[w] = True
+                        # resident pre-stop: the server saying "all done"
+                        # just means "idle right now" — more work may be
+                        # submitted, so keep the worker in the rotation
+                        if stopping:
+                            done_flag[w] = True
                     elif got != EMPTY:
                         steals[w] += len(got)
                         accepted = []
@@ -320,7 +639,15 @@ class Engine:
                                 # on this worker's next CompleteSteal
                                 emit4(STOLEN, name, w)
                                 res = run_one(exec_fn, name, meta, w)
+                                if res.crashed:
+                                    # the rest of the batch is still
+                                    # assigned server-side: Exit recycles
+                                    # it with the in-flight task
+                                    bury(w, announce=True, crash=True)
+                                    break
                                 results[name] = res
+                                if note_terminal:
+                                    note_terminal(name, res.ok)
                                 finished[w].append((name, res.ok))
                                 if res.ok:
                                     emit4(COMPLETED, name, w)
@@ -340,39 +667,21 @@ class Engine:
                                  "slots": self._slots_of(name, meta)}))
                             n_pending += 1
                         try_launch = True
+                # resident idle gate: a fully quiet round (no completions,
+                # no steals served) arms the backoff until the epoch moves
+                if resident and not stopping and not progress and steal_ok:
+                    quiet_epoch = epoch0
                 # 3) fault injection: worker deaths (between steal & launch,
                 #    so a dying worker holds stolen-but-unstarted tasks)
                 if faults is not None:
-                    scrub = False
                     for w in alive:
                         if w in dead:
                             continue
                         if faults.should_die(w, steals[w]):
-                            dead.add(w)
                             silent = faults.dies_silently(w)
-                            emit(WORKER_DEAD, worker=w, silent=silent)
-                            if finished[w]:
-                                # already-reported completions (step 2 ran
-                                # first) — flush the stragglers so a result
-                                # the engine recorded is never lost
-                                complete_steal(w, finished[w], 0)
-                                finished[w] = []
-                            scrub = True
-                            if not silent:
-                                # announced death: Exit recycles assignment
-                                self.backend.exit_worker(w)
+                            # announced death: Exit recycles assignment;
                             # silent death: heartbeat-lease expiry recycles
-                            progress = True
-                    if scrub and heap:
-                        kept = [e for e in heap if e[2]["worker"] not in dead]
-                        if len(kept) != len(heap):
-                            for e in heap:
-                                if e[2]["worker"] in dead:
-                                    pending_names.discard(e[2]["name"])
-                            heap = kept
-                            heapify(heap)
-                            n_pending = len(heap)
-                            try_launch = True
+                            bury(w, announce=not silent, silent=silent)
                 # 4) launch: greedy highest-priority-first into free slots
                 if heap and try_launch:
                     try_launch = False
@@ -399,8 +708,16 @@ class Engine:
                         w = it["worker"]
                         if inline:
                             res = self._run_one(exec_fn, name, it["meta"], w)
+                            if res.crashed:
+                                # bury scrubs this worker's remaining heap
+                                # entries; `held` is re-checked next pass
+                                bury(w, announce=True, crash=True)
+                                progress = True
+                                continue
                             outstanding[w] -= 1
                             results[name] = res
+                            if note_terminal:
+                                note_terminal(name, res.ok)
                             finished[w].append((name, res.ok))
                             emit(COMPLETED if res.ok else FAILED, task=name,
                                  worker=w, error=res.error)
@@ -415,14 +732,19 @@ class Engine:
                         progress = True
                     for entry in held:
                         heappush(heap, entry)
-                # 5) termination
-                if not running and not n_pending:
+                # 5) termination (batch mode, or resident after shutdown())
+                if stopping and not running and not n_pending:
                     live = [w for w in alive if w not in dead]
                     if not live:
                         # every worker died: unless one of them saw the
                         # server's DONE first, work remains unserved —
-                        # that is a stall, not a clean finish
-                        stalled = not any(done_flag.values())
+                        # that is a stall, not a clean finish.  A resident
+                        # pool counts its submitted universe instead (it
+                        # may legitimately stop with zero workers).
+                        if resident:
+                            stalled = self._inflight > 0
+                        else:
+                            stalled = not any(done_flag.values())
                         break
                     if all(done_flag[w] for w in live) \
                             and not any(finished[w] for w in live):
@@ -431,7 +753,7 @@ class Engine:
                     idle_rounds = 0
                 elif not running:
                     idle_rounds += 1
-                    if idle_rounds >= self.max_idle_rounds:
+                    if idle_rounds >= self.max_idle_rounds and stopping:
                         stalled = True   # unresolvable (cycle / all leased)
                         break
                     time.sleep(self.poll)
@@ -448,10 +770,10 @@ class Engine:
         # effective parallelism: the inline transports run tasks serially,
         # and the thread pool is sized by `capacity`, so overhead
         # accounting must not multiply wall time by phantom workers
-        eff_workers = 1 if inline else min(self.workers, self.capacity)
+        eff_workers = 1 if inline else min(peak_workers, self.capacity)
         return EngineReport(
-            results=results, trace=self.tracer, workers=eff_workers,
-            pool_workers=self.workers,
+            results=results, trace=self.tracer, workers=max(eff_workers, 1),
+            pool_workers=max(peak_workers, 1),
             wall_s=time.perf_counter() - t_wall0,
             errors=self.backend.errors(), stalled=stalled,
             backend_stats=self.backend.stats())

@@ -34,7 +34,23 @@ REQUEUED = "requeued"
 WORKER_DEAD = "worker_dead"
 RPC = "rpc"                     # one scheduler round-trip (the paper's RTT)
 
+# serving-layer events (repro.core.serving): one *request* may ride a
+# coalesced batch task, so its lifecycle is traced separately from tasks
+REQ_ENQUEUED = "req_enqueued"   # admitted to the frontend queue
+REQ_DONE = "req_done"           # response delivered (extra: latency_s, ok)
+REQ_REJECTED = "req_rejected"   # bounced by admission backpressure
+BATCH_FORMED = "batch_formed"   # requests coalesced into one engine task
+
 TERMINAL = (COMPLETED, FAILED)
+
+
+class WorkerCrash(Exception):
+    """Raise from inside an `execute` callback to simulate (or propagate) a
+    fatal worker failure.  The engine marks the raising worker dead,
+    announces its Exit so the in-flight task and everything it still holds
+    is requeued (never marked failed), and keeps dispatching on the
+    surviving workers — the paper's node-failure recovery, triggerable from
+    application code (runtime.elastic uses it for crash drills)."""
 
 
 class TraceEvent:
@@ -86,6 +102,7 @@ class TaskResult:
     value: Any = None
     error: Optional[str] = None
     virtual_s: float = 0.0      # injected straggler time (never slept)
+    crashed: bool = False       # WorkerCrash: requeue, don't record/fail
 
     @property
     def duration_s(self) -> float:

@@ -1,4 +1,4 @@
-"""Trace recorder + empirical overhead / METG analysis.
+"""Trace recorder + empirical overhead / METG / latency analysis.
 
 The recorder is an append-only, thread-safe list of `TraceEvent`s stamped
 by an injectable clock.  Analysis turns an event stream into the paper's
@@ -11,6 +11,11 @@ quantities *measured from the running system* rather than modelled:
   * tasks_per_s         — dispatch throughput
   * empirical METG      — task duration at which measured overhead equals
                           compute (§3: eff = t / (t + overhead) = 50%)
+  * request latency     — serving mode (`repro.core.serving`): per-request
+                          enqueue -> complete latency with p50/p95/p99
+                          percentiles plus admission queue-depth stats,
+                          computed from the REQ_* / BATCH_FORMED events
+                          (`LatencyReport`, attached to `OverheadReport`)
 
 `crosscheck()` compares an empirical value against the analytic scaling
 laws in `repro.core.metg` and reports whether they agree to within an
@@ -22,10 +27,25 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.core.engine.model import (COMPLETED, FAILED, REQUEUED, RPC,
-                                     RUN_END, RUN_START, STOLEN, TraceEvent,
-                                     real_clock)
+from repro.core.engine.model import (BATCH_FORMED, COMPLETED, FAILED,
+                                     REQ_DONE, REQ_ENQUEUED, REQ_REJECTED,
+                                     REQUEUED, RPC, RUN_END, RUN_START,
+                                     STOLEN, TraceEvent, real_clock)
 from repro.core.metg import same_order
+
+
+def percentile(sorted_vals: list, q: float) -> float:
+    """Linear-interpolated percentile of an ascending-sorted list
+    (q in [0, 1]); 0.0 on empty input."""
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return float(sorted_vals[0])
+    pos = q * (len(sorted_vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = pos - lo
+    return float(sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac)
 
 
 class TraceRecorder:
@@ -80,6 +100,88 @@ class TraceRecorder:
     def report(self, workers: int = 1) -> "OverheadReport":
         return OverheadReport.from_trace(self, workers=workers)
 
+    def latency_report(self) -> "LatencyReport":
+        return LatencyReport.from_trace(self)
+
+
+@dataclass
+class LatencyReport:
+    """Per-request latency accounting for the serving layer, computed from
+    the REQ_* / BATCH_FORMED event stream: enqueue -> complete latency
+    percentiles (tail latency is the serving SLO, so p95/p99 matter more
+    than the mean) plus admission queue-depth stats."""
+    n_requests: int = 0              # requests that got a response
+    n_failed: int = 0                # responses delivered with ok=False
+    n_rejected: int = 0              # bounced by admission backpressure
+    n_batches: int = 0               # engine tasks the requests rode on
+    mean_batch: float = 0.0
+    mean_s: float = 0.0
+    p50_s: float = 0.0
+    p95_s: float = 0.0
+    p99_s: float = 0.0
+    max_s: float = 0.0
+    queue_depth_mean: float = 0.0    # sampled at every enqueue + dispatch
+    queue_depth_max: int = 0
+    batch_wait_mean_s: float = 0.0   # oldest request's age at coalesce time
+
+    @classmethod
+    def from_trace(cls, trace: "TraceRecorder") -> "LatencyReport":
+        lats: list[float] = []
+        depths: list[int] = []
+        n_failed = n_rejected = n_batches = 0
+        batched = 0
+        wait_s = 0.0
+        with trace._lock:
+            events = list(trace.events)
+        for e in events:
+            ev = e.event
+            if ev == REQ_DONE:
+                lats.append(e.extra.get("latency_s", 0.0))
+                if not e.extra.get("ok", True):
+                    n_failed += 1
+            elif ev == REQ_ENQUEUED:
+                depths.append(e.extra.get("depth", 0))
+            elif ev == BATCH_FORMED:
+                n_batches += 1
+                batched += e.extra.get("size", 0)
+                wait_s += e.extra.get("wait_s", 0.0)
+                depths.append(e.extra.get("depth", 0))
+            elif ev == REQ_REJECTED:
+                n_rejected += 1
+        lats.sort()
+        return cls(
+            n_requests=len(lats),
+            n_failed=n_failed,
+            n_rejected=n_rejected,
+            n_batches=n_batches,
+            mean_batch=(batched / n_batches) if n_batches else 0.0,
+            mean_s=(sum(lats) / len(lats)) if lats else 0.0,
+            p50_s=percentile(lats, 0.50),
+            p95_s=percentile(lats, 0.95),
+            p99_s=percentile(lats, 0.99),
+            max_s=lats[-1] if lats else 0.0,
+            queue_depth_mean=(sum(depths) / len(depths)) if depths else 0.0,
+            queue_depth_max=max(depths, default=0),
+            batch_wait_mean_s=(wait_s / n_batches) if n_batches else 0.0,
+        )
+
+    def summary(self) -> dict:
+        return {
+            "n_requests": self.n_requests, "n_failed": self.n_failed,
+            "n_rejected": self.n_rejected, "n_batches": self.n_batches,
+            "mean_batch": round(self.mean_batch, 2),
+            "latency_ms": {
+                "mean": round(self.mean_s * 1e3, 3),
+                "p50": round(self.p50_s * 1e3, 3),
+                "p95": round(self.p95_s * 1e3, 3),
+                "p99": round(self.p99_s * 1e3, 3),
+                "max": round(self.max_s * 1e3, 3),
+            },
+            "queue_depth_mean": round(self.queue_depth_mean, 2),
+            "queue_depth_max": self.queue_depth_max,
+            "batch_wait_mean_ms": round(self.batch_wait_mean_s * 1e3, 3),
+        }
+
 
 @dataclass
 class OverheadReport:
@@ -95,6 +197,7 @@ class OverheadReport:
     n_rpc: int = 0
     dispatch_s: float = 0.0          # total stolen -> run_start latency
     rpc_by_op: dict = field(default_factory=dict)  # op -> (count, total_s)
+    requests: Optional[LatencyReport] = None  # serving mode, else None
 
     @classmethod
     def from_trace(cls, trace: TraceRecorder, workers: int = 1
@@ -142,7 +245,11 @@ class OverheadReport:
             rpc_s *= trace.rpc_seen / n_rpc
             n_rpc = trace.rpc_seen
         requeued = sum(e.extra.get("n", 1) for e in trace.of(REQUEUED))
+        lat = LatencyReport.from_trace(trace)
+        if lat.n_requests == 0 and lat.n_rejected == 0:
+            lat = None                    # batch mode: no request stream
         return cls(
+            requests=lat,
             n_tasks=trace.count(COMPLETED) + trace.count(FAILED),
             n_failed=trace.count(FAILED),
             n_requeued=requeued,
@@ -189,7 +296,7 @@ class OverheadReport:
         return self.per_task_overhead_s
 
     def summary(self) -> dict:
-        return {
+        out = {
             "n_tasks": self.n_tasks, "n_failed": self.n_failed,
             "n_requeued": self.n_requeued, "workers": self.workers,
             "wall_s": round(self.wall_s, 6),
@@ -198,6 +305,9 @@ class OverheadReport:
             "rpc_per_task_us": round(self.rpc_per_task_s * 1e6, 2),
             "empirical_metg_s": self.empirical_metg(),
         }
+        if self.requests is not None:
+            out["requests"] = self.requests.summary()
+        return out
 
 
 def crosscheck(scheduler: str, empirical_s: float, analytic_s: float,

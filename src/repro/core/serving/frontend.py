@@ -1,0 +1,287 @@
+"""Admission control + METG-aware dynamic batching for the resident engine.
+
+`Frontend` owns the request side of the serving subsystem: a bounded
+admission queue with backpressure, a coalescer that packs requests into
+engine tasks sized by the METG granularity laws (adapting to the live
+worker count and observed per-request time), and a max-wait deadline so
+tail latency is bounded even when traffic trickles.  See the package
+docstring for the tuning guidance.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, Optional
+
+from repro.core.engine.model import (BATCH_FORMED, REQ_DONE, REQ_ENQUEUED,
+                                     REQ_REJECTED, WorkerCrash, next_seq)
+from repro.core.metg import METGModel, pick_batch_size
+
+
+class AdmissionFull(RuntimeError):
+    """The admission queue is full (reject policy) or stayed full past the
+    submit timeout (block policy) — the client should back off."""
+
+
+class ServeRequest:
+    """One in-flight request: resolved exactly once (re-executions after a
+    worker death hit the already-set guard), waitable from any thread."""
+
+    __slots__ = ("name", "payload", "meta", "t_enqueue", "t_done",
+                 "value", "ok", "error", "_event")
+
+    def __init__(self, name: str, payload, meta: Optional[dict],
+                 t_enqueue: float):
+        self.name = name
+        self.payload = payload
+        self.meta = meta or {}
+        self.t_enqueue = t_enqueue
+        self.t_done = 0.0
+        self.value = None
+        self.ok = False
+        self.error: Optional[str] = None
+        self._event = threading.Event()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """True once a response is delivered; False on timeout."""
+        return self._event.wait(timeout)
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency_s(self) -> float:
+        """Enqueue -> response latency on the engine's trace clock."""
+        return (self.t_done - self.t_enqueue) if self.done else 0.0
+
+    def __repr__(self):
+        state = ("ok" if self.ok else f"err={self.error!r}") if self.done \
+            else "pending"
+        return f"ServeRequest({self.name}, {state})"
+
+
+class Frontend:
+    """Enqueue requests, coalesce them into METG-sized engine tasks.
+
+    `execute_batch(payloads)` runs on an engine worker and returns a list
+    of per-request values (same order/length), a single value broadcast to
+    the batch, or None.  Raising marks every request in the batch failed;
+    raising `WorkerCrash` instead kills the worker and the batch is
+    requeued, not failed (fault drills).
+
+    A batch is dispatched when the queue reaches the current METG target
+    (`pick_batch_size` at the live worker count and the observed
+    per-request EWMA) or when the oldest queued request has waited
+    `max_wait_s`, whichever comes first.
+    """
+
+    def __init__(self, engine, execute_batch: Callable, *,
+                 max_queue: int = 256, max_batch: int = 64,
+                 max_wait_s: float = 0.005, target_eff: float = 0.9,
+                 per_request_s0: float = 1e-3, scheduler: str = "dwork",
+                 model: Optional[METGModel] = None, policy: str = "block"):
+        if policy not in ("block", "reject"):
+            raise ValueError(f"unknown backpressure policy {policy!r}")
+        if not engine.resident:
+            raise ValueError("Frontend requires Engine(resident=True)")
+        self.engine = engine
+        self.execute_batch = execute_batch
+        self.max_queue = max(int(max_queue), 1)
+        self.max_batch = max(int(max_batch), 1)
+        self.max_wait_s = max_wait_s
+        self.target_eff = target_eff
+        self.scheduler = scheduler
+        self.model = model or METGModel.from_paper()
+        self.policy = policy
+        self._per_req_s = max(per_request_s0, 1e-9)  # observed-time EWMA
+        self._ewma_alpha = 0.2
+        self._queue: deque[ServeRequest] = deque()
+        self._cond = threading.Condition()
+        self._closing = False
+        self._force_flush = False
+        self.accepted = 0
+        self.rejected = 0
+        self.batches = 0
+        self._thread: Optional[threading.Thread] = None
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> "Frontend":
+        """Start the coalescer (and the engine's resident loop if the
+        caller hasn't already)."""
+        if self._thread is not None:
+            raise RuntimeError("frontend already started")
+        if not self.engine.started:
+            self.engine.start()
+        self._closing = False
+        self._thread = threading.Thread(target=self._coalesce_loop,
+                                        name="serving-frontend", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self, *, drain: bool = True,
+              timeout: Optional[float] = None) -> bool:
+        """Stop admitting, flush the queue as final batches, and (with
+        `drain=True`) wait for every dispatched batch to finish.  Does NOT
+        shut the engine down — that is the engine owner's call."""
+        with self._cond:
+            self._closing = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if drain:
+            return self.engine.drain(timeout)
+        return True
+
+    # ------------------------------------------------------------- client
+    def submit(self, payload, *, meta: Optional[dict] = None,
+               timeout: Optional[float] = None) -> ServeRequest:
+        """Admit one request.  With a full queue: `policy="reject"` raises
+        `AdmissionFull` immediately; `policy="block"` waits for space up
+        to `timeout` seconds (None = forever) and then raises."""
+        tracer = self.engine.tracer
+        with self._cond:
+            if self._closing:
+                raise RuntimeError("frontend is closed")
+            if len(self._queue) >= self.max_queue:
+                blocked = (self.policy == "block"
+                           and (timeout is None or timeout > 0)
+                           and self._cond.wait_for(
+                               lambda: (len(self._queue) < self.max_queue
+                                        or self._closing), timeout))
+                if not blocked or self._closing:
+                    self.rejected += 1
+                    tracer.emit(REQ_REJECTED, depth=len(self._queue),
+                                policy=self.policy)
+                    raise AdmissionFull(
+                        f"admission queue full ({self.max_queue})")
+            # next_seq(): engine task names are single-use forever, so
+            # request/batch names must be unique across every frontend
+            # that ever shares an engine (or a task server)
+            req = ServeRequest(f"__req{next_seq()}", payload, meta,
+                               t_enqueue=tracer.clock())
+            self._queue.append(req)
+            self.accepted += 1
+            tracer.emit(REQ_ENQUEUED, task=req.name,
+                        depth=len(self._queue))
+            self._cond.notify_all()
+        return req
+
+    def flush(self):
+        """Dispatch whatever is queued right now without waiting for the
+        batch target or deadline (deterministic tests, graceful drains)."""
+        with self._cond:
+            self._force_flush = True
+            self._cond.notify_all()
+
+    # ------------------------------------------------------------ batching
+    def target_batch(self) -> int:
+        """Current METG-aware batch target: the granularity at which
+        scheduling overhead stays under (1 - target_eff) of compute, for
+        the LIVE worker count and the observed per-request time."""
+        live = max(self.engine.live_workers(), 1)
+        n = pick_batch_size(self.scheduler, live, self._per_req_s,
+                            target_eff=self.target_eff, model=self.model)
+        return max(1, min(n, self.max_batch))
+
+    def _coalesce_loop(self):
+        clock = self.engine.tracer.clock
+        while True:
+            with self._cond:
+                while True:
+                    if self._closing:
+                        break
+                    n = len(self._queue)
+                    target = self.target_batch()
+                    if n >= target:
+                        break
+                    if n and self._force_flush:
+                        break
+                    wait = None
+                    if n:
+                        age = clock() - self._queue[0].t_enqueue
+                        if age >= self.max_wait_s:
+                            break
+                        # under a ManualClock `age` may never advance;
+                        # the floor keeps the wait finite either way
+                        wait = max(self.max_wait_s - age, 1e-4)
+                    self._cond.wait(wait)
+                self._force_flush = False
+                if not self._queue:
+                    if self._closing:
+                        return
+                    continue
+                take = min(len(self._queue), max(self.target_batch(), 1))
+                batch = [self._queue.popleft() for _ in range(take)]
+                depth_after = len(self._queue)
+                self._cond.notify_all()      # space freed: wake submitters
+            try:
+                self._dispatch(batch, depth_after)
+            except Exception as e:            # noqa: BLE001
+                # a dispatch failure (engine shut down under us, backend
+                # error) must never strand waiters — fail the batch loudly
+                err = repr(e)
+                for r in batch:
+                    self._resolve(r, ok=False, error=err)
+
+    def _dispatch(self, batch: list, depth_after: int):
+        tracer = self.engine.tracer
+        self.batches += 1
+        name = f"__batch{next_seq()}"
+        now = tracer.clock()
+        tracer.emit(BATCH_FORMED, task=name, size=len(batch),
+                    wait_s=now - batch[0].t_enqueue,
+                    target=self.target_batch(), depth=depth_after)
+        reqs = tuple(batch)
+        self.engine.submit(name, fn=lambda: self._run_batch(reqs))
+
+    def _run_batch(self, reqs: tuple):
+        clock = self.engine.tracer.clock
+        t0 = clock()
+        try:
+            values = self.execute_batch([r.payload for r in reqs])
+        except WorkerCrash:
+            raise          # worker dies; the engine requeues the batch
+        except Exception as e:                        # noqa: BLE001
+            err = repr(e)
+            for r in reqs:
+                self._resolve(r, ok=False, error=err)
+            raise          # the batch task is marked failed, consistently
+        dt = clock() - t0
+        a = self._ewma_alpha
+        self._per_req_s = ((1 - a) * self._per_req_s
+                           + a * max(dt / len(reqs), 1e-9))
+        if isinstance(values, (list, tuple)) and len(values) == len(reqs):
+            for r, v in zip(reqs, values):
+                self._resolve(r, ok=True, value=v)
+        else:
+            for r in reqs:
+                self._resolve(r, ok=True, value=values)
+        return True
+
+    def _resolve(self, req: ServeRequest, *, ok: bool, value=None,
+                 error: Optional[str] = None):
+        if req._event.is_set():
+            return             # re-execution after a requeue: deliver once
+        tracer = self.engine.tracer
+        req.value = value
+        req.ok = ok
+        req.error = error
+        req.t_done = tracer.clock()
+        tracer.emit(REQ_DONE, task=req.name, worker=None,
+                    latency_s=req.t_done - req.t_enqueue, ok=ok)
+        req._event.set()
+
+    # ---------------------------------------------------------------- obs
+    def stats(self) -> dict:
+        with self._cond:
+            depth = len(self._queue)
+        return {
+            "accepted": self.accepted, "rejected": self.rejected,
+            "batches": self.batches, "queue_depth": depth,
+            "target_batch": self.target_batch(),
+            "per_request_ewma_s": self._per_req_s,
+            "live_workers": self.engine.live_workers(),
+            "engine_ready_depth": self.engine.backend.ready_depth(),
+        }

@@ -1,9 +1,12 @@
-"""dwork-scheduled serving driver: request batches as dwork tasks.
+"""Continuous-serving driver: generation requests through the resident
+engine + METG-batching frontend.
 
-A TaskServer holds generation requests; serving workers Steal batches
-(batch size chosen by the METG model for the worker count — the paper's
-granularity guidance automated), run prefill + greedy decode, Complete.
-Worker crashes requeue their requests (Exit / lease expiry).
+Requests enter a bounded admission queue (`repro.core.serving.Frontend`);
+the frontend coalesces them into engine tasks sized by the METG model for
+the live worker count (the paper's granularity guidance automated) or by
+the max-wait deadline, and the resident engine dispatches them with
+faults/leases/tracing intact — a worker crash requeues its in-flight
+requests.  Per-request p50/p95/p99 latency comes straight from the trace.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
         --requests 12 --max-new 8
@@ -18,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.dwork import Client, InProcTransport, TaskServer
-from repro.core.metg import METGModel, pick_batch_size
+from repro.core.engine import Engine
+from repro.core.serving import Frontend
 from repro.models.common import Options
 from repro.models.model import build_model
 from repro.runtime.serve_step import greedy_generate
@@ -33,41 +36,16 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="frontend deadline before a partial batch ships")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced() if args.reduced else get_config(args.arch)
     model = build_model(cfg, Options(q_block=64, kv_block=64, moe_group=64))
     params = model.init(jax.random.PRNGKey(0))
 
-    srv = TaskServer(lease_timeout=120.0)
-    driver = Client(InProcTransport(srv), "driver")
-    rng = np.random.default_rng(0)
-    prompts = {}
-    for i in range(args.requests):
-        name = f"req{i}"
-        prompts[name] = rng.integers(
-            2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
-        driver.create(name, meta={"len": args.prompt_len})
-
-    # METG-aware batch size for this worker count
-    per_req_s = 0.05
-    batch = min(args.requests,
-                pick_batch_size("dwork", args.workers, per_req_s,
-                                model=METGModel.from_paper()))
-    print(f"[serve] METG-chosen batch size: {batch}")
-
-    worker = Client(InProcTransport(srv), "w0")
-    done = 0
-    t0 = time.time()
-    while True:
-        resp = worker.steal(n=batch)
-        if type(resp).__name__ == "ExitResp":
-            break
-        if type(resp).__name__ == "NotFound":
-            time.sleep(0.01)
-            continue
-        names = [n for n, _ in resp.tasks]
-        toks = jnp.asarray(np.stack([prompts[n] for n in names]))
+    def execute_batch(prompts):
+        toks = jnp.asarray(np.stack(prompts))
         b = {"tokens": toks}
         if cfg.mrope:
             B, S = toks.shape
@@ -79,14 +57,40 @@ def main(argv=None):
                 jnp.bfloat16)
         out = greedy_generate(model, params, b, args.max_new,
                               args.prompt_len + args.max_new + 1)
-        assert out.shape == (len(names), args.max_new)
+        assert out.shape == (len(prompts), args.max_new)
         assert not bool(jnp.any(out < 0))
-        for n in names:
-            worker.complete(n)
-            done += 1
-        print(f"[serve] batch of {len(names)} done "
-              f"({done}/{args.requests}, {time.time()-t0:.1f}s)")
-    print(f"[serve] all {done} requests served; stats: {srv.stats()}")
+        return [np.asarray(row) for row in out]
+
+    engine = Engine(workers=args.workers, resident=True, lease_timeout=120.0)
+    frontend = Frontend(engine, execute_batch,
+                        max_queue=max(args.requests, 16),
+                        max_batch=max(args.requests, 1),
+                        max_wait_s=args.max_wait_ms * 1e-3,
+                        per_request_s0=0.05)
+    frontend.start()
+    print(f"[serve] METG batch target for {args.workers} worker(s): "
+          f"{frontend.target_batch()}")
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    reqs = [frontend.submit(rng.integers(2, cfg.vocab_size,
+                                         size=args.prompt_len)
+                            .astype(np.int32))
+            for _ in range(args.requests)]
+    done = 0
+    for r in reqs:
+        assert r.wait(600.0), f"request {r.name} never completed"
+        assert r.ok, f"request {r.name} failed: {r.error}"
+        assert r.value.shape == (args.max_new,)
+        done += 1
+    frontend.close()
+    report = engine.shutdown()
+    lat = report.trace.latency_report()
+    print(f"[serve] all {done} requests served in {time.time() - t0:.1f}s; "
+          f"batches={lat.n_batches} mean_batch={lat.mean_batch:.1f}")
+    print(f"[serve] latency ms: p50={lat.p50_s * 1e3:.1f} "
+          f"p95={lat.p95_s * 1e3:.1f} p99={lat.p99_s * 1e3:.1f}")
+    print(f"[serve] server stats: {report.backend_stats}")
     return done
 
 

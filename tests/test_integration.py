@@ -63,26 +63,26 @@ def test_pipeline_deterministic():
 
 
 def test_elastic_pool_crash_recovery():
-    pool = ElasticPool(lease_timeout=5.0, per_task_s=0.001)
-    for i in range(30):
-        pool.submit(f"step{i}")
-    seen = []
-    pool.start_worker("w_bad", lambda n, m: seen.append(n) or True,
-                      fail_after=3)
-    pool.start_worker("w_ok", lambda n, m: seen.append(n) or True)
-    stats = pool.join(timeout=30)
-    assert stats["completed"] == 30
-    assert stats["requeued"] >= 1          # the crashed worker's stolen tasks
+    with ElasticPool(lease_timeout=5.0, per_task_s=0.001) as pool:
+        for i in range(30):
+            pool.submit(f"step{i}")
+        seen = []
+        pool.start_worker("w_bad", lambda n, m: seen.append(n) or True,
+                          fail_after=3)
+        pool.start_worker("w_ok", lambda n, m: seen.append(n) or True)
+        stats = pool.join(timeout=30)
+        assert stats["completed"] == 30
+        assert stats["requeued"] >= 1      # the crashed worker's stolen tasks
 
 
 def test_elastic_remesh_called():
     calls = []
-    pool = ElasticPool(remesh=lambda n: calls.append(n))
-    pool.submit("a")
-    pool.start_worker("w0", lambda n, m: True)
-    pool.join(timeout=10)
-    pool.lose_worker("w0")
-    assert calls == [1, 0]
+    with ElasticPool(remesh=lambda n: calls.append(n)) as pool:
+        pool.submit("a")
+        pool.start_worker("w0", lambda n, m: True)
+        pool.join(timeout=10)
+        pool.lose_worker("w0")
+        assert calls == [1, 0]
 
 
 def test_greedy_generate_prefill_decode_consistency():

@@ -1,0 +1,402 @@
+"""Continuous-serving subsystem tests: resident engine lifecycle
+(submit-while-running, drain-to-empty, dynamic membership, WorkerCrash
+requeue), frontend admission/backpressure, METG-aware dynamic batching,
+and per-request latency accounting from the trace."""
+import threading
+import time
+
+import pytest
+
+from repro.core.engine import (REQ_DONE, REQ_ENQUEUED, REQUEUED, Engine,
+                               FaultPlan, LatencyReport, ManualClock,
+                               TraceRecorder, WorkerCrash, percentile)
+from repro.core.metg import METGModel
+from repro.core.serving import AdmissionFull, Frontend
+
+
+# ------------------------------------------------------- resident engine
+
+
+def test_resident_submit_while_running_and_drain_to_empty():
+    eng = Engine(workers=2, resident=True)
+    eng.start()
+    try:
+        seen = []
+        for i in range(50):
+            eng.submit(f"a{i}", fn=lambda i=i: seen.append(i))
+        assert eng.drain(timeout=30)
+        assert len(seen) == 50
+        # the pool is still live: a second wave after a full drain
+        for i in range(50):
+            eng.submit(f"b{i}", fn=lambda i=i: seen.append(i))
+        assert eng.drain(timeout=30)
+        assert len(seen) == 100
+    finally:
+        rep = eng.shutdown()
+    assert len(rep.completed) == 100 and not rep.stalled
+
+
+def test_resident_submit_with_deps_while_running():
+    eng = Engine(workers=2, resident=True)
+    eng.start()
+    try:
+        order = []
+        eng.submit("root", fn=lambda: order.append("root"))
+        eng.submit("mid", fn=lambda: order.append("mid"), deps=["root"])
+        eng.submit("leaf", fn=lambda: order.append("leaf"), deps=["mid"])
+        assert eng.drain(timeout=30)
+        assert order == ["root", "mid", "leaf"]
+    finally:
+        eng.shutdown()
+
+
+def test_resident_shutdown_without_work_is_clean():
+    eng = Engine(workers=2, resident=True)
+    eng.start()
+    rep = eng.shutdown()
+    assert not rep.stalled and rep.results == {}
+
+
+def test_resident_failure_poisons_dependents_and_drain_completes():
+    eng = Engine(workers=1, resident=True)
+    eng.start()
+    try:
+        eng.submit("bad", fn=lambda: 1 / 0)
+        eng.submit("child", fn=lambda: None, deps=["bad"])
+        assert eng.drain(timeout=30)     # poisoned tasks count as terminal
+        # a dependent submitted AFTER the failure fails engine-side too
+        eng.submit("late", fn=lambda: None, deps=["bad"])
+        assert eng.drain(timeout=30)
+    finally:
+        rep = eng.shutdown()
+    assert not rep.results["bad"].ok
+    assert "child" in rep.errors
+    assert "child" not in rep.completed and "late" not in rep.completed
+
+
+def test_resident_worker_crash_requeues_in_flight_zero_loss():
+    eng = Engine(workers=0, resident=True, steal_n=4)
+    done = {}
+
+    def execute(name, meta, worker):
+        if worker == "bad" and done.get("bad", 0) >= 2:
+            raise WorkerCrash("drill")
+        done[worker] = done.get(worker, 0) + 1
+        return True
+
+    eng.start(execute, pass_worker=True)
+    try:
+        eng.add_worker("bad")
+        eng.add_worker("ok")
+        for i in range(40):
+            eng.submit(f"t{i}")
+        assert eng.drain(timeout=30)
+    finally:
+        rep = eng.shutdown()
+    assert len(rep.completed) == 40          # zero loss
+    assert done["bad"] == 2
+    assert rep.trace.count("worker_dead") == 1
+    requeued = sum(e.extra.get("n", 1) for e in rep.trace.of(REQUEUED))
+    assert requeued >= 1                     # the in-flight steal came back
+    assert eng.live_workers() == 1
+
+
+def test_resident_fault_plan_kill_mid_stream():
+    faults = FaultPlan(0).kill_worker("w1", after_steals=3)
+    eng = Engine(workers=4, resident=True, steal_n=2, faults=faults)
+    eng.start()
+    try:
+        for i in range(100):
+            eng.submit(f"t{i}", fn=lambda: None)
+        assert eng.drain(timeout=30)
+    finally:
+        rep = eng.shutdown()
+    assert len(rep.completed) == 100
+    assert rep.trace.count("worker_dead") == 1
+    assert eng.live_workers() == 3
+
+
+def test_resident_lose_worker_recycles_and_membership_shrinks():
+    eng = Engine(workers=3, resident=True)
+    eng.start()
+    try:
+        eng.lose_worker("w0")
+        for i in range(30):
+            eng.submit(f"t{i}", fn=lambda: None)
+        assert eng.drain(timeout=30)
+    finally:
+        rep = eng.shutdown()
+    assert len(rep.completed) == 30
+    assert eng.live_workers() == 2
+    assert all(r.worker != "w0" for r in rep.results.values())
+
+
+def test_resident_dynamic_steal_n_applies_mid_run():
+    """The loop re-reads self.steal_n every round (elastic retunes it on
+    membership change): larger batches -> strictly fewer round-trips."""
+
+    def rpcs(steal_n):
+        eng = Engine(workers=1, resident=True)
+        eng.steal_n = steal_n            # mutated after construction
+        eng.start()
+        for i in range(200):
+            eng.submit(f"t{i}", fn=lambda: None)
+        assert eng.drain(timeout=30)
+        return eng.shutdown().overhead().n_rpc
+
+    assert rpcs(8) < rpcs(1)
+
+
+def test_resident_duplicate_task_name_rejected_not_wedged():
+    """A duplicate Create is a server-side no-op, so silently accepting
+    it would leak an _inflight slot and hang drain() forever."""
+    eng = Engine(workers=1, resident=True)
+    eng.start()
+    try:
+        eng.submit("t", fn=lambda: None)
+        with pytest.raises(ValueError):
+            eng.submit("t", fn=lambda: None)
+        assert eng.drain(timeout=30)         # the leak would hang this
+    finally:
+        rep = eng.shutdown()
+    assert len(rep.completed) == 1
+
+
+def test_resident_worker_rejoins_under_old_id_after_loss():
+    eng = Engine(workers=0, resident=True)
+    eng.start()
+    try:
+        eng.add_worker("w_a")
+        eng.lose_worker("w_a")
+        eng.add_worker("w_a")                # recovered node, same id
+        for i in range(20):
+            eng.submit(f"t{i}", fn=lambda: None)
+        assert eng.drain(timeout=30)
+        assert eng.live_workers() == 1
+    finally:
+        rep = eng.shutdown()
+    assert len(rep.completed) == 20
+
+
+def test_batch_mode_rejects_resident_api():
+    eng = Engine(workers=1)
+    with pytest.raises(RuntimeError):
+        eng.start()
+    with pytest.raises(RuntimeError):
+        eng.shutdown()
+
+
+# ------------------------------------------------------------- frontend
+
+
+def _echo_frontend(eng, **kw):
+    return Frontend(eng, lambda ps: [p * 2 for p in ps], **kw)
+
+
+def test_frontend_serves_and_traces_latency():
+    eng = Engine(workers=4, resident=True, steal_n=4)
+    fe = _echo_frontend(eng, max_wait_s=0.002, max_batch=16,
+                        per_request_s0=2e-6, max_queue=512)
+    fe.start()
+    reqs = [fe.submit(i) for i in range(300)]
+    for r in reqs:
+        assert r.wait(30), f"{r} never completed"
+    assert all(r.ok for r in reqs)
+    assert [r.value for r in reqs] == [2 * i for i in range(300)]
+    fe.close()
+    rep = eng.shutdown()
+    lat = rep.overhead().requests
+    assert lat is not None and lat.n_requests == 300
+    assert lat.n_batches >= 1 and lat.mean_batch > 1.0   # real coalescing
+    assert 0.0 < lat.p50_s <= lat.p95_s <= lat.p99_s <= lat.max_s
+    assert all(r.latency_s > 0 for r in reqs)
+
+
+def test_frontend_zero_loss_across_worker_kill():
+    faults = FaultPlan(0).kill_worker("w1", after_steals=4)
+    eng = Engine(workers=4, resident=True, steal_n=2, faults=faults)
+    fe = _echo_frontend(eng, max_wait_s=0.001, max_batch=8,
+                        per_request_s0=2e-6, max_queue=512)
+    fe.start()
+    reqs = [fe.submit(i) for i in range(200)]
+    for r in reqs:
+        assert r.wait(30), "request lost across worker death"
+    assert all(r.ok and r.value == 2 * i for i, r in enumerate(reqs))
+    fe.close()
+    rep = eng.shutdown()
+    assert rep.trace.count("worker_dead") == 1
+    assert sum(e.extra.get("n", 1) for e in rep.trace.of(REQUEUED)) >= 1
+    assert rep.overhead().requests.n_requests == 200
+
+
+def test_frontend_reject_backpressure_when_queue_full():
+    eng = Engine(workers=1, resident=True)
+    fe = _echo_frontend(eng, max_queue=4, policy="reject")
+    # coalescer not started: the queue only fills
+    for i in range(4):
+        fe.submit(i)
+    with pytest.raises(AdmissionFull):
+        fe.submit(99)
+    assert fe.rejected == 1
+    assert eng.tracer.count("req_rejected") == 1
+
+
+def test_frontend_block_backpressure_times_out_then_recovers():
+    eng = Engine(workers=1, resident=True)
+    fe = _echo_frontend(eng, max_queue=2, policy="block")
+    fe.submit(0)
+    fe.submit(1)
+    with pytest.raises(AdmissionFull):
+        fe.submit(2, timeout=0.05)
+    # start serving: space frees and a blocked submit goes through
+    fe.start()
+    r = fe.submit(3, timeout=10.0)
+    assert r.wait(10) and r.ok
+    fe.close()
+    eng.shutdown()
+
+
+def test_frontend_max_wait_deadline_ships_partial_batch():
+    eng = Engine(workers=1, resident=True)
+    fe = _echo_frontend(eng, max_wait_s=0.01, max_batch=64,
+                        per_request_s0=1e-7)  # target >> 1: deadline rules
+    fe.start()
+    t0 = time.perf_counter()
+    r = fe.submit(21)
+    assert r.wait(10) and r.value == 42
+    assert time.perf_counter() - t0 < 5.0
+    fe.close()
+    eng.shutdown()
+
+
+def test_frontend_batch_target_adapts_to_workers_and_observed_time():
+    eng = Engine(workers=4, resident=True)
+    fe = _echo_frontend(eng, max_batch=4096, per_request_s0=1e-6)
+    # dwork METG(P) = rtt*P: more live workers -> bigger batches needed
+    four = fe.target_batch()
+    eng._live = 16
+    sixteen = fe.target_batch()
+    assert sixteen == pytest.approx(4 * four, rel=0.01)
+    # slower observed per-request time -> smaller batches suffice
+    fe._per_req_s = 1e-3
+    assert fe.target_batch() < sixteen
+
+
+def test_frontend_execute_error_fails_requests_not_hangs():
+    eng = Engine(workers=1, resident=True)
+    fe = Frontend(eng, lambda ps: 1 / 0, max_wait_s=0.001)
+    fe.start()
+    r = fe.submit(1)
+    assert r.wait(10)
+    assert not r.ok and "ZeroDivisionError" in r.error
+    fe.close()
+    rep = eng.shutdown()
+    lat = rep.overhead().requests
+    assert lat.n_requests == 1 and lat.n_failed == 1
+
+
+def test_frontend_flush_dispatches_below_target():
+    eng = Engine(workers=1, resident=True)
+    fe = _echo_frontend(eng, max_wait_s=60.0, max_batch=64,
+                        per_request_s0=1e-7)  # huge target + deadline
+    fe.start()
+    r = fe.submit(5)
+    fe.flush()
+    assert r.wait(10) and r.value == 10
+    fe.close()
+    eng.shutdown()
+
+
+# ----------------------------------------------------- latency accounting
+
+
+def test_percentile_interpolation():
+    xs = sorted([10.0, 20.0, 30.0, 40.0])
+    assert percentile(xs, 0.0) == 10.0
+    assert percentile(xs, 1.0) == 40.0
+    assert percentile(xs, 0.5) == 25.0
+    assert percentile([], 0.5) == 0.0
+    assert percentile([7.0], 0.99) == 7.0
+
+
+def test_latency_report_from_synthetic_trace_deterministic():
+    clk = ManualClock(tick=0.0)
+    tr = TraceRecorder(clock=clk)
+    for i, lat in enumerate([0.001, 0.002, 0.003, 0.004]):
+        tr.emit(REQ_ENQUEUED, task=f"r{i}", depth=i + 1)
+        tr.emit(REQ_DONE, task=f"r{i}", latency_s=lat, ok=(i != 3))
+    tr.emit("batch_formed", task="b1", size=4, wait_s=0.002, depth=0)
+    lat = LatencyReport.from_trace(tr)
+    assert lat.n_requests == 4 and lat.n_failed == 1 and lat.n_batches == 1
+    assert lat.mean_batch == 4.0
+    assert lat.p50_s == pytest.approx(0.0025)
+    assert lat.max_s == pytest.approx(0.004)
+    assert lat.queue_depth_max == 4
+    assert lat.batch_wait_mean_s == pytest.approx(0.002)
+    s = lat.summary()
+    assert s["latency_ms"]["p50"] == pytest.approx(2.5)
+
+
+def test_elastic_pool_retunes_steal_n_on_membership_change():
+    """Satellite regression: batch size must track the LIVE worker count,
+    not the count at startup (the module docstring's promise)."""
+    from repro.runtime.elastic import ElasticPool
+    pool = ElasticPool(per_task_s=1e-6)     # tiny tasks -> visible batching
+    pool.start_worker("w_a", lambda n, m: True)
+    n1 = pool.engine.steal_n
+    pool.start_worker("w_b", lambda n, m: True)
+    n2 = pool.engine.steal_n
+    assert n2 > n1                          # dwork METG(P) grows with P
+    pool.lose_worker("w_b")
+    assert pool.engine.steal_n == n1        # shrinks back
+    for i in range(20):
+        pool.submit(f"t{i}")
+    stats = pool.join(timeout=30)
+    assert stats["completed"] == 20
+    pool.shutdown()
+
+
+def test_elastic_pool_serves_second_wave_after_join():
+    from repro.runtime.elastic import ElasticPool
+    pool = ElasticPool(per_task_s=0.001)
+    pool.start_worker("w0", lambda n, m: True)
+    for i in range(10):
+        pool.submit(f"a{i}")
+    assert pool.join(timeout=30)["completed"] == 10
+    for i in range(10):
+        pool.submit(f"b{i}")
+    assert pool.join(timeout=30)["completed"] == 20
+    pool.shutdown()
+
+
+def test_frontend_requires_resident_engine():
+    with pytest.raises(ValueError):
+        Frontend(Engine(workers=1), lambda ps: ps)
+
+
+def test_concurrent_submitters_thread_safe():
+    eng = Engine(workers=4, resident=True, steal_n=4)
+    fe = _echo_frontend(eng, max_queue=1024, max_wait_s=0.002,
+                        max_batch=32, per_request_s0=2e-6)
+    fe.start()
+    out = {}
+
+    # payload * 2 on a tuple concatenates: (c, i) -> (c, i, c, i)
+    def client_simple(cid):
+        rs = [fe.submit((cid, i)) for i in range(50)]
+        ok = True
+        for i, r in enumerate(rs):
+            if not r.wait(30) or not r.ok or r.value != (cid, i, cid, i):
+                ok = False
+        out[cid] = ok
+
+    threads = [threading.Thread(target=client_simple, args=(c,))
+               for c in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fe.close()
+    rep = eng.shutdown()
+    assert all(out.values())
+    assert rep.overhead().requests.n_requests == 200
