@@ -1,0 +1,186 @@
+"""Client overhead benchmark: per-future cost of the futures front door
+vs the raw engine path, at 1 / 4 / 16 workers, emitted as
+BENCH_client.json.
+
+The futures layer adds work per task on both sides of the dispatch
+loop — a Future allocation + registration at submit, the exception-
+capturing call wrapper at execution, and the first-terminal
+notification + condition broadcast at resolution.  This benchmark
+keeps that tax honest:
+
+    raw     run_pool over a pre-created TaskServer universe (the
+            engine-overhead baseline path, no futures)
+    client  the same workload as `Client.submit(...)` -> `gather(...)`
+            on the resident engine
+
+Modes:
+    (default)   quick run -> BENCH_client.json (+ stdout)
+    --full      2000 tasks instead of 400
+    --check     re-measure and fail (exit 1) if the client's per-future
+                overhead regressed > CHECK_TOLERANCE vs the committed
+                BENCH_client.json, or exceeds RATIO_LIMIT x the raw
+                engine overhead measured in the SAME run (the
+                acceptance bound: client <= 2x raw)
+"""
+from __future__ import annotations
+
+import gc
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.client import Client
+from repro.core.dwork import Client as DworkClient
+from repro.core.dwork import InProcTransport, TaskServer, run_pool
+
+# machine-speed probe shared with the engine gate (Python puts this
+# script's own directory on sys.path): both gates scale their committed
+# limits with ONE estimator
+from engine_overhead import _calibrate_us
+
+WORKER_COUNTS = (1, 4, 16)
+CHECK_TOLERANCE = 1.25          # CI fails if overhead grows > 25%
+RATIO_LIMIT = 2.0               # client must stay <= 2x the raw path
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BASELINE = REPO_ROOT / "BENCH_client.json"
+
+
+def _op(x: int) -> int:
+    return x * 2
+
+
+def bench_raw(n_tasks: int, workers: int, steal_n: int = 4,
+              repeats: int = 3) -> dict:
+    """The engine-overhead path: a universe created on a TaskServer and
+    drained by run_pool.  The create phase is folded into the wall (the
+    client's span covers ITS creates, so excluding the raw path's would
+    bias the ratio against the futures layer).  Best-of-N (hiccups only
+    ever ADD time)."""
+    best = None
+    for _ in range(max(repeats, 1)):
+        gc.collect()
+        srv = TaskServer()
+        boss = DworkClient(InProcTransport(srv), "boss")
+        t0 = time.perf_counter()
+        for i in range(n_tasks):
+            boss.create(f"t{i}", meta={"x": i})
+        create_s = time.perf_counter() - t0
+        rep = run_pool(srv, lambda name, meta: (True, meta["x"] * 2),
+                       workers=workers, steal_n=steal_n)
+        ov = rep.overhead()
+        wall = ov.wall_s + create_s
+        per_task = max(wall * ov.workers - ov.compute_s, 0.0) / n_tasks
+        if best is None or per_task < best[0]:
+            best = (per_task, n_tasks / wall if wall > 0 else 0.0)
+    return {
+        "workers": workers,
+        "tasks_per_s": round(best[1], 1),
+        "per_task_overhead_us": round(best[0] * 1e6, 2),
+    }
+
+
+def bench_client(n_tasks: int, workers: int, steal_n: int = 4,
+                 repeats: int = 3) -> dict:
+    """The futures path: submit -> Future -> gather on the resident
+    engine, per-future overhead measured from the same trace math."""
+    best = None
+    for _ in range(max(repeats, 1)):
+        gc.collect()
+        with Client(scheduler="dwork", workers=workers,
+                    steal_n=steal_n) as c:
+            fs = [c.submit(_op, i) for i in range(n_tasks)]
+            vals = c.gather(fs)
+            assert vals == [i * 2 for i in range(n_tasks)]
+            ov = c.report()
+        assert ov.n_tasks == n_tasks
+        if best is None or ov.per_task_overhead_s < best.per_task_overhead_s:
+            best = ov
+    return {
+        "workers": workers,
+        "futures_per_s": round(best.tasks_per_s, 1),
+        "per_future_overhead_us": round(best.per_task_overhead_s * 1e6, 2),
+    }
+
+
+def _warmup():
+    bench_raw(100, 1, repeats=1)
+    bench_client(100, 1, repeats=1)
+    gc.collect()
+
+
+
+
+def run(quick: bool = True) -> dict:
+    n = 400 if quick else 2000
+    _warmup()
+    out = {"n_tasks": n, "calibration_us": round(_calibrate_us(), 1),
+           "workers": {}}
+    for w in WORKER_COUNTS:
+        # both sides best-of-5: a CPU-throttle burst on a shared runner
+        # only ever ADDS time, so the minima are the stable estimates
+        # and their ratio converges to the intrinsic client tax
+        raw = bench_raw(n, w, repeats=5)
+        cli = bench_client(n, w, repeats=5)
+        ratio = (cli["per_future_overhead_us"]
+                 / max(raw["per_task_overhead_us"], 1e-9))
+        out["workers"][f"workers={w}"] = {
+            "raw": raw, "client": cli,
+            "client_vs_raw": round(ratio, 3),
+        }
+    return out
+
+
+def run_check() -> int:
+    """CI gate: per-future overhead must stay within CHECK_TOLERANCE of
+    the committed baseline AND within RATIO_LIMIT x the raw engine path
+    measured in the same run.  Over-limit results get two fresh
+    re-measurements before failing (shared-runner throttling bursts)."""
+    baseline = json.loads(BASELINE.read_text())
+    _warmup()
+    scale = 1.0
+    base_cal = baseline.get("calibration_us")
+    if base_cal:
+        scale = min(max(_calibrate_us() / base_cal, 1.0), 4.0)
+    print(f"machine-speed scale vs baseline: {scale:.2f}x")
+    failures = []
+    for w in WORKER_COUNTS:
+        cell = baseline["workers"][f"workers={w}"]
+        base_us = cell["client"]["per_future_overhead_us"]
+        limit_us = base_us * CHECK_TOLERANCE * scale
+        best_us = best_raw = None
+        for attempt in range(3):
+            raw = bench_raw(400, w, repeats=5)["per_task_overhead_us"]
+            us = bench_client(400, w, repeats=5)["per_future_overhead_us"]
+            best_us = us if best_us is None else min(best_us, us)
+            best_raw = raw if best_raw is None else min(best_raw, raw)
+            # ratio of the two minima: each converges to the intrinsic
+            # cost as throttle spikes are filtered, so their quotient is
+            # the stable client-tax estimate even on a noisy runner
+            if best_us <= limit_us \
+                    and best_us / max(best_raw, 1e-9) <= RATIO_LIMIT:
+                break
+            time.sleep(2)
+        best_ratio = best_us / max(best_raw, 1e-9)
+        ok = best_us <= limit_us and best_ratio <= RATIO_LIMIT
+        print(f"client workers={w}: {best_us:.2f}us/future vs baseline "
+              f"{base_us:.2f}us (limit {limit_us:.2f}us), "
+              f"{best_ratio:.2f}x raw (limit {RATIO_LIMIT:.1f}x) "
+              f"{'OK' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(w)
+    if failures:
+        print(f"client overhead regression at workers={failures} "
+              f"(vs committed BENCH_client.json / {RATIO_LIMIT:.1f}x raw)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        sys.exit(run_check())
+    result = run(quick="--full" not in sys.argv)
+    BASELINE.write_text(json.dumps(result, indent=1, default=str))
+    print(json.dumps(result, indent=1, default=str))
+    print(f"\nwrote {BASELINE}", file=sys.stderr)

@@ -2,7 +2,7 @@
 
 Queries:  Create(task, deps) | Steal(worker, n) | Complete(worker, task)
           | CompleteSteal(worker, done, n) | Transfer(worker, task, new_deps)
-          | Exit(worker)
+          | Exit(worker) | Cancel(task)
 Responses: TaskMsg(tasks) | NotFound | ExitResp
 
 `CompleteSteal` is the Fig. 2 batch-then-drain rhythm collapsed into one
@@ -84,6 +84,16 @@ class Transfer:
 
 
 @dataclass
+class Cancel:
+    """Withdraw a task that no worker holds yet (framework extension for
+    the futures client).  Succeeds only while the task is unleased and
+    non-terminal; the server then poisons it like a failure so transitive
+    successors can never run.  Response: ExitResp on success, NotFound if
+    the task is already stolen/terminal/unknown."""
+    task: str
+
+
+@dataclass
 class Exit:
     worker: str
 
@@ -111,7 +121,7 @@ class Stats:
 _TAGS = {"Create": Create, "Steal": Steal, "Complete": Complete,
          "CompleteSteal": CompleteSteal, "Transfer": Transfer, "Exit": Exit,
          "TaskMsg": TaskMsg, "NotFound": NotFound, "ExitResp": ExitResp,
-         "Stats": Stats, "Release": Release}
+         "Stats": Stats, "Release": Release, "Cancel": Cancel}
 
 
 def encode(msg) -> bytes:

@@ -7,6 +7,10 @@ Complete / Exit protocol (Fig. 2) against the given server, with Steal-n
 batching, per-worker fault injection, and a lifecycle trace from which
 empirical per-task overhead and METG are computed
 (`report.overhead().summary()`).
+
+Since the futures redesign this is a thin shim over the batch mode of
+`repro.client.Client` — the same front door the dynamic futures API
+uses — kept for its task-universe-on-a-server calling convention.
 """
 from __future__ import annotations
 
@@ -24,40 +28,16 @@ def run_pool(server, execute: Optional[Callable] = None, *,
     (`tree_fanout` workers per leaf Forwarder, `tree_levels` relay
     layers) in front of the server.  Returns the `EngineReport` (results,
     trace, errors, backend stats)."""
-    # lazy import: repro.core.engine.backends imports dwork submodules,
-    # so importing at module scope would create a package-level cycle
-    from repro.core.dwork.sharded import ShardedHub
-    from repro.core.engine.backends import (ServerBackend, ShardedBackend,
-                                            TreeBackend)
-    from repro.core.engine.executor import Engine
+    # lazy import: repro.client imports engine modules that import dwork
+    # submodules, so importing at module scope would create a cycle
+    from repro.client import Client
 
-    if isinstance(server, ShardedHub):
-        if transport == "tree":
-            raise ValueError("tree transport forwards to a single hub; "
-                             "pass a TaskServer")
-        backend = ShardedBackend(hub=server, tracer=tracer)
-        lease = server.shards[0].lease_timeout if server.shards else None
-    elif transport == "tree":
-        # the Forwarders capture the tracer at construction, so it must
-        # exist BEFORE the tree is built or hop events are silently lost
-        from repro.core.engine.tracing import TraceRecorder
-        tracer = tracer or TraceRecorder(clock=clock)
-        backend = TreeBackend(server=server, workers=workers,
-                              fanout=tree_fanout, levels=tree_levels,
-                              tracer=tracer)
-        lease = server.lease_timeout
-    else:
-        backend = ServerBackend(server=server, tracer=tracer)
-        lease = server.lease_timeout
-    # propagate the server's heartbeat lease so the engine's idle budget
-    # outlives lease expiry (a silently-dead worker's tasks must be
-    # reaped, not abandoned as a premature stall)
-    engine_kw.setdefault("lease_timeout", lease)
-    eng = Engine(workers=workers, transport=transport, steal_n=steal_n,
-                 backend=backend, tracer=tracer, faults=faults, clock=clock,
-                 poll=poll, **engine_kw)
+    client = Client(scheduler="dwork", workers=workers, steal_n=steal_n,
+                    transport=transport, server=server, executor=execute,
+                    resident=False, tracer=tracer, faults=faults,
+                    clock=clock, poll=poll, tree_fanout=tree_fanout,
+                    tree_levels=tree_levels, **engine_kw)
     try:
-        return eng.run(execute)
+        return client.run()
     finally:
-        if transport == "tree":
-            backend.close()     # run_pool owns the tree's sockets/threads
+        client.close()

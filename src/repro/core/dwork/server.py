@@ -21,9 +21,9 @@ from collections import deque
 from pathlib import Path
 from typing import Callable, Optional
 
-from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
-                                  ExitResp, NotFound, Release, Stats, Steal,
-                                  TaskMsg, Transfer)
+from repro.core.dwork.api import (Cancel, Complete, CompleteSteal, Create,
+                                  Exit, ExitResp, NotFound, Release, Stats,
+                                  Steal, TaskMsg, Transfer)
 
 
 class TaskServer:
@@ -48,6 +48,10 @@ class TaskServer:
         # _all_done() O(1) — a resident engine probes it on every empty
         # steal, and a full joins-table scan there is O(history)
         self._n_terminal = 0
+        # when set (by ShardedHub) _poison appends newly-poisoned names
+        # here, so cross-shard propagation is an incremental worklist
+        # instead of an O(error-history) rescan per failure
+        self._new_errors: Optional[list] = None
 
     # ------------------------------------------------------------------ API
     def handle(self, msg):
@@ -64,11 +68,23 @@ class TaskServer:
                 return self._transfer(msg)
             if isinstance(msg, Exit):
                 return self._exit(msg)
+            if isinstance(msg, Cancel):
+                return self._cancel(msg)
             if isinstance(msg, Release):
                 return self._release(msg)
             if isinstance(msg, Stats):
                 return self.stats()
             raise TypeError(f"unknown message {msg!r}")
+
+    def create_bulk(self, tasks: list):
+        """Local driver API (not a wire verb): apply a batch of Creates —
+        [(name, deps, meta), ...] — under ONE lock hold.  The resident
+        engine's mailbox ingest calls this once per round instead of
+        paying the handle() ladder and a lock acquisition per task."""
+        with self.lock:
+            for name, deps, meta in tasks:
+                self._create(Create(task=name, deps=list(deps),
+                                    meta=dict(meta or {})))
 
     def _create(self, msg: Create):
         if msg.task in self.joins:
@@ -144,7 +160,12 @@ class TaskServer:
         if t not in self.errors:
             self._n_terminal += 1
         for succ in self.joins.get(t, [0, []])[1]:
-            j = self.joins[succ]
+            j = self.joins.get(succ)
+            if j is None:
+                # successor pruned while this dep was still live (it was
+                # already terminal — poisoned dep-waiting): nothing left
+                # to notify
+                continue
             j[0] -= 1
             if j[0] == 0 and succ not in self.completed:
                 self.ready.append(succ)
@@ -186,6 +207,29 @@ class TaskServer:
             self.counters["requeued"] += 1
         return ExitResp()
 
+    def _cancel(self, msg: Cancel):
+        """Withdraw a task no worker holds (futures-client cancel): succeeds
+        only while the task is unleased and non-terminal, then poisons it
+        like a failure so transitive successors can never run.  A task
+        already stolen (leased), terminal, or unknown returns NotFound —
+        the cancel loses the race and the caller must treat the task as
+        live.  Serialized against Steal by the server lock, so a task is
+        never both cancelled and handed to a worker."""
+        self._reap_leases()
+        t = msg.task
+        if (t not in self.joins or t in self.completed or t in self.errors
+                or t in self.lease or t in self.requeued_tasks):
+            # requeued_tasks: a lease-expired requeue may STILL be
+            # executing on its straggler worker — "cancelled" must mean
+            # "never runs", so a possibly-running task is not cancellable
+            return NotFound()
+        try:
+            self.ready.remove(t)          # may be dep-waiting, not ready
+        except ValueError:
+            pass
+        self._poison(t)
+        return ExitResp()
+
     def _release(self, msg: Release):
         j = self.joins.get(msg.task)
         if j is None or msg.task in self.completed:
@@ -203,7 +247,14 @@ class TaskServer:
             cur = stack.pop()
             if cur in self.errors:
                 continue
+            if cur not in self.joins and cur != t:
+                # a pruned ghost in a live successor list: already
+                # terminal before it was pruned — re-adding it to errors
+                # would inflate _n_terminal past the live table
+                continue
             self.errors.add(cur)
+            if self._new_errors is not None:
+                self._new_errors.append(cur)
             self.counters["errors"] += 1
             if cur not in self.completed:
                 self._n_terminal += 1
@@ -225,6 +276,46 @@ class TaskServer:
 
     def _all_done(self) -> bool:
         return self._n_terminal >= len(self.joins)
+
+    def prune_terminal(self, keep=()) -> list:
+        """Bounded-state hook for long-lived resident services: drop the
+        history-table entries (joins/meta/completed/errors) of tasks that
+        reached a terminal state, returning the pruned names (callers
+        holding per-name side tables — the sharded hub's home map —
+        delete exactly those keys).  Names in `keep` are retained (the
+        engine passes deps of submissions still in its mailbox).
+
+        Contract: only call when no FUTURE Create will name a pruned task
+        as a dependency — a pruned completed task would be re-declared as
+        a READY stub (and a pruned failed one would no longer poison its
+        new dependents).  Single-use task names (the futures client, the
+        serving frontend) satisfy this by construction.  Tasks with a
+        stale ready entry or a stale holder (requeue races) are kept so a
+        late duplicate can still be recognized as terminal."""
+        with self.lock:
+            ready_set = set(self.ready)
+            held: set = set()
+            for ts in self.assigned.values():
+                held |= ts
+            # names whose cross-shard poison is still in the propagation
+            # worklist must survive: pruning an errored __notify__ before
+            # _propagate_poison reads its meta would orphan the
+            # dependent's held proxy forever
+            pending_poison = set(self._new_errors or ())
+            pruned: list = []
+            for t in list(self.completed) + list(self.errors):
+                if t in ready_set or t in held or t in self.requeued_tasks \
+                        or t in keep or t in pending_poison:
+                    continue
+                if self.joins.pop(t, None) is None:
+                    continue                  # already pruned (both sets)
+                self.meta.pop(t, None)
+                self.completed.discard(t)
+                self.errors.discard(t)
+                self.lease.pop(t, None)
+                pruned.append(t)
+            self._n_terminal -= len(pruned)
+            return pruned
 
     def stats(self) -> dict:
         return {

@@ -18,8 +18,8 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
-from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
-                                  ExitResp, NotFound, Release, Steal,
+from repro.core.dwork.api import (Cancel, Complete, CompleteSteal, Create,
+                                  Exit, ExitResp, NotFound, Release, Steal,
                                   TaskMsg)
 from repro.core.dwork.server import TaskServer
 
@@ -29,6 +29,8 @@ class ShardedHub:
                  clock=None):
         self.shards = [TaskServer(lease_timeout=lease_timeout, clock=clock)
                        for _ in range(n_shards)]
+        for s in self.shards:
+            s._new_errors = []     # arm the cross-shard poison worklist
         self.home: dict[str, int] = {}
         self.lock = threading.Lock()
 
@@ -60,6 +62,11 @@ class ShardedHub:
                 meta={"notify_shard": s, "proxy": proxy}))
         self.shards[s].handle(Create(task=task, deps=proxy_deps,
                                      meta=dict(meta or {})))
+        if remote:
+            # a remote dep that ALREADY failed poisons its __notify__ at
+            # create time; drain the worklist so the held proxy (and the
+            # dependent) fail now instead of dangling
+            self._propagate_poison()
 
     def steal(self, worker: str, n: int = 1, affinity: Optional[int] = None):
         order = list(range(len(self.shards)))
@@ -96,8 +103,11 @@ class ShardedHub:
         return (ExitResp() if all_exit else NotFound()), -1
 
     def complete(self, worker: str, task: str, shard: int, ok: bool = True):
-        return self.shards[shard].handle(Complete(worker=f"{worker}@{shard}",
+        resp = self.shards[shard].handle(Complete(worker=f"{worker}@{shard}",
                                                   task=task, ok=ok))
+        if not ok:
+            self._propagate_poison()   # cross-shard dependents must fail
+        return resp
 
     def complete_steal(self, worker: str, done, n: int = 0,
                        affinity: Optional[int] = None):
@@ -106,11 +116,15 @@ class ShardedHub:
         shard and applied first, then the next steal is served.  Returns
         (response, shard) like `steal`."""
         by_shard: dict[int, list] = {}
+        any_failed = False
         for name, ok, shard in done:
             by_shard.setdefault(shard, []).append((name, ok))
+            any_failed = any_failed or not ok
         for shard, batch in by_shard.items():
             self.shards[shard].handle(
                 CompleteSteal(worker=f"{worker}@{shard}", done=batch, n=0))
+        if any_failed:
+            self._propagate_poison()   # cross-shard dependents must fail
         if n <= 0:
             return ExitResp(), -1
         return self.steal(worker, n=n, affinity=affinity)
@@ -120,6 +134,68 @@ class ShardedHub:
         (workers steal under per-shard aliases `worker@shard`)."""
         for i, s in enumerate(self.shards):
             s.handle(Exit(worker=f"{worker}@{i}"))
+
+    def cancel(self, task: str) -> bool:
+        """Cancel on the task's home shard (unleased + non-terminal only),
+        then propagate the poison across shards: a cross-shard dependent
+        must observe the cancel as a failed dependency, not wait forever
+        on a Release its poisoned __notify__ helper can no longer send."""
+        with self.lock:
+            s = self.home.get(task)
+        if s is None:
+            return False
+        if not isinstance(self.shards[s].handle(Cancel(task=task)),
+                          ExitResp):
+            return False
+        self._propagate_poison()
+        return True
+
+    def _propagate_poison(self):
+        """Cross-shard failure propagation: poisoning a task also poisons
+        its `__notify__` helpers, which then can never Release the
+        dependent's HELD proxy on its home shard — so the dependent would
+        dangle forever, neither run nor fail.  Poison the proxy instead
+        (the dependent must never run once its dependency failed).
+        Incremental: only names poisoned since the last call are
+        examined (each shard's `_new_errors` worklist), looping until
+        the cascade across shards quiesces."""
+        while True:
+            metas = []
+            for shard in self.shards:
+                with shard.lock:
+                    if not shard._new_errors:
+                        continue
+                    for t in shard._new_errors:
+                        if t.startswith("__notify__"):
+                            metas.append(dict(shard.meta.get(t) or {}))
+                    shard._new_errors.clear()
+            if not metas:
+                return
+            for meta in metas:
+                ns, proxy = meta.get("notify_shard"), meta.get("proxy")
+                if ns is None or proxy is None:
+                    continue
+                target = self.shards[ns]
+                with target.lock:
+                    if (proxy in target.errors
+                            or proxy in target.completed):
+                        continue
+                    target._poison(proxy)
+
+    def prune_terminal(self, keep=()) -> int:
+        """Per-shard terminal-entry pruning plus home-map cleanup (same
+        single-use-names contract as `TaskServer.prune_terminal`) —
+        O(pruned), not O(live+history): only the pruned names are
+        deleted from the home map."""
+        pruned = 0
+        for s in self.shards:
+            names = s.prune_terminal(keep=keep)
+            pruned += len(names)
+            if names:
+                with self.lock:
+                    for t in names:
+                        self.home.pop(t, None)
+        return pruned
 
     def stats(self) -> dict:
         per = [s.stats() for s in self.shards]

@@ -54,12 +54,12 @@ from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
                                         ShardedBackend, TreeBackend)
 from repro.core.engine.executor import Engine, EngineReport
 from repro.core.engine.faults import FaultPlan
-from repro.core.engine.model import (BATCH_FORMED, COMPLETED, CREATED,
-                                     FAILED, READY, REQ_DONE, REQ_ENQUEUED,
-                                     REQ_REJECTED, REQUEUED, RPC, RUN_END,
-                                     RUN_START, STOLEN, WORKER_DEAD,
-                                     EngineTask, ManualClock, TaskResult,
-                                     TraceEvent, WorkerCrash)
+from repro.core.engine.model import (BATCH_FORMED, CANCELLED, COMPLETED,
+                                     CREATED, FAILED, READY, REQ_DONE,
+                                     REQ_ENQUEUED, REQ_REJECTED, REQUEUED,
+                                     RPC, RUN_END, RUN_START, STOLEN,
+                                     WORKER_DEAD, EngineTask, ManualClock,
+                                     TaskResult, TraceEvent, WorkerCrash)
 from repro.core.engine.tracing import (LatencyReport, OverheadReport,
                                        TraceRecorder, crosscheck,
                                        percentile)
@@ -71,6 +71,6 @@ __all__ = [
     "ServerBackend", "ShardedBackend", "TreeBackend", "crosscheck",
     "DONE", "EMPTY",
     "CREATED", "READY", "STOLEN", "RUN_START", "RUN_END", "COMPLETED",
-    "FAILED", "REQUEUED", "WORKER_DEAD", "RPC",
+    "FAILED", "REQUEUED", "CANCELLED", "WORKER_DEAD", "RPC",
     "REQ_ENQUEUED", "REQ_DONE", "REQ_REJECTED", "BATCH_FORMED",
 ]

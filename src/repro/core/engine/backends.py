@@ -12,6 +12,10 @@ protocol the worker pool speaks — the paper's Table 2 wire API:
                                         ONE round-trip per batch in both
                                         protocol directions (Fig. 2)
     exit_worker(worker)                 Exit (recycle assignment)
+    cancel(name) -> bool                Cancel: withdraw an unleased task
+                                        (futures client; framework extension)
+    prune_terminal() -> int             drop terminal history entries
+                                        (bounded state; maintenance hook)
     close()                             release transports (tree sockets)
 
 Every call is timed and emitted as an `rpc` trace event — the measured
@@ -25,8 +29,8 @@ import math
 import time
 from typing import Optional
 
-from repro.core.dwork.api import (Complete, CompleteSteal, Create, Exit,
-                                  ExitResp, NotFound, Steal, TaskMsg)
+from repro.core.dwork.api import (Cancel, Complete, CompleteSteal, Create,
+                                  Exit, ExitResp, NotFound, Steal, TaskMsg)
 from repro.core.dwork.server import TaskServer
 from repro.core.dwork.sharded import ShardedHub
 from repro.core.engine.model import REQUEUED, RPC
@@ -83,6 +87,20 @@ class ServerBackend:
         self._call("create", Create(task=name, deps=list(deps),
                                     meta=dict(meta or {})))
 
+    def create_many(self, tasks: list):
+        """Batched Create — `tasks` is [(name, deps, meta), ...].  One
+        timed `rpc` event and one server lock hold cover the whole batch
+        (the resident engine's mailbox ingest path: per-create timing
+        apparatus would otherwise rival the create itself)."""
+        tracer = self.tracer
+        if tracer is None or not tracer.sample_rpc():
+            self.server.create_bulk(tasks)
+            return
+        t0 = time.perf_counter()
+        self.server.create_bulk(tasks)
+        tracer.emit(RPC, op="create_many", dt=time.perf_counter() - t0,
+                    n=len(tasks))
+
     def steal(self, worker: str, n: int = 1):
         before = self.server.counters["requeued"]
         resp = self._call("steal", Steal(worker=worker, n=n))
@@ -107,6 +125,17 @@ class ServerBackend:
         if n > 0 and self.tracer is not None:
             self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
         return n
+
+    def cancel(self, name: str) -> bool:
+        """Withdraw an unleased, non-terminal task (futures-client cancel);
+        False means the cancel lost the race (stolen/terminal/unknown)."""
+        resp = self._call("cancel", Cancel(task=name))
+        return isinstance(resp, ExitResp)
+
+    def prune_terminal(self, keep=()) -> int:
+        """Drop terminal entries from the server history tables (bounded
+        state for resident services; see TaskServer.prune_terminal)."""
+        return len(self.server.prune_terminal(keep=keep))
 
     def errors(self) -> set:
         return set(self.server.errors)
@@ -153,6 +182,14 @@ class ShardedBackend:
         self.hub.create(name, deps=deps, meta=meta)
         if sampled:
             self._emit_rpc("create", time.perf_counter() - t0)
+
+    def create_many(self, tasks: list):
+        sampled = self._sampled()
+        t0 = time.perf_counter() if sampled else 0.0
+        for name, deps, meta in tasks:
+            self.hub.create(name, deps=deps, meta=meta)
+        if sampled:
+            self._emit_rpc("create_many", time.perf_counter() - t0)
 
     def steal(self, worker: str, n: int = 1):
         sampled = self._sampled()
@@ -218,6 +255,17 @@ class ShardedBackend:
         if n > 0 and self.tracer is not None:
             self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
         return n
+
+    def cancel(self, name: str) -> bool:
+        sampled = self._sampled()
+        t0 = time.perf_counter() if sampled else 0.0
+        ok = self.hub.cancel(name)
+        if sampled:
+            self._emit_rpc("cancel", time.perf_counter() - t0)
+        return ok
+
+    def prune_terminal(self, keep=()) -> int:
+        return self.hub.prune_terminal(keep=keep)
 
     def errors(self) -> set:
         return {t for s in self.hub.shards for t in s.errors
@@ -324,6 +372,20 @@ class TreeBackend(ServerBackend):
                 self._boss = self._TCPTransport(*self.tcp.server_address)
             return self._boss.request(msg)
         return self._transport(worker).request(msg)
+
+    def create_many(self, tasks: list):
+        """Tree path: each Create crosses the boss link individually (the
+        wire has no batched Create verb) — one timed rpc event covers the
+        batch."""
+        tracer = self.tracer
+        sampled = tracer is not None and tracer.sample_rpc()
+        t0 = time.perf_counter() if sampled else 0.0
+        for name, deps, meta in tasks:
+            self._request(Create(task=name, deps=list(deps),
+                                 meta=dict(meta or {})))
+        if sampled:
+            tracer.emit(RPC, op="create_many", dt=time.perf_counter() - t0,
+                        n=len(tasks))
 
     # ------------------------------------------------------ introspection
     def stats(self) -> dict:

@@ -62,9 +62,10 @@ from typing import Callable, Optional
 from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
                                         ShardedBackend, TreeBackend)
 from repro.core.engine.faults import FaultPlan
-from repro.core.engine.model import (COMPLETED, CREATED, FAILED, READY,
-                                     RUN_END, RUN_START, STOLEN, WORKER_DEAD,
-                                     EngineTask, TaskResult, WorkerCrash)
+from repro.core.engine.model import (CANCELLED, COMPLETED, CREATED, FAILED,
+                                     READY, RUN_END, RUN_START, STOLEN,
+                                     WORKER_DEAD, EngineTask, TaskResult,
+                                     WorkerCrash)
 from repro.core.engine.tracing import OverheadReport, TraceRecorder
 
 TRANSPORTS = ("inproc", "thread", "tree")
@@ -101,7 +102,9 @@ class Engine:
                  faults: Optional[FaultPlan] = None, clock=None,
                  lease_timeout: Optional[float] = None, poll: float = 0.001,
                  max_idle_rounds: Optional[int] = None, tree_fanout: int = 4,
-                 tree_levels: int = 1, resident: bool = False):
+                 tree_levels: int = 1, resident: bool = False,
+                 keep_results: bool = True,
+                 on_result: Optional[Callable] = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}")
         if transport == "tree" and shards > 1:
@@ -115,6 +118,23 @@ class Engine:
         self.poll = poll
         self.lease_timeout = lease_timeout
         self.resident = bool(resident)
+        # result plumbing for the futures client: `on_result(name, ok,
+        # res, error)` fires exactly once per task name, at its FIRST
+        # terminal transition (requeued re-executions never re-fire),
+        # always outside the engine lock so the handler may call back in.
+        # `res` is the TaskResult when the task executed here, None for
+        # poisoned/cancelled/fail-fast tasks.  The handler must not raise
+        # (a raise would kill the dispatch loop); the client guards its
+        # user-visible callbacks itself.
+        self.on_result = on_result
+        # called (once, from the dying loop thread) if the resident
+        # dispatch loop exits with an error, so a client can fail its
+        # pending futures instead of leaving waiters hanging until
+        # shutdown() re-raises
+        self.on_loop_error: Optional[Callable] = None
+        # resident services that hold results elsewhere (futures) can opt
+        # out of the EngineReport.results history table (bounded state)
+        self.keep_results = bool(keep_results)
         self.tracer = tracer or TraceRecorder(clock=clock)
         self._owns_backend = backend is None
         if backend is None:
@@ -147,11 +167,22 @@ class Engine:
         # ---------------------------------------------- resident-mode state
         # _cond guards the registry + counters that submit() (any thread)
         # and the dispatch loop both touch; batch mode never takes it.
-        self._cond = threading.Condition()
+        # Built over a plain Lock: the re-entrancy of the default RLock is
+        # never needed, and both threads take this once per task/batch, so
+        # acquisition cost is on the submit hot path.
+        self._cond = threading.Condition(threading.Lock())
         self._inflight = 0              # submitted, not yet terminal
         self._terminal: set[str] = set()
         self._failed: set[str] = set()
         self._epoch = 0                 # bumped on submit/requeue: wakes idle
+        # resident submissions go through a mailbox: submit() appends
+        # under a SHORT _cond hold (atomic w.r.t. cancel and the prune
+        # keep-set) and the dispatch loop ingests in batches on its own
+        # thread — the single-writer rule that keeps client threads off
+        # the server lock on every task.  `_unsent` tracks names still
+        # in the mailbox so cancel() can withdraw them engine-side.
+        self._mailbox: deque = deque()
+        self._unsent: set[str] = set()
         self._commands: deque = deque()  # ("add"|"lose", worker) membership
         self._live = self.workers       # live (not dead) worker count
         self._next_wid = self.workers   # auto worker naming for add_worker()
@@ -185,45 +216,84 @@ class Engine:
             else:
                 self.tracer.emit(READY, task=name)
             return task
+        # resident: mailbox enqueue.  The dispatch loop ingests creates in
+        # batches at the top of its round (graph registration, failed-dep
+        # fail-fast, server Create, _inflight accounting — all on the
+        # loop thread), so a submitting client thread never crosses the
+        # SERVER lock per task — the cross-thread lock+GIL ping-pong that
+        # used to dominate per-future overhead.  The short _cond hold
+        # here is cheap (the loop takes _cond per round/batch, not per
+        # task) and makes submission atomic w.r.t. prune_terminal's
+        # keep-set snapshot.  The task server keys history by name
+        # forever, so a duplicate Create is a server-side no-op —
+        # accepting one here would count an _inflight slot that never
+        # drains and wedge drain()/shutdown(): names are single-use.
         with self._cond:
             if name in self.tasks:
-                # the task server keys history by name forever, so a
-                # duplicate Create is a server-side no-op — accepting it
-                # here would count an _inflight slot that never drains
-                # and wedge drain()/shutdown().  Names are single-use.
                 raise ValueError(f"task name {name!r} already submitted "
                                  "(resident task names are single-use)")
             self.tasks[name] = task
-            failed_dep = next((d for d in task.deps if d in self._failed),
-                              None)
-            if failed_dep is not None:
-                # the producer already failed: creating this server-side
-                # would dangle forever (the server poisons successors at
-                # failure time, not at create time) — fail it engine-side
-                self._terminal.add(name)
-                self._failed.add(name)
-                self.tracer.emit(CREATED, task=name)
-                self.tracer.emit(FAILED, task=name,
-                                 error=f"dependency {failed_dep} failed")
-                return task
-            self._inflight += 1
-            live = [d for d in task.deps if d not in self._terminal]
-            if live:
-                self._waiting[name] = set(live)
-                for d in live:
-                    self._succs.setdefault(d, []).append(name)
-            self._epoch += 1
-        self.backend.create(name, deps=task.deps, meta=task.meta)
-        # re-bump AFTER the create is server-visible: the idle gate could
-        # otherwise arm against the pre-create bump (a probe between the
-        # two finds nothing) and sit on the task for a whole probe period.
-        # Lock-free: losing a racing increment is fine — only "changed
-        # since the loop's snapshot" matters, not the value.
-        self._epoch += 1
-        self.tracer.emit(CREATED, task=name)
-        if not live:
-            self.tracer.emit(READY, task=name)
+            self._unsent.add(name)
+            self._mailbox.append(task)
+            self._epoch += 1   # wakes an idle-probing loop immediately
         return task
+
+    def _ingest_mailbox(self):
+        """Dispatch-thread ingestion of mailboxed submissions: register
+        the engine-side graph, fail-fast tasks whose producer already
+        failed, count `_inflight`, then Create server-side — the
+        single-writer half of the mailboxed resident submit()."""
+        notify = self.on_result
+        pending: list = []
+        creates: list = []
+        emit = self.tracer.emit
+        with self._cond:
+            while self._mailbox:
+                task = self._mailbox.popleft()
+                name = task.name
+                self._unsent.discard(name)
+                if name in self._terminal:
+                    continue                      # cancelled before ingest
+                live = None
+                if task.deps:
+                    failed_dep = next((d for d in task.deps
+                                       if d in self._failed), None)
+                    if failed_dep is not None:
+                        # the producer already failed: creating this
+                        # server-side would dangle forever (the server
+                        # poisons successors at failure time, not at
+                        # create time) — fail it engine-side
+                        self._terminal.add(name)
+                        self._failed.add(name)
+                        why = f"dependency {failed_dep} failed"
+                        emit(CREATED, task=name)
+                        emit(FAILED, task=name, error=why)
+                        if notify is not None:
+                            pending.append((name, False, None, why))
+                        continue
+                    live = [d for d in task.deps
+                            if d not in self._terminal]
+                    if live:
+                        self._waiting[name] = set(live)
+                        for d in live:
+                            self._succs.setdefault(d, []).append(name)
+                self._inflight += 1
+                creates.append((task, not live))
+            if self._inflight <= 0:
+                self._cond.notify_all()   # every ingested task failed fast
+        if creates:
+            self.backend.create_many(
+                [(t.name, t.deps, t.meta) for t, _ in creates])
+            # CREATED/READY stamped here, on the loop thread, so a
+            # submitting client thread adds no events (and no span) of
+            # its own — the dispatch window stays the measured quantity,
+            # exactly as on the batch path where creation precedes run()
+            for task, ready in creates:
+                emit(CREATED, task=task.name)
+                if ready:
+                    emit(READY, task=task.name)
+        for note in pending:
+            notify(*note)
 
     def _on_terminal(self, name: str):
         if self.resident:
@@ -233,7 +303,9 @@ class Engine:
             self._on_terminal_unlocked(name)
 
     def _on_terminal_unlocked(self, name: str):
-        for succ in self._succs.pop(name, []):
+        if name not in self._succs:
+            return
+        for succ in self._succs.pop(name):
             w = self._waiting.get(succ)
             if w is None:
                 continue
@@ -242,33 +314,82 @@ class Engine:
                 del self._waiting[succ]
                 self.tracer.emit(READY, task=succ)
 
-    def _note_terminal(self, name: str, ok: bool):
-        """Resident bookkeeping: count a task's FIRST terminal state so
-        `drain()` can wait on the submitted universe.  A failure walks the
-        engine-side successor graph the way the server poisons its own, so
-        transitively-doomed tasks count as terminal too."""
+    def _note_terminal(self, name: str, ok: bool, res=None,
+                       error: Optional[str] = None):
+        """Terminal bookkeeping: count a task's FIRST terminal state so
+        `drain()` can wait on the submitted universe, and deliver it to
+        `on_result` exactly once.  A failure walks the engine-side
+        successor graph the way the server poisons its own, so
+        transitively-doomed tasks count as terminal too.  Notifications
+        fire after the lock is released (the handler may call back into
+        the engine)."""
+        notify = self.on_result
+        pending: list = []
         with self._cond:
-            if name in self._terminal:
-                return
-            self._terminal.add(name)
-            n = 1
-            if not ok:
-                self._failed.add(name)
-                stack = [name]
-                while stack:
-                    for succ in self._succs.pop(stack.pop(), []):
-                        self._waiting.pop(succ, None)
-                        if succ in self._terminal:
-                            continue
-                        self._terminal.add(succ)
-                        self._failed.add(succ)
-                        self.tracer.emit(FAILED, task=succ,
-                                         error=f"poisoned by {name}")
-                        n += 1
-                        stack.append(succ)
+            n = self._note_locked(name, ok, res, error,
+                                  pending, notify is not None)
             self._inflight -= n
             if self._inflight <= 0:
                 self._cond.notify_all()
+        for note in pending:
+            notify(*note)
+
+    def _note_terminal_many(self, batch: list):
+        """Batched `_note_terminal` + successor readying: ONE lock hold
+        for a whole completion batch.  The dispatch loop calls this once
+        per drained steal batch, so the lock ping-pong with a submitting
+        client thread amortizes over `steal_n` tasks instead of hitting
+        every task (measurably so: per-future client overhead)."""
+        notify = self.on_result
+        want = notify is not None
+        pending: list = []
+        with self._cond:
+            n = 0
+            for name, ok, res in batch:
+                if ok:
+                    self._on_terminal_unlocked(name)
+                n += self._note_locked(name, ok, res, None, pending, want)
+            self._inflight -= n
+            if self._inflight <= 0:
+                self._cond.notify_all()
+        for note in pending:
+            notify(*note)
+
+    def _note_locked(self, name: str, ok: bool, res, error,
+                     pending: list, want: bool) -> int:
+        """Shared terminal-transition body (caller holds `_cond`): returns
+        how many tasks reached terminal (1 + poisoned successors), and
+        appends `on_result` notifications to `pending` when `want`.  A
+        name absent from the task registry is a resurrected server stub
+        (a pruned name re-declared as a dependency): it is remembered as
+        terminal so it can't loop, but contributes no inflight count and
+        no notification — it was never a submitted task."""
+        if name in self._terminal:
+            return 0
+        self._terminal.add(name)
+        known = name in self.tasks
+        if error is None and res is not None:
+            error = res.error
+        if want and known:
+            pending.append((name, ok, res, error))
+        n = 1 if known else 0
+        if not ok:
+            self._failed.add(name)
+            stack = [name]
+            while stack:
+                for succ in self._succs.pop(stack.pop(), []):
+                    self._waiting.pop(succ, None)
+                    if succ in self._terminal:
+                        continue
+                    self._terminal.add(succ)
+                    self._failed.add(succ)
+                    why = f"poisoned by {name}"
+                    self.tracer.emit(FAILED, task=succ, error=why)
+                    if want:
+                        pending.append((succ, False, None, why))
+                    n += 1
+                    stack.append(succ)
+        return n
 
     # ---------------------------------------------------- resident control
     def start(self, execute: Optional[Callable] = None, *,
@@ -299,22 +420,36 @@ class Engine:
         finally:
             with self._cond:
                 self._cond.notify_all()   # unblock drain() on a loop crash
+            if self._loop_error is not None \
+                    and self.on_loop_error is not None:
+                try:
+                    self.on_loop_error(self._loop_error)
+                except Exception:    # noqa: BLE001 — the loop is already
+                    pass             # dead; shutdown() reports the cause
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every submitted task is terminal (True) or the
         timeout expires (False).  Does not stop the loop."""
         with self._cond:
             return self._cond.wait_for(
-                lambda: self._inflight <= 0 or self._loop_error is not None,
+                lambda: (self._inflight <= 0 and not self._mailbox)
+                or self._loop_error is not None,
                 timeout)
 
     def shutdown(self, *, drain: bool = True,
-                 timeout: Optional[float] = None) -> EngineReport:
+                 timeout: Optional[float] = None) -> Optional[EngineReport]:
         """Stop the resident loop and return its EngineReport.  With
         `drain=True` (default) outstanding work finishes first; with
-        `drain=False` pending work is abandoned (the server keeps it)."""
+        `drain=False` pending work is abandoned (the server keeps it).
+        Idempotent: shutting down a resident engine that was never
+        started is a no-op returning None, and a second shutdown() is a
+        no-op returning the first call's report — `Client.__exit__` and
+        finalizers can call it unconditionally."""
+        if not self.resident:
+            raise RuntimeError("shutdown() requires Engine(resident=True); "
+                               "batch mode returns its report from run()")
         if self._thread is None:
-            raise RuntimeError("engine not started")
+            return self._report
         if drain:
             self.drain(timeout)
         else:
@@ -370,6 +505,79 @@ class Engine:
         with self._cond:
             self._commands.append(("lose", name))
             self._epoch += 1
+
+    def cancel(self, name: str) -> bool:
+        """Withdraw a submitted task that no worker has stolen yet.  True
+        means the task will never run: the server poisons it (and its
+        transitive successors) under its own lock, so a concurrent Steal
+        can never hand it out afterwards.  False means the cancel lost
+        the race — the task is already stolen, terminal, or unknown.
+        Cancellation counts as a failure terminal state: dependents are
+        poisoned, drain() unblocks, and on_result fires with
+        error=\"cancelled\"."""
+        notify = self.on_result
+        pending: list = []
+        withdrawn = False
+        with self._cond:
+            if name not in self.tasks or name in self._terminal:
+                return False
+            if name in self._unsent:
+                # still in the mailbox: withdraw it engine-side before the
+                # loop ever ingests it (ingest skips terminal names).  The
+                # withdrawn task itself was never counted in _inflight
+                # (counting happens at ingest), but poisoned successors in
+                # the walk WERE ingested — a dependent that forward-
+                # declared this name as a string dep — so n-1 of the walk
+                # must be decremented.  Unsent successors are not in
+                # _succs and fail fast at their own ingest via _failed.
+                self._unsent.discard(name)
+                self.tracer.emit(CANCELLED, task=name)
+                n = self._note_locked(name, False, None, "cancelled",
+                                      pending, notify is not None)
+                self._inflight -= (n - 1)
+                if self._inflight <= 0:
+                    self._cond.notify_all()
+                withdrawn = True
+        if withdrawn:
+            for note in pending:
+                notify(*note)
+            return True
+        if not self.backend.cancel(name):
+            return False
+        self.tracer.emit(CANCELLED, task=name)
+        self._note_terminal(name, False, error="cancelled")
+        return True
+
+    def prune_terminal(self, *, backend: bool = True) -> int:
+        """Bounded-state hook: drop terminal tasks from the engine-side
+        history tables (tasks/_terminal/_failed) and, with `backend=True`,
+        from the server's tables too.  Names still referenced as
+        dependencies by a not-yet-ingested (mailboxed) submission are
+        kept, so auto-pruning (`Client(prune_every=)`) cannot race a
+        concurrent submit into resurrecting a pruned dep as a READY
+        stub.  Beyond that, the contract matches
+        `TaskServer.prune_terminal`: only prune names that no FUTURE
+        submit will reference as a dependency (single-use names — the
+        futures client and serving frontend satisfy this).  Returns the
+        number of entries dropped across both layers."""
+        with self._cond:
+            keep: set = set()
+            for task in self._mailbox:
+                keep.update(task.deps)
+            prunable = [n for n in self._terminal
+                        if n not in self._succs and n not in keep]
+            for n in prunable:
+                self._terminal.discard(n)
+                self._failed.discard(n)
+                self.tasks.pop(n, None)
+            # the backend half runs under the same hold: submit() also
+            # takes _cond, so no submission can slip a new dep reference
+            # in while the server tables are being scanned with this
+            # keep-set (lock order engine._cond -> server.lock is used
+            # nowhere in reverse)
+            n_backend = (self.backend.prune_terminal(keep=keep)
+                         if backend else 0)
+        return len(prunable) + n_backend
 
     # -------------------------------------------------------------- exec
     def _execute_registered(self, name: str, meta: dict):
@@ -453,7 +661,15 @@ class Engine:
         complete_steal = self.backend.complete_steal
         run_one = self._run_one
         on_terminal = self._on_terminal
-        note_terminal = self._note_terminal if resident else None
+        # terminal accounting runs in resident mode (drain bookkeeping)
+        # and whenever a result listener is attached (futures client,
+        # either mode); `_terminal` then doubles as the duplicate-steal
+        # guard so `keep_results=False` sessions stay exactly-once too
+        note_terminal = (self._note_terminal
+                         if resident or self.on_result is not None else None)
+        note_many = self._note_terminal_many
+        terminal_seen = self._terminal if note_terminal else ()
+        record_results = self.keep_results or not resident
         priority_of = self._priority_of
         capacity = self.capacity
         faults = self.faults
@@ -508,6 +724,8 @@ class Engine:
                 if resident:
                     if self._abort:
                         break
+                    if self._mailbox:
+                        self._ingest_mailbox()
                     if self._commands:
                         with self._cond:
                             cmds = list(self._commands)
@@ -565,9 +783,10 @@ class Engine:
                             bury(w, announce=True, crash=True)
                             continue
                         outstanding[w] -= 1
-                        results[name] = res
+                        if record_results:
+                            results[name] = res
                         if note_terminal:
-                            note_terminal(name, res.ok)
+                            note_terminal(name, res.ok, res)
                         finished[w].append((name, res.ok))
                         emit(COMPLETED if res.ok else FAILED, task=name,
                              worker=w, error=res.error)
@@ -610,17 +829,31 @@ class Engine:
                         accepted = []
                         for name, meta in got:
                             rec = running.get(name)
-                            if (name in pending_names or name in results
+                            if (name in pending_names
                                     or (rec is not None
                                         and rec["worker"] not in dead)):
                                 # duplicate steal after a lease-expiry
                                 # requeue while a LIVE copy is still held
-                                # (pending, in flight, or complete-pending):
-                                # the copy's Complete clears every stale
-                                # assignment server-side, so just drop it.
-                                # A copy held only by a DEAD worker is
-                                # accepted — its completion was discarded,
-                                # so this re-steal is the only way forward.
+                                # (pending or in flight): the copy's
+                                # Complete clears every stale assignment
+                                # server-side, so just drop it.  A copy
+                                # held only by a DEAD worker is accepted —
+                                # its completion was discarded, so this
+                                # re-steal is the only way forward.
+                                continue
+                            prior = results.get(name)
+                            if prior is not None or name in terminal_seen:
+                                # already terminal engine-side: a stale
+                                # requeue duplicate with no live copy, or
+                                # a pruned name a later dep re-declared as
+                                # a server stub — report its terminal
+                                # state instead of dropping it, so the
+                                # server's join accounting (and any
+                                # dependents) can move.  Never re-execute.
+                                ok_prior = (prior.ok if prior is not None
+                                            else name not in self._failed)
+                                finished[w].append((name, ok_prior))
+                                progress = True
                                 continue
                             accepted.append((name, meta))
                         if not accepted:
@@ -634,6 +867,12 @@ class Engine:
                             priority_of(name, meta) == 0.0
                             for name, meta in accepted)
                         if drain:
+                            # with terminal accounting on, bookkeeping is
+                            # batched: ONE lock hold (note_many) for the
+                            # whole drained batch, amortizing the
+                            # client-thread lock ping-pong over steal_n
+                            notes = [] if note_terminal is not None \
+                                else None
                             for name, meta in accepted:
                                 # steal order == seq order: complete rides
                                 # on this worker's next CompleteSteal
@@ -645,16 +884,20 @@ class Engine:
                                     # it with the in-flight task
                                     bury(w, announce=True, crash=True)
                                     break
-                                results[name] = res
-                                if note_terminal:
-                                    note_terminal(name, res.ok)
+                                if record_results:
+                                    results[name] = res
                                 finished[w].append((name, res.ok))
+                                if notes is not None:
+                                    notes.append((name, res.ok, res))
                                 if res.ok:
                                     emit4(COMPLETED, name, w)
-                                    on_terminal(name)
+                                    if notes is None:
+                                        on_terminal(name)
                                 else:
                                     emit(FAILED, task=name, worker=w,
                                          error=res.error)
+                            if notes:
+                                note_many(notes)
                             continue
                         for name, meta in accepted:
                             emit4(STOLEN, name, w)
@@ -715,9 +958,10 @@ class Engine:
                                 progress = True
                                 continue
                             outstanding[w] -= 1
-                            results[name] = res
+                            if record_results:
+                                results[name] = res
                             if note_terminal:
-                                note_terminal(name, res.ok)
+                                note_terminal(name, res.ok, res)
                             finished[w].append((name, res.ok))
                             emit(COMPLETED if res.ok else FAILED, task=name,
                                  worker=w, error=res.error)
@@ -742,7 +986,8 @@ class Engine:
                         # pool counts its submitted universe instead (it
                         # may legitimately stop with zero workers).
                         if resident:
-                            stalled = self._inflight > 0
+                            stalled = (self._inflight > 0
+                                       or bool(self._mailbox))
                         else:
                             stalled = not any(done_flag.values())
                         break

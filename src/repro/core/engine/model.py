@@ -31,6 +31,7 @@ RUN_END = "run_end"
 COMPLETED = "completed"
 FAILED = "failed"
 REQUEUED = "requeued"
+CANCELLED = "cancelled"         # client cancel before the task was stolen
 WORKER_DEAD = "worker_dead"
 RPC = "rpc"                     # one scheduler round-trip (the paper's RTT)
 

@@ -1,7 +1,9 @@
 """Trace recorder + empirical overhead / METG / latency analysis.
 
-The recorder is an append-only, thread-safe list of `TraceEvent`s stamped
-by an injectable clock.  Analysis turns an event stream into the paper's
+The recorder is a thread-safe log of `TraceEvent`s stamped by an
+injectable clock — append-only by default, or a bounded ring buffer
+(`TraceRecorder(max_events=N)`) for long-lived resident sessions that
+must not grow without bound.  Analysis turns an event stream into the paper's
 quantities *measured from the running system* rather than modelled:
 
   * per-task overhead   — wall time not spent computing, per completed task
@@ -24,6 +26,7 @@ order of magnitude — the engine's validation loop for the models.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -50,9 +53,20 @@ def percentile(sorted_vals: list, q: float) -> float:
 
 class TraceRecorder:
     def __init__(self, clock: Optional[Callable[[], float]] = None,
-                 rpc_sample: int = 1):
+                 rpc_sample: int = 1, max_events: Optional[int] = None):
         self.clock = clock or real_clock
-        self.events: list[TraceEvent] = []
+        # opt-in bounded memory for long-lived resident sessions: with
+        # `max_events` the event log is a ring buffer — the newest
+        # `max_events` events are kept and `self.dropped` counts the
+        # evictions.  Analysis over a ring covers the retained window
+        # only (events whose lifecycle partner was evicted pair as
+        # incomplete and are skipped by the report pairing).
+        self.max_events = max_events
+        if max_events is not None:
+            self.events: deque[TraceEvent] = deque(maxlen=max(max_events, 1))
+        else:
+            self.events: list[TraceEvent] = []
+        self.n_emitted = 0
         self._lock = threading.Lock()
         # rpc sampling: record every k-th round-trip instead of all of
         # them.  Backends call `sample_rpc()` BEFORE timing a call; a
@@ -62,6 +76,11 @@ class TraceRecorder:
         self.rpc_sample = max(int(rpc_sample), 1)
         self.rpc_seen = 0
 
+    @property
+    def dropped(self) -> int:
+        """Events evicted by the ring buffer (0 when unbounded)."""
+        return max(0, self.n_emitted - len(self.events))
+
     def sample_rpc(self) -> bool:
         """Should the next backend round-trip be timed + recorded?"""
         self.rpc_seen += 1
@@ -70,16 +89,31 @@ class TraceRecorder:
     def emit(self, event: str, task: Optional[str] = None,
              worker: Optional[str] = None, **extra):
         ev = TraceEvent(self.clock(), event, task, worker, extra)
-        # list.append is atomic under the GIL — no lock on the hot path;
-        # readers still lock to snapshot a consistent view
-        self.events.append(ev)
+        if self.max_events is None:
+            # list.append is atomic under the GIL — no lock on the hot
+            # path; readers still lock to snapshot a consistent view
+            self.n_emitted += 1
+            self.events.append(ev)
+        else:
+            # ring mode must lock: a bounded deque append also EVICTS, and
+            # eviction during a reader's iteration raises.  Bounded mode
+            # is opt-in, so the unbounded hot path stays lock-free.
+            with self._lock:
+                self.n_emitted += 1
+                self.events.append(ev)
         return ev
 
     def emit4(self, event: str, task: str, worker: str):
         """No-extra fast emit for the 3-4 per-task lifecycle events on the
         dispatch hot path (skips kwargs packing)."""
         ev = TraceEvent(self.clock(), event, task, worker)
-        self.events.append(ev)
+        if self.max_events is None:
+            self.n_emitted += 1
+            self.events.append(ev)
+        else:
+            with self._lock:
+                self.n_emitted += 1
+                self.events.append(ev)
         return ev
 
     # ------------------------------------------------------------ queries

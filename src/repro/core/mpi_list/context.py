@@ -80,10 +80,12 @@ class Context:
 
     # -- engine-backed superstep (one task per rank) -----------------------
     def _engine_step(self, parts: list, g: Callable) -> list:
-        """Dispatch one bulk operation through the engine pool: rank p's
-        block becomes task `rank{p}.step{s}`; per-rank times (real + any
-        injected virtual straggler jitter) are recorded and synced."""
-        from repro.core.engine.executor import Engine
+        """Dispatch one bulk operation through the futures client (batch
+        mode, one future per rank): rank p's block becomes task
+        `rank{p}.step{s}`; per-rank times (real + any injected virtual
+        straggler jitter) are recorded and synced.  A shim over
+        `repro.client.Client`, same as the other front doors."""
+        from repro.client import Client
         from repro.core.engine.faults import FaultPlan
 
         faults = None
@@ -91,20 +93,25 @@ class Context:
             faults = FaultPlan(seed=self.seed * 1_000_003 + self.step)
             faults.stragglers(self.straggler_sigma)
         workers = self.engine_workers or min(self.procs, 8)
-        eng = Engine(workers=max(workers, 1), transport="inproc",
-                     steal_n=max(1, self.procs // max(workers, 1)),
-                     faults=faults)
-        names = [f"rank{p}.step{self.step}" for p in range(self.procs)]
-        for p, blk in enumerate(parts):
-            eng.submit(names[p], fn=(lambda blk=blk: g(blk)))
-        report = eng.run()
+        client = Client(scheduler="mpi_list", workers=max(workers, 1),
+                        transport="inproc",
+                        steal_n=max(1, self.procs // max(workers, 1)),
+                        faults=faults, resident=False)
+        futs = [client.submit(g, blk, key=f"rank{p}.step{self.step}")
+                for p, blk in enumerate(parts)]
+        try:
+            client.run()
+        finally:
+            client.close()
         out, times, virtuals = [], [], []
-        for p, name in enumerate(names):
-            res = report.results.get(name)
-            if res is None or not res.ok:
-                err = res.error if res is not None else "lost task"
-                raise RuntimeError(f"mpi-list rank {p} failed: {err}")
-            out.append(res.value)
+        for p, fut in enumerate(futs):
+            err = fut.exception()
+            if err is not None:
+                raise RuntimeError(f"mpi-list rank {p} failed: {err!r}")
+            res = fut.task_result
+            if res is None:
+                raise RuntimeError(f"mpi-list rank {p} failed: lost task")
+            out.append(fut.result())
             dt = res.duration_s
             if self.jitter is not None:
                 dt += self.jitter(p)

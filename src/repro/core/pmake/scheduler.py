@@ -20,7 +20,6 @@ import time
 from pathlib import Path
 from typing import Callable, Optional
 
-from repro.core.engine.executor import Engine
 from repro.core.pmake.graph import Task, build_graph
 from repro.core.pmake.rules import parse_rules, parse_targets, staged_format
 
@@ -51,6 +50,7 @@ class PMake:
         self.tracer = tracer          # optional engine TraceRecorder
         self.faults = faults          # optional engine FaultPlan
         self.report = None            # EngineReport of the last run()
+        self.futures = {}             # task key -> client Future (last run)
         self.log: list[dict] = []     # schedule trace
         self.errors: set[str] = set()
 
@@ -88,13 +88,20 @@ class PMake:
 
     # ------------------------------------------------------------------
     def run(self) -> dict:
-        """Greedy EFT run on the engine pool; returns summary stats.
+        """Greedy EFT run through the futures client (batch mode); returns
+        summary stats.
 
         The engine's launch step (sort stolen tasks by priority, fill free
         slots) replaces the old popen polling loop; `slots` carries the
         clamped node count so node-limited allocations serialize exactly
         as before, and failures poison transitive successors server-side.
+        This method is a shim over `repro.client.Client` — the same front
+        door the dynamic futures API uses.
         """
+        # lazy import: repro.client imports engine modules that import
+        # pmake's siblings, so a module-scope import would cycle
+        from repro.client import Client
+
         done: set[str] = set()
         t0 = time.perf_counter()
 
@@ -110,9 +117,12 @@ class PMake:
         # every ready task by EFT priority, reproducing the old loop's
         # global "greedy highest-priority-first onto free nodes" (a narrow
         # window would only prioritize within each stolen batch)
-        eng = Engine(workers=self.total_nodes, transport=self.transport,
-                     steal_n=max(4, len(self.tasks)), poll=self.poll,
-                     tracer=self.tracer, faults=self.faults)
+        client = Client(
+            scheduler="pmake", workers=self.total_nodes,
+            transport=self.transport, steal_n=max(4, len(self.tasks)),
+            poll=self.poll, tracer=self.tracer, faults=self.faults,
+            resident=False,
+            executor=lambda name, meta: self._run_task(self.tasks[name]))
         # submit in dependency (topological) order: the task server
         # forward-declares unknown deps as READY stubs and ignores a later
         # duplicate Create, so a dependent submitted before its producer
@@ -133,15 +143,20 @@ class PMake:
                 else:
                     order.append(key)
                     stack.pop()
+        self.futures = {}
         for k in order:
             t = self.tasks[k]
             if k in done:
                 continue
-            eng.submit(k, deps=[d for d in t.deps if d not in done],
-                       priority=t.priority,
-                       slots=min(t.rule.resources.nrs, self.total_nodes),
-                       meta={"rule": t.rule.name})
-        report = eng.run(lambda name, meta: self._run_task(self.tasks[name]))
+            self.futures[k] = client.submit_task(
+                k, deps=[d for d in t.deps if d not in done],
+                priority=t.priority,
+                slots=min(t.rule.resources.nrs, self.total_nodes),
+                meta={"rule": t.rule.name})
+        try:
+            report = client.run()
+        finally:
+            client.close()
         self.report = report
 
         for name, res in report.results.items():

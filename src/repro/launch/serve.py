@@ -1,12 +1,14 @@
-"""Continuous-serving driver: generation requests through the resident
-engine + METG-batching frontend.
+"""Continuous-serving driver: generation requests through the futures
+client's resident engine + METG-batching frontend.
 
-Requests enter a bounded admission queue (`repro.core.serving.Frontend`);
-the frontend coalesces them into engine tasks sized by the METG model for
-the live worker count (the paper's granularity guidance automated) or by
-the max-wait deadline, and the resident engine dispatches them with
-faults/leases/tracing intact — a worker crash requeues its in-flight
-requests.  Per-request p50/p95/p99 latency comes straight from the trace.
+The serving session rides the same front door as everything else
+(`repro.client.Client`): `client.serve(execute_batch)` attaches a
+bounded-admission `Frontend` that coalesces requests into engine tasks
+sized by the METG model for the live worker count (the paper's
+granularity guidance automated) or by the max-wait deadline, and the
+resident engine dispatches them with faults/leases/tracing intact — a
+worker crash requeues its in-flight requests.  Per-request p50/p95/p99
+latency comes straight from the trace.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
         --requests 12 --max-new 8
@@ -20,9 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.client import Client
 from repro.configs import get_config
-from repro.core.engine import Engine
-from repro.core.serving import Frontend
 from repro.models.common import Options
 from repro.models.model import build_model
 from repro.runtime.serve_step import greedy_generate
@@ -61,13 +62,13 @@ def main(argv=None):
         assert not bool(jnp.any(out < 0))
         return [np.asarray(row) for row in out]
 
-    engine = Engine(workers=args.workers, resident=True, lease_timeout=120.0)
-    frontend = Frontend(engine, execute_batch,
-                        max_queue=max(args.requests, 16),
-                        max_batch=max(args.requests, 1),
-                        max_wait_s=args.max_wait_ms * 1e-3,
-                        per_request_s0=0.05)
-    frontend.start()
+    client = Client(scheduler="dwork", workers=args.workers,
+                    lease_timeout=120.0)
+    frontend = client.serve(execute_batch,
+                            max_queue=max(args.requests, 16),
+                            max_batch=max(args.requests, 1),
+                            max_wait_s=args.max_wait_ms * 1e-3,
+                            per_request_s0=0.05)
     print(f"[serve] METG batch target for {args.workers} worker(s): "
           f"{frontend.target_batch()}")
 
@@ -83,8 +84,7 @@ def main(argv=None):
         assert r.ok, f"request {r.name} failed: {r.error}"
         assert r.value.shape == (args.max_new,)
         done += 1
-    frontend.close()
-    report = engine.shutdown()
+    report = client.close()
     lat = report.trace.latency_report()
     print(f"[serve] all {done} requests served in {time.time() - t0:.1f}s; "
           f"batches={lat.n_batches} mean_batch={lat.mean_batch:.1f}")

@@ -1,29 +1,34 @@
-"""Elastic worker pool: the resident engine as the fault-tolerance layer.
+"""Elastic worker pool: the futures client's resident engine as the
+fault-tolerance layer.
 
-Training work-shards / inference request batches are engine tasks; a
-resident `Engine` (`core.engine`) dispatches them, and membership changes
-(`start_worker` / `lose_worker`) invoke a `remesh` callback so the runtime
-can re-lower the step for the new device count (elastic scaling) and
-resume from the latest checkpoint.  A worker crash (`fail_after` drills,
-or any `WorkerCrash` raised from the step function) announces Exit so the
-in-flight tasks are requeued — never lost, never marked failed; a silently
-wedged worker is reaped by the engine's heartbeat lease.
+Training work-shards / inference request batches are engine tasks
+submitted through `repro.client.Client` (each returns a `Future`); the
+client's resident `Engine` dispatches them, and membership changes
+(`start_worker` / `lose_worker`) invoke a `remesh` callback so the
+runtime can re-lower the step for the new device count (elastic
+scaling) and resume from the latest checkpoint.  A worker crash
+(`fail_after` drills, or any `WorkerCrash` raised from the step
+function) announces Exit so the in-flight tasks are requeued — never
+lost, never marked failed; a silently wedged worker is reaped by the
+engine's heartbeat lease.
 
 METG-aware batching (paper §5, automated): `steal_n` is re-derived on
 EVERY membership change so per-steal work tracks the live worker count —
 the engine re-reads it each dispatch round, so the new batch size applies
 without restarting anything.
 
-This module is a thin client of the serving-era engine: the per-worker
+This module is a thin client of the futures-era engine: the per-worker
 steal/complete loops that used to live here are the engine's dispatch
-loop now (`repro.core.engine.executor`).
+loop, and task plumbing is the client's (`submit` hands back a `Future`
+that resolves exactly once across crash requeues).
 """
 from __future__ import annotations
 
 import threading
 from typing import Callable, Optional
 
-from repro.core.engine import Engine, WorkerCrash
+from repro.client import Client, Future
+from repro.core.engine import WorkerCrash
 from repro.core.metg import METGModel, pick_batch_size
 
 
@@ -31,8 +36,10 @@ class ElasticPool:
     def __init__(self, *, lease_timeout: float = 30.0,
                  remesh: Optional[Callable[[int], None]] = None,
                  per_task_s: float = 1.0):
-        self.engine = Engine(workers=0, resident=True,
-                             lease_timeout=lease_timeout)
+        self.client = Client(scheduler="dwork", workers=0, resident=True,
+                             lease_timeout=lease_timeout,
+                             executor=self._execute, pass_worker=True)
+        self.engine = self.client.engine
         self.remesh = remesh
         self.per_task_s = per_task_s
         self.metg = METGModel.from_paper()
@@ -41,11 +48,14 @@ class ElasticPool:
         self._done: dict[str, int] = {}
         self._lock = threading.Lock()
         self.completed: list = []
-        self.engine.start(self._execute, pass_worker=True)
+        self.client.start()
 
     # ------------------------------------------------------------------
-    def submit(self, name: str, deps=(), meta=None):
-        self.engine.submit(name, deps=deps, meta=meta)
+    def submit(self, name: str, deps=(), meta=None) -> Future:
+        """Queue a named work shard; the returned `Future` resolves when
+        the shard reaches its terminal state (exactly once, across any
+        crash requeues)."""
+        return self.client.submit_task(name, deps=deps, meta=meta)
 
     def steal_n_for(self, n_workers: int) -> int:
         return pick_batch_size("dwork", max(n_workers, 1), self.per_task_s,
@@ -86,13 +96,13 @@ class ElasticPool:
         if fail_after is not None:
             self._crash_after[worker_id] = fail_after
         self._retune()
-        self.engine.add_worker(worker_id)
+        self.client.add_worker(worker_id)
         return worker_id
 
     def lose_worker(self, worker_id: str):
         """Driver-side failure detection (paper: Exit may be called by the
         user to recover from a node failure)."""
-        self.engine.lose_worker(worker_id)
+        self.client.lose_worker(worker_id)
         self.workers.pop(worker_id, None)
         self._retune()
 
@@ -100,13 +110,13 @@ class ElasticPool:
         """Wait for every submitted task to reach a terminal state and
         return the server stats.  The pool stays up — more work can be
         submitted after a join (continuous service)."""
-        self.engine.drain(timeout)
-        return self.engine.backend.stats()
+        self.client.drain(timeout)
+        return self.client.stats()
 
     def shutdown(self):
         """Stop the resident loop for good; returns the EngineReport."""
         if self.engine.started:
-            return self.engine.shutdown()
+            return self.client.close()
         return None
 
     # a pool abandoned without shutdown() must not keep a dispatch thread

@@ -1,0 +1,550 @@
+"""Futures client tests: the one-front-door API over the unified engine.
+
+Covers the acceptance snippet for all three schedulers, dynamic
+future-as-dependency DAGs, the failure taxonomy (original exception /
+TaskFailed / DependencyFailed / CancelledError), cancel of a
+not-yet-stolen task, result(timeout=) expiry, gather with mixed
+failures, exactly-once resolution across a seeded worker kill, the
+bounded-state hooks (trace ring buffer, terminal pruning,
+keep_results), and the idempotent engine shutdown lifecycle."""
+import threading
+import time
+
+import pytest
+
+from repro.client import (CancelledError, Client, DependencyFailed, Future,
+                          TaskFailed, as_completed)
+from repro.core.dwork import InProcTransport, TaskServer
+from repro.core.dwork import Client as DworkClient
+from repro.core.engine import (CANCELLED, Engine, FaultPlan, TraceRecorder,
+                               WorkerCrash)
+
+
+# ------------------------------------------------- the acceptance snippet
+
+
+@pytest.mark.parametrize("scheduler", ["dwork", "pmake", "mpi_list"])
+def test_snippet_works_unmodified_for_every_scheduler(scheduler):
+    xs = list(range(40))
+    with Client(scheduler=scheduler) as c:
+        fs = [c.submit(lambda x=x: x * x) for x in xs]
+        assert c.gather(fs) == [x * x for x in xs]
+        ov = c.report()
+        assert ov.n_tasks == len(xs)
+        assert ov.per_task_overhead_s >= 0.0
+
+
+def test_future_as_dependency_builds_dynamic_dag():
+    with Client(workers=2) as c:
+        a = c.submit(lambda: 3)
+        b = c.submit(lambda v: v + 4, a)          # positional lift
+        d = c.submit(lambda v, w=0: v * w, a, w=b)  # kwarg lift
+        tail = c.submit(sum, c.submit(lambda: [1, 2, 3]))
+        assert d.result(10) == 21
+        assert tail.result(10) == 6
+        # deps were registered engine-side, not just resolved by luck
+        assert c.engine.tasks[b.name].deps == (a.name,)
+
+
+def test_map_and_ordering_only_deps():
+    with Client(workers=4) as c:
+        order = []
+        first = c.submit(lambda: order.append("first"))
+        fs = c.map(lambda x, y: x + y, range(10), range(10))
+        gated = c.submit(lambda: order.append("second"), deps=[first])
+        assert c.gather(fs) == [2 * i for i in range(10)]
+        gated.result(10)
+        assert order == ["first", "second"]
+
+
+# ------------------------------------------------------- failure taxonomy
+
+
+def test_original_exception_rethrown_and_poisoning_downstream():
+    with Client(workers=2) as c:
+        bad = c.submit(lambda: 1 / 0)
+        down = c.submit(lambda v: v + 1, bad)
+        deeper = c.submit(lambda v: v + 1, down)
+        with pytest.raises(ZeroDivisionError):
+            bad.result(10)
+        assert isinstance(bad.exception(10), ZeroDivisionError)
+        for f in (down, deeper):
+            with pytest.raises(DependencyFailed):
+                f.result(10)
+        assert down.exception(10) is not None
+
+
+def test_gather_mixed_failures():
+    with Client(workers=2) as c:
+        ok1 = c.submit(lambda: 1)
+        bad = c.submit(lambda: (_ for _ in ()).throw(ValueError("boom")))
+        ok2 = c.submit(lambda: 2)
+        down = c.submit(lambda v: v, bad)
+        fs = [ok1, bad, ok2, down]
+        # default: every future resolves first, then the first error raises
+        with pytest.raises(ValueError, match="boom"):
+            c.gather(fs)
+        out = c.gather(fs, return_exceptions=True)
+        assert out[0] == 1 and out[2] == 2
+        assert isinstance(out[1], ValueError)
+        assert isinstance(out[3], DependencyFailed)
+
+
+def test_submit_after_dependency_failed_fails_fast():
+    with Client(workers=1) as c:
+        bad = c.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            bad.result(10)
+        late = c.submit(lambda v: v, bad)      # dynamic DAG, dep already dead
+        with pytest.raises(DependencyFailed):
+            late.result(10)
+
+
+# ------------------------------------------------------------------ cancel
+
+
+def test_cancel_not_yet_stolen_task():
+    # the client is built but NOT started: submissions sit server-side,
+    # so the cancel race is deterministic
+    c = Client(workers=1)
+    a = c.submit(lambda: 1)
+    b = c.submit(lambda v: v + 1, a)
+    down = c.submit(lambda v: v * 2, b)
+    assert b.cancel() is True
+    assert b.cancelled() and b.done()
+    with pytest.raises(CancelledError):
+        b.result(1)
+    with pytest.raises(CancelledError):
+        b.exception(1)
+    assert c.engine.tracer.count(CANCELLED) == 1
+    with c:
+        assert a.result(10) == 1               # untouched sibling completes
+        with pytest.raises(DependencyFailed):
+            down.result(10)                    # cancelled dep poisons it
+    # cancel after terminal state: refused
+    assert a.cancel() is False
+    assert b.cancel() is False
+
+
+def test_cancel_running_or_done_task_returns_false():
+    release = threading.Event()
+    with Client(workers=1, transport="thread") as c:
+        running = c.submit(release.wait, 5)
+        deadline = time.monotonic() + 5
+        while c.engine.backend.server.lease == {} \
+                and time.monotonic() < deadline:
+            time.sleep(0.001)                  # wait until it is stolen
+        assert running.cancel() is False       # already leased
+        release.set()
+        assert running.result(10) is True
+
+
+# ---------------------------------------------------------------- timeouts
+
+
+def test_result_timeout_expiry():
+    with Client(workers=1, transport="thread") as c:
+        gate = threading.Event()
+        slow = c.submit(gate.wait, 5)
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            slow.result(timeout=0.05)
+        assert time.monotonic() - t0 < 2.0
+        assert not slow.done()
+        gate.set()
+        assert slow.result(10) is True
+
+
+def test_as_completed_yields_in_completion_order_and_times_out():
+    with Client(workers=1) as c:
+        fs = [c.submit(lambda x=x: x) for x in range(10)]
+        got = [f.result() for f in as_completed(fs, timeout=10)]
+        assert sorted(got) == list(range(10))
+    with Client(workers=1, transport="thread") as c:
+        gate = threading.Event()
+        blocked = c.submit(gate.wait, 5)
+        with pytest.raises(TimeoutError):
+            list(as_completed([blocked], timeout=0.05))
+        gate.set()
+        blocked.result(10)
+
+
+# ------------------------------------------- exactly-once across a crash
+
+
+def test_future_dep_chain_survives_seeded_worker_kill():
+    faults = FaultPlan(seed=11).kill_worker("w1", after_steals=8)
+    resolutions: dict[str, int] = {}
+    with Client(workers=4, steal_n=4, faults=faults) as c:
+        flat = [c.submit(lambda x=x: x * 3) for x in range(150)]
+        head = c.submit(lambda: 0)
+        chain = [head]
+        for _ in range(15):
+            chain.append(c.submit(lambda v: v + 1, chain[-1]))
+        for f in flat + chain:
+            f.add_done_callback(
+                lambda fu: resolutions.__setitem__(
+                    fu.name, resolutions.get(fu.name, 0) + 1))
+        assert c.gather(flat) == [x * 3 for x in range(150)]
+        assert chain[-1].result(30) == 15
+        ov = c.report()
+        assert ov.n_requeued > 0              # the kill actually happened
+        assert ov.n_tasks == 150 + 16         # zero loss, no double count
+    # every future resolved exactly once (callbacks fire per resolution)
+    assert set(resolutions.values()) == {1}
+    assert len(resolutions) == 150 + 16
+
+
+# ----------------------------------------------------------- batch mode
+
+
+def test_batch_mode_futures_and_report():
+    c = Client(resident=False, workers=2, steal_n=2)
+    fs = [c.submit(lambda x=x: x + 1) for x in range(30)]
+    bad = c.submit(lambda: 1 / 0)
+    down = c.submit(lambda v: v, bad)
+    assert c.gather(fs) == [x + 1 for x in range(30)]   # gather runs it
+    assert isinstance(bad.exception(), ZeroDivisionError)
+    with pytest.raises(DependencyFailed):
+        down.result()
+    rep = c.run()                                       # cached report
+    assert len(rep.completed) == 30
+    c.close()
+
+
+def test_run_pool_is_a_client_shim_with_unchanged_contract():
+    srv = TaskServer()
+    boss = DworkClient(InProcTransport(srv), "boss")
+    for i in range(25):
+        boss.create(f"t{i}", meta={"x": i})
+    from repro.core.dwork import run_pool
+    rep = run_pool(srv, lambda name, meta: (True, meta["x"] * 2), workers=3,
+                   steal_n=4)
+    assert len(rep.completed) == 25
+    assert rep.results["t7"].value == 14
+
+
+# ------------------------------------------------------- bounded state
+
+
+def test_trace_ring_buffer_bounds_memory():
+    tr = TraceRecorder(max_events=100)
+    for i in range(500):
+        tr.emit("x", task=f"t{i}")
+    assert len(tr.events) == 100
+    assert tr.dropped == 400
+    assert tr.n_emitted == 500
+    # newest events are the ones retained
+    assert tr.events[-1].task == "t499" and tr.events[0].task == "t400"
+    unbounded = TraceRecorder()
+    unbounded.emit("x")
+    assert unbounded.dropped == 0
+
+
+def test_client_with_ring_buffer_and_no_results_history():
+    with Client(workers=2, max_trace_events=64, keep_results=False) as c:
+        fs = [c.submit(lambda x=x: x) for x in range(100)]
+        assert c.gather(fs) == list(range(100))
+        assert len(c.engine.tracer.events) <= 64
+        assert c.engine.tracer.dropped > 0
+    assert c.close().results == {}        # history opt-out held
+
+
+def test_server_and_engine_prune_terminal():
+    srv = TaskServer()
+    boss = DworkClient(InProcTransport(srv), "boss")
+    for i in range(20):
+        boss.create(f"t{i}", meta={})
+    from repro.core.dwork import run_pool
+    run_pool(srv, lambda name, meta: True, workers=2)
+    assert len(srv.joins) == 20 and srv._all_done()
+    assert len(srv.prune_terminal()) == 20
+    assert not srv.joins and not srv.meta and not srv.completed
+    assert srv._all_done()                 # 0 terminal >= 0 tasks
+    # the server still serves fresh work after a prune
+    boss.create("fresh", meta={})
+    rep = run_pool(srv, lambda name, meta: True, workers=1)
+    assert "fresh" in rep.completed
+
+
+def test_resolved_future_as_dep_survives_pruning():
+    # a resolved Future is a satisfied dependency: it must NOT be
+    # re-declared server-side (after prune_terminal the name is gone and
+    # a re-declare would resurrect it as a READY stub and wedge the
+    # dependent)
+    with Client(workers=2) as c:
+        a = c.submit(lambda: 21)
+        assert a.result(10) == 21
+        c.drain()
+        c.prune()
+        b = c.submit(lambda v: v * 2, a)       # value still flows via _peek
+        assert b.result(5) == 42
+    # a FAILED resolved dep still poisons, even after pruning forgot it
+    with Client(workers=2) as c:
+        bad = c.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            bad.result(10)
+        c.drain()
+        c.prune()
+        late = c.submit(lambda v: v, bad)
+        with pytest.raises(DependencyFailed):
+            late.result(5)
+        gated = c.submit_task("gated-after-prune", deps=[bad])
+        with pytest.raises(DependencyFailed):
+            gated.result(5)
+
+
+def test_name_dep_on_pruned_task_completes_instead_of_wedging():
+    # a string-name dep can re-declare a pruned name as a server stub;
+    # the engine must report the stub's terminal state (it knows the
+    # name already finished) rather than silently dropping the steal —
+    # otherwise the dependent waits forever
+    done = []
+    with Client(workers=1, prune_every=1,
+                executor=lambda n, m: done.append(n) or True) as c:
+        a = c.submit_task("A")
+        assert a.exception(10) is None
+        c.drain()
+        c.prune()                       # 'A' forgotten on both layers
+        b = c.submit_task("B", deps=["A"])
+        assert b.exception(10) is None  # resolved, not wedged
+        assert done.count("A") == 1     # the stub never re-executed
+
+
+def test_duplicate_key_rejected_without_orphaning_original():
+    with Client(workers=1) as c:
+        f1 = c.submit(lambda: 1, key="dup")
+        with pytest.raises(ValueError):
+            c.submit(lambda: 2, key="dup")
+        assert f1.result(10) == 1       # original future still resolves
+
+
+def test_loop_crash_fails_pending_futures():
+    c = Client(workers=1)
+    f = c.submit(lambda: 1)
+
+    def boom(tasks):
+        raise RuntimeError("backend died")
+
+    c.engine.backend.create_many = boom
+    c.start()
+    with pytest.raises(TaskFailed, match="loop died"):
+        f.result(10)                    # surfaced, not a hang
+    with pytest.raises(RuntimeError, match="backend died"):
+        c.close()                       # shutdown re-raises the cause
+
+
+def test_prune_of_poisoned_waiting_task_survives_live_dep_completion():
+    # A fails -> poisons dep-waiting B while C (B's other dep) still
+    # runs; an aggressive auto-prune drops B from the server tables —
+    # C's later Complete must skip the pruned successor, not KeyError
+    # the dispatch loop
+    import threading as _t
+    gate = _t.Event()
+    with Client(workers=2, transport="thread", prune_every=1) as c:
+        bad = c.submit(lambda: 1 / 0, key="A")
+        slow = c.submit(lambda: gate.wait(5), key="C")
+        dep = c.submit(lambda a, s: None, bad, slow, key="B")
+        with pytest.raises(ZeroDivisionError):
+            bad.result(10)
+        c.prune()
+        gate.set()
+        assert slow.result(10) is True
+        with pytest.raises(DependencyFailed):
+            dep.result(10)
+    c.close()                               # loop exited cleanly
+
+
+def test_submit_after_close_raises():
+    c = Client(workers=1)
+    f = c.submit(lambda: 1)
+    c.close()
+    assert f.result(5) == 1
+    with pytest.raises(RuntimeError, match="closed"):
+        c.submit(lambda: 2)
+    with pytest.raises(RuntimeError, match="closed"):
+        c.submit_task("late")
+
+
+def test_client_prune_every_keeps_tables_bounded():
+    with Client(workers=2, prune_every=10, keep_results=False) as c:
+        fs = [c.submit(lambda x=x: x) for x in range(60)]
+        assert c.gather(fs) == list(range(60))
+        c.prune()                          # flush the tail
+        assert len(c.engine.tasks) < 60
+        assert len(c.engine.backend.server.joins) < 60
+
+
+def _cross_shard_pair(hub):
+    """A (producer, dependent) name pair homing on different shards
+    (hash-based routing is seed-dependent, so probe for one)."""
+    a = "prod0"
+    sa = hub._shard_of(a)
+    for i in range(64):
+        b = f"dep{i}"
+        if hub._shard_of(b) != sa:
+            return a, b
+    raise AssertionError("no cross-shard pair found")
+
+
+def test_sharded_cancel_poisons_cross_shard_dependent():
+    from repro.core.dwork.sharded import ShardedHub
+
+    hub = ShardedHub(2)
+    a, b = _cross_shard_pair(hub)
+    hub.create(a)
+    hub.create(b, deps=[a])
+    assert hub.cancel(a) is True
+    # the dependent must FAIL, not dangle on its never-released proxy
+    sb = hub._shard_of(b)
+    assert b in hub.shards[sb].errors
+    assert all(s._all_done() for s in hub.shards)
+
+
+def test_sharded_failure_poisons_cross_shard_dependent():
+    from repro.core.dwork.api import Steal, TaskMsg
+    from repro.core.dwork.sharded import ShardedHub
+
+    hub = ShardedHub(2)
+    a, b = _cross_shard_pair(hub)
+    hub.create(a)
+    hub.create(b, deps=[a])
+    sa = hub._shard_of(a)
+    r = hub.shards[sa].handle(Steal(worker=f"w0@{sa}", n=1))
+    assert isinstance(r, TaskMsg) and r.tasks[0][0] == a
+    hub.complete("w0", a, sa, ok=False)
+    sb = hub._shard_of(b)
+    assert b in hub.shards[sb].errors
+    assert all(s._all_done() for s in hub.shards)
+
+
+# ------------------------------------------------- idempotent lifecycle
+
+
+def test_shutdown_of_never_started_resident_engine_is_noop():
+    eng = Engine(workers=1, resident=True)
+    assert eng.shutdown() is None          # never started: safe no-op
+    assert eng.shutdown() is None
+
+
+def test_double_shutdown_returns_first_report():
+    eng = Engine(workers=1, resident=True)
+    eng.start()
+    eng.submit("a", fn=lambda: 1)
+    rep = eng.shutdown()
+    assert "a" in rep.completed
+    assert eng.shutdown() is rep           # idempotent, same report
+    # and the batch-mode guard is still strict
+    with pytest.raises(RuntimeError):
+        Engine(workers=1).shutdown()
+
+
+def test_batch_submit_after_run_rejected():
+    c = Client(resident=False, workers=1)
+    f = c.submit(lambda: 1)
+    c.run()
+    assert f.result() == 1
+    with pytest.raises(RuntimeError, match="one-shot"):
+        c.submit(lambda: 2)
+    c.close()
+
+
+def test_submit_after_loop_death_rejected():
+    c = Client(workers=1)
+    f = c.submit(lambda: 1)
+    c.engine.backend.create_many = lambda tasks: (_ for _ in ()).throw(
+        RuntimeError("backend died"))
+    c.start()
+    with pytest.raises(TaskFailed, match="loop died"):
+        f.result(10)
+    with pytest.raises(RuntimeError, match="dispatch loop died"):
+        c.submit(lambda: 2)         # dead loop: refuse new work
+
+
+def test_cancel_of_lease_requeued_task_refused():
+    # a lease-expired requeue may still be EXECUTING on its straggler
+    # worker: "cancelled" must mean "never runs", so refuse
+    from repro.core.dwork.api import Cancel, NotFound, Steal
+    from repro.core.engine import ManualClock
+
+    clock = ManualClock()
+    srv = TaskServer(lease_timeout=1.0, clock=clock)
+    boss = DworkClient(InProcTransport(srv), "boss")
+    boss.create("t", meta={})
+    srv.handle(Steal(worker="w0", n=1))      # stolen, lease starts
+    clock.advance(5.0)
+    srv.handle(Steal(worker="w1", n=0))      # reap: t requeued
+    assert "t" in srv.requeued_tasks
+    assert isinstance(srv.handle(Cancel(task="t")), NotFound)
+
+
+def test_client_close_is_idempotent_and_enter_after_close_rejected():
+    c = Client(workers=1)
+    with c:
+        f = c.submit(lambda: 5)
+        assert f.result(10) == 5
+    rep = c.close()                        # second close: no-op
+    assert rep is c.close()
+    with pytest.raises(RuntimeError):
+        c.start()
+
+
+def test_lazy_client_close_runs_pending_work():
+    # the inline-transport client starts its loop lazily: a close(drain=
+    # True) with pending futures starts + drains so nothing is lost
+    c = Client(workers=1)
+    f = c.submit(lambda: 1)
+    rep = c.close()
+    assert f.result(1) == 1 and rep is not None
+    # drain=False abandons instead: the future fails loudly, never hangs
+    c2 = Client(workers=1)
+    f2 = c2.submit(lambda: 1)
+    assert c2.close(drain=False) is None
+    with pytest.raises(TaskFailed):
+        f2.result(1)
+
+
+# ----------------------------------------------------- serving + elastic
+
+
+def test_client_serve_roundtrip_and_close():
+    with Client(workers=2, lease_timeout=30.0) as c:
+        fe = c.serve(lambda payloads: [p * 2 for p in payloads],
+                     max_wait_s=0.002)
+        reqs = [fe.submit(i) for i in range(20)]
+        for i, r in enumerate(reqs):
+            assert r.wait(30.0) and r.ok
+            assert r.value == i * 2
+    rep = c.close()
+    lat = rep.trace.latency_report()
+    assert lat.n_requests == 20 and lat.n_failed == 0
+
+
+def test_elastic_pool_futures():
+    from repro.runtime.elastic import ElasticPool
+
+    with ElasticPool(lease_timeout=5.0) as pool:
+        pool.start_worker("a", lambda name, meta: True)
+        fs = [pool.submit(f"s{i}") for i in range(10)]
+        pool.join(30.0)
+        # executor-style tasks return ok=True with no value: success is
+        # "resolved without exception"
+        assert all(isinstance(f, Future) and f.exception(5) is None
+                   for f in fs)
+        assert len(pool.completed) == 10
+
+
+def test_executor_worker_crash_requeues_not_fails():
+    crashed = []
+
+    def execute(name, meta, worker):
+        if not crashed:
+            crashed.append(worker)
+            raise WorkerCrash("drill")
+        return True
+
+    with Client(workers=2, executor=execute, pass_worker=True) as c:
+        fs = [c.submit_task(f"n{i}") for i in range(10)]
+        assert c.gather(fs) == [None] * 10     # ok=True, no value
+        assert all(f.exception() is None for f in fs)
+        assert c.report().n_requeued >= 1
