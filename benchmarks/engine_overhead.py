@@ -67,6 +67,12 @@ def bench_dwork(n_tasks: int, workers: int, steal_n: int = 4,
         if best is None or ov_i.per_task_overhead_s < best[1].per_task_overhead_s:
             best = (rep_i, ov_i)
     rep, ov = best
+    # forwarding-tree / sharded-apex hop attribution (op="hop:L<k>" and
+    # "hop:L<k>:s<j>"): per-hop mean latency so the sweep can show WHERE
+    # tree time accrues; empty for transports with no hops
+    rpc_hops = {op: {"n": c, "mean_us": round(tot / c * 1e6, 2)}
+                for op, (c, tot) in sorted(ov.rpc_by_op.items())
+                if op.startswith("hop:")}
     model = METGModel.from_measured(rtt_s=ov.rpc_per_task_s)
     # rpc_per_task_s is already amortized over the Steal-n batch, so the
     # analytic law is evaluated at steal_n=1 (no double-counting).  The
@@ -79,8 +85,10 @@ def bench_dwork(n_tasks: int, workers: int, steal_n: int = 4,
     return {
         **ov.summary(),
         "workers": rep.pool_workers,
+        **({"rpc_hops": rpc_hops} if rpc_hops else {}),
         "crosscheck": crosscheck("dwork", ov.per_task_overhead_s,
-                                 model.dwork_metg(ov.workers)),
+                                 model.dwork_metg(ov.workers,
+                                                  shards=shards)),
         "rtt_vs_paper": crosscheck("dwork-rtt", ov.rpc_per_task_s,
                                    PAPER_DWORK_RTT, factor=30.0),
     }
@@ -161,27 +169,29 @@ def run(quick: bool = True) -> dict:
 
 def run_sweep(quick: bool = True) -> dict:
     """steal_n x shards x transport sweep for the dwork adapter — the
-    perf trajectory for the engine's three dispatch knobs.  The tree
-    transport forwards to a single hub, so tree x shards>1 cells are
-    skipped (shard the hub behind the tree instead)."""
+    perf trajectory for the engine's three dispatch knobs, INCLUDING the
+    composed tree x shards>1 cells (the sharded hub behind the
+    forwarding tree: hash routing at the apex, per-shard hop
+    attribution in `rpc_hops`)."""
     n = 300 if quick else 2000
     workers = 4
     _warmup()
     out = {"n_tasks": n, "workers": workers, "cells": []}
     for transport in ("inproc", "thread", "tree"):
         for shards in (1, 2, 4):
-            if transport == "tree" and shards > 1:
-                continue
             for steal_n in (1, 4, 8):
                 r = bench_dwork(n, workers, steal_n=steal_n,
                                 shards=shards, transport=transport)
-                out["cells"].append({
+                cell = {
                     "transport": transport, "shards": shards,
                     "steal_n": steal_n,
                     "tasks_per_s": r["tasks_per_s"],
                     "per_task_overhead_us": r["per_task_overhead_us"],
                     "rpc_per_task_us": r["rpc_per_task_us"],
-                })
+                }
+                if "rpc_hops" in r:
+                    cell["rpc_hops"] = r["rpc_hops"]
+                out["cells"].append(cell)
     return out
 
 

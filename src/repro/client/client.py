@@ -121,11 +121,15 @@ class Client:
                                                 ShardedBackend, TreeBackend)
 
         if isinstance(server, ShardedHub):
-            if transport == "tree":
-                raise ValueError("tree transport forwards to a single hub; "
-                                 "pass a TaskServer")
             lease = (server.shards[0].lease_timeout if server.shards
                      else None)
+            if transport == "tree":
+                # sharded hub BEHIND the forwarding tree: the top-level
+                # routers hash-route the Table-2 verbs per shard
+                tracer = tracer or TraceRecorder(clock=clock)
+                return TreeBackend(hub=server, workers=workers,
+                                   fanout=tree_fanout, levels=tree_levels,
+                                   tracer=tracer), lease
             return ShardedBackend(hub=server, tracer=tracer), lease
         if transport == "tree":
             # the Forwarders capture the tracer at construction, so it

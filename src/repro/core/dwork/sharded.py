@@ -12,15 +12,34 @@ logically the same as assigning it to a worker".
     steal from the busiest other shard (work stealing across shards).
   * METG effect: dispatch rate multiplies by the shard count
     (METGModel.dwork_metg(..., shards=N)).
+
+Relay boundary (`handle()` + `sender`): the hub can be mounted BEHIND
+the §4 forwarding tree.  `handle(msg)` accepts the Table-2 verbs exactly
+as they arrive over a wire — no shard annotations — and routes them by
+the home map (Complete/CompleteSteal), task hash (Create), or worker
+affinity (Steal); all verbs it accepts round-trip through the msgpack
+wire encoding, so prune/cancel/poison behavior survives serialization.
+Every per-shard verb the hub issues goes through `_send`, which a
+mounted hub redirects over a real per-shard link (`ShardLinks` installs
+itself as `sender` — one timed `hop:L<k>:s<j>` rpc event per shard
+round-trip).  Batched `CompleteSteal` verbs whose finished-batch and
+steal-target shards differ are SPLIT per home shard, and the
+steal-target shard's group is MERGED onto the steal frame so that shard
+still sees one round-trip (Fig. 2 batch-then-drain, per shard).
+
+Control plane: `_propagate_poison` and `prune_terminal` read shard state
+in-process (worklists + meta under the shard locks) — they are hub
+maintenance, not wire verbs, and stay correct whether or not the data
+plane crosses a relay.
 """
 from __future__ import annotations
 
 import threading
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.core.dwork.api import (Cancel, Complete, CompleteSteal, Create,
-                                  Exit, ExitResp, NotFound, Release, Steal,
-                                  TaskMsg)
+                                  Exit, ExitResp, NotFound, Release, Stats,
+                                  Steal, TaskMsg)
 from repro.core.dwork.server import TaskServer
 
 
@@ -33,12 +52,87 @@ class ShardedHub:
             s._new_errors = []     # arm the cross-shard poison worklist
         self.home: dict[str, int] = {}
         self.lock = threading.Lock()
+        # data-plane indirection: None = in-process shard handle; a hub
+        # behind the tree gets a ShardLinks sender so every per-shard
+        # verb crosses the per-shard wire (and is hop-timed)
+        self.sender: Optional[Callable] = None
+
+    def _send(self, shard: int, msg):
+        """Deliver one Table-2 verb to shard `shard` — in-process by
+        default, over the installed per-shard link when mounted behind a
+        relay (TreeBackend installs `sender`)."""
+        if self.sender is None:
+            return self.shards[shard].handle(msg)
+        return self.sender(shard, msg)
 
     def _shard_of(self, task: str) -> int:
         with self.lock:
             if task not in self.home:
                 self.home[task] = hash(task) % len(self.shards)
             return self.home[task]
+
+    @staticmethod
+    def _affinity(worker: str) -> Optional[int]:
+        """Shard affinity from the engine's worker naming (w<i>)."""
+        tail = worker.rsplit("w", 1)[-1]
+        return int(tail) if tail.isdigit() else None
+
+    def _steal_order(self, affinity: Optional[int]) -> list:
+        """Affinity shard first (locality), else busiest-first (cross-
+        shard work stealing) — the shared probe order for steals."""
+        order = list(range(len(self.shards)))
+        if affinity is not None:
+            order.sort(key=lambda i: 0 if i == affinity % len(self.shards)
+                       else 1)
+        else:
+            order.sort(key=lambda i: -len(self.shards[i].ready))
+        return order
+
+    # ---------------------------------------------------- relay boundary
+    def handle(self, msg):
+        """Wire-boundary entry point: the Table-2 verbs as they arrive
+        over a relay (no shard annotations).  Routing: CompleteSteal and
+        Complete by the authoritative home map, Create by task hash,
+        Steal by worker affinity.  Responses are the plain protocol
+        responses (TaskMsg / NotFound / ExitResp / stats dict), so a
+        `ShardRouter` can encode them straight back downstream."""
+        if isinstance(msg, CompleteSteal):
+            resp, _ = self.complete_steal(msg.worker,
+                                          self._route_done(msg.done),
+                                          n=msg.n,
+                                          affinity=self._affinity(msg.worker))
+            return resp
+        if isinstance(msg, Steal):
+            resp, _ = self.steal(msg.worker, n=msg.n,
+                                 affinity=self._affinity(msg.worker))
+            return resp
+        if isinstance(msg, Complete):
+            shard = self.home.get(msg.task)
+            if shard is None:
+                return NotFound()             # unknown / pruned name
+            return self.complete(msg.worker, msg.task, shard, ok=msg.ok)
+        if isinstance(msg, Create):
+            self.create(msg.task, deps=msg.deps, meta=msg.meta)
+            return ExitResp()
+        if isinstance(msg, Exit):
+            self.exit_worker(msg.worker)
+            return ExitResp()
+        if isinstance(msg, Cancel):
+            return ExitResp() if self.cancel(msg.task) else NotFound()
+        if isinstance(msg, Stats):
+            return self.stats()
+        raise TypeError(f"unroutable message {msg!r}")
+
+    def _route_done(self, done) -> list:
+        """[(task, ok)] -> [(task, ok, home shard)], dropping names the
+        home map no longer knows (a late duplicate for a pruned task —
+        never guess a shard)."""
+        routed = []
+        for name, ok in done:
+            shard = self.home.get(name)
+            if shard is not None:
+                routed.append((name, ok, shard))
+        return routed
 
     # ------------------------------------------------------------------
     def create(self, task: str, deps=(), meta=None):
@@ -53,45 +147,53 @@ class ShardedHub:
         proxy_deps = list(local)
         for d in remote:
             proxy = f"__proxy__{d}__for__{task}"
-            self.shards[s].handle(Create(task=proxy, deps=[], meta={},
-                                         hold=True))
+            self._send(s, Create(task=proxy, deps=[], meta={}, hold=True))
             proxy_deps.append(proxy)
             ds = self._shard_of(d)
-            self.shards[ds].handle(Create(
+            self._send(ds, Create(
                 task=f"__notify__{proxy}", deps=[d],
                 meta={"notify_shard": s, "proxy": proxy}))
-        self.shards[s].handle(Create(task=task, deps=proxy_deps,
-                                     meta=dict(meta or {})))
+        self._send(s, Create(task=task, deps=proxy_deps,
+                             meta=dict(meta or {})))
         if remote:
             # a remote dep that ALREADY failed poisons its __notify__ at
             # create time; drain the worklist so the held proxy (and the
             # dependent) fail now instead of dangling
             self._propagate_poison()
 
-    def steal(self, worker: str, n: int = 1, affinity: Optional[int] = None):
-        order = list(range(len(self.shards)))
-        if affinity is not None:
-            order.sort(key=lambda i: 0 if i == affinity % len(self.shards)
-                       else 1)
-        else:
-            order.sort(key=lambda i: -len(self.shards[i].ready))
+    def steal(self, worker: str, n: int = 1, affinity: Optional[int] = None,
+              merged=None):
+        """Serve one steal, probing shards in `_steal_order`.  `merged`
+        is an optional (shard, [(task, ok), ...]) finished batch that
+        must ride the steal frame to that shard (the CompleteSteal
+        merge): it is forced to the front of the probe order so the
+        completions are applied even if another shard could serve the
+        steal first."""
+        order = self._steal_order(affinity)
+        if merged is not None:
+            order.sort(key=lambda i: 0 if i == merged[0] else 1)  # stable
         all_exit = True
         for i in order:
-            r = self.shards[i].handle(Steal(worker=f"{worker}@{i}", n=n))
+            if merged is not None and merged[0] == i:
+                r = self._send(i, CompleteSteal(worker=f"{worker}@{i}",
+                                                done=merged[1], n=n))
+                merged = None
+            else:
+                r = self._send(i, Steal(worker=f"{worker}@{i}", n=n))
             if isinstance(r, TaskMsg):
                 served = []
                 for name, meta in r.tasks:
                     if name.startswith("__notify__"):
                         # bookkeeping: Release the held proxy on the
                         # dependent's home shard, retire the notify
-                        self.shards[meta["notify_shard"]].handle(
-                            Release(task=meta["proxy"]))
-                        self.shards[i].handle(Complete(
+                        self._send(meta["notify_shard"],
+                                   Release(task=meta["proxy"]))
+                        self._send(i, Complete(
                             worker=f"{worker}@{i}", task=name))
                     elif name.startswith("__proxy__"):
                         # structural: released proxies auto-complete, which
                         # unblocks their dependents' join counters
-                        self.shards[i].handle(Complete(
+                        self._send(i, Complete(
                             worker=f"{worker}@{i}", task=name))
                     else:
                         served.append((name, meta))
@@ -103,8 +205,8 @@ class ShardedHub:
         return (ExitResp() if all_exit else NotFound()), -1
 
     def complete(self, worker: str, task: str, shard: int, ok: bool = True):
-        resp = self.shards[shard].handle(Complete(worker=f"{worker}@{shard}",
-                                                  task=task, ok=ok))
+        resp = self._send(shard, Complete(worker=f"{worker}@{shard}",
+                                          task=task, ok=ok))
         if not ok:
             self._propagate_poison()   # cross-shard dependents must fail
         return resp
@@ -112,28 +214,37 @@ class ShardedHub:
     def complete_steal(self, worker: str, done, n: int = 0,
                        affinity: Optional[int] = None):
         """The batched CompleteSteal verb generalized over shards: `done`
-        is [(task, ok, shard), ...] — completions are grouped per serving
-        shard and applied first, then the next steal is served.  Returns
+        is [(task, ok, shard), ...] — completions are grouped per home
+        shard, and the group homed on the steal-target shard rides the
+        steal frame itself (split per shard, merge with the steal), so
+        the common single-shard batch stays ONE per-shard round-trip.
+        Groups with failures are applied before the steal (their poison
+        must propagate before more work is handed out).  Returns
         (response, shard) like `steal`."""
         by_shard: dict[int, list] = {}
         any_failed = False
         for name, ok, shard in done:
             by_shard.setdefault(shard, []).append((name, ok))
             any_failed = any_failed or not ok
+        merged = None
+        if n > 0 and not any_failed and by_shard:
+            first = self._steal_order(affinity)[0]
+            if first in by_shard:
+                merged = (first, by_shard.pop(first))
         for shard, batch in by_shard.items():
-            self.shards[shard].handle(
-                CompleteSteal(worker=f"{worker}@{shard}", done=batch, n=0))
+            self._send(shard, CompleteSteal(worker=f"{worker}@{shard}",
+                                            done=batch, n=0))
         if any_failed:
             self._propagate_poison()   # cross-shard dependents must fail
         if n <= 0:
             return ExitResp(), -1
-        return self.steal(worker, n=n, affinity=affinity)
+        return self.steal(worker, n=n, affinity=affinity, merged=merged)
 
     def exit_worker(self, worker: str):
         """Node failure: recycle the worker's assignment on every shard
         (workers steal under per-shard aliases `worker@shard`)."""
-        for i, s in enumerate(self.shards):
-            s.handle(Exit(worker=f"{worker}@{i}"))
+        for i in range(len(self.shards)):
+            self._send(i, Exit(worker=f"{worker}@{i}"))
 
     def cancel(self, task: str) -> bool:
         """Cancel on the task's home shard (unleased + non-terminal only),
@@ -144,8 +255,7 @@ class ShardedHub:
             s = self.home.get(task)
         if s is None:
             return False
-        if not isinstance(self.shards[s].handle(Cancel(task=task)),
-                          ExitResp):
+        if not isinstance(self._send(s, Cancel(task=task)), ExitResp):
             return False
         self._propagate_poison()
         return True
@@ -158,7 +268,8 @@ class ShardedHub:
         (the dependent must never run once its dependency failed).
         Incremental: only names poisoned since the last call are
         examined (each shard's `_new_errors` worklist), looping until
-        the cascade across shards quiesces."""
+        the cascade across shards quiesces.  Control plane: reads shard
+        state in-process under the shard locks (not a wire verb)."""
         while True:
             metas = []
             for shard in self.shards:
@@ -196,6 +307,20 @@ class ShardedHub:
                     for t in names:
                         self.home.pop(t, None)
         return pruned
+
+    # one definition of the cross-shard aggregates, shared by every
+    # backend fronting this hub (in-process or behind the tree)
+    def user_errors(self) -> set:
+        """Failed USER tasks across shards — the `__proxy__`/`__notify__`
+        bookkeeping names are the hub's own, never surfaced."""
+        return {t for s in self.shards for t in s.errors
+                if not t.startswith("__")}
+
+    def ready_depth(self) -> int:
+        return sum(len(s.ready) for s in self.shards)
+
+    def requeued_total(self) -> int:
+        return sum(s.counters["requeued"] for s in self.shards)
 
     def stats(self) -> dict:
         per = [s.stats() for s in self.shards]

@@ -49,6 +49,15 @@ Tuning `transport=` / `steal_n` against the METG laws (core/metg.py):
     cross-shard dependencies pay a proxy/notify round-trip, so shard
     only DAGs whose cut between shards is small (hash routing makes the
     cut ~ (1 - 1/N) of edges — prefer wide, shallow graphs).
+  * `transport="tree", shards=N` COMPOSES the two levers (the paper's
+    Summit-scale shape): the top-level tree node routes the Table 2
+    verbs by task hash to per-shard servers (a ShardedHub behind the
+    tree), so the connection bound AND the single-server dispatch bound
+    fall together — `rpc_by_op` attributes relay levels as `hop:L<k>`
+    and the apex shard fan-out as `hop:L1:s<j>`.
+
+Rendered, example-driven versions of this guidance live in
+docs/tuning.md (and the layer map in docs/architecture.md).
 """
 from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
                                         ShardedBackend, TreeBackend)

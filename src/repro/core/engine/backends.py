@@ -53,6 +53,8 @@ def _steal_result(resp):
 class ServerBackend:
     """Engine backend over a single dwork `TaskServer` (paper §2.2)."""
 
+    n_shards = 1          # dispatch-rate multiplier for the METG laws
+
     def __init__(self, server: Optional[TaskServer] = None, *,
                  lease_timeout: Optional[float] = None, clock=None,
                  tracer=None):
@@ -66,6 +68,11 @@ class ServerBackend:
         tree sends it over the calling worker's forwarder connection)."""
         return self.server.handle(msg)
 
+    def _requeued_total(self) -> int:
+        """Requeue counter across the whole backing store (subclasses
+        with several servers sum them)."""
+        return self.server.counters["requeued"]
+
     def _call(self, op: str, msg):
         tracer = self.tracer
         if tracer is None or not tracer.sample_rpc():
@@ -78,7 +85,7 @@ class ServerBackend:
         return resp
 
     def _note_requeues(self, before: int):
-        n = self.server.counters["requeued"] - before
+        n = self._requeued_total() - before
         if n > 0 and self.tracer is not None:
             self.tracer.emit(REQUEUED, n=n, via="lease")
 
@@ -102,7 +109,7 @@ class ServerBackend:
                     n=len(tasks))
 
     def steal(self, worker: str, n: int = 1):
-        before = self.server.counters["requeued"]
+        before = self._requeued_total()
         resp = self._call("steal", Steal(worker=worker, n=n))
         self._note_requeues(before)
         return _steal_result(resp)
@@ -112,16 +119,16 @@ class ServerBackend:
 
     def complete_steal(self, worker: str, done, n: int = 0):
         """Batched completions + the next steal in ONE round-trip."""
-        before = self.server.counters["requeued"]
+        before = self._requeued_total()
         resp = self._call("complete_steal",
                           CompleteSteal(worker=worker, done=list(done), n=n))
         self._note_requeues(before)
         return _steal_result(resp) if n > 0 else EMPTY
 
     def exit_worker(self, worker: str):
-        before = self.server.counters["requeued"]
+        before = self._requeued_total()
         self._call("exit", Exit(worker=worker))
-        n = self.server.counters["requeued"] - before
+        n = self._requeued_total() - before
         if n > 0 and self.tracer is not None:
             self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
         return n
@@ -164,17 +171,19 @@ class ShardedBackend:
         self.tracer = tracer
         self._shard_of: dict[str, int] = {}   # stolen task -> serving shard
 
+    @property
+    def n_shards(self) -> int:
+        return len(self.hub.shards)
+
     def _sampled(self) -> bool:
         return self.tracer is not None and self.tracer.sample_rpc()
 
     def _emit_rpc(self, op: str, dt: float):
         self.tracer.emit(RPC, op=op, dt=dt)
 
-    @staticmethod
-    def _affinity(worker: str):
-        """Shard affinity from the engine's worker naming (w<i>)."""
-        tail = worker.rsplit("w", 1)[-1]
-        return int(tail) if tail.isdigit() else None
+    # shard affinity from the engine's worker naming (w<i>) — one
+    # definition, shared with the hub's own wire-boundary routing
+    _affinity = staticmethod(ShardedHub._affinity)
 
     def create(self, name: str, deps=(), meta=None):
         sampled = self._sampled()
@@ -249,9 +258,9 @@ class ShardedBackend:
         return out
 
     def exit_worker(self, worker: str):
-        before = sum(s.counters["requeued"] for s in self.hub.shards)
+        before = self.hub.requeued_total()
         self.hub.exit_worker(worker)
-        n = sum(s.counters["requeued"] for s in self.hub.shards) - before
+        n = self.hub.requeued_total() - before
         if n > 0 and self.tracer is not None:
             self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
         return n
@@ -268,11 +277,10 @@ class ShardedBackend:
         return self.hub.prune_terminal(keep=keep)
 
     def errors(self) -> set:
-        return {t for s in self.hub.shards for t in s.errors
-                if not t.startswith("__")}
+        return self.hub.user_errors()
 
     def ready_depth(self) -> int:
-        return sum(len(s.ready) for s in self.hub.shards)
+        return self.hub.ready_depth()
 
     def stats(self) -> dict:
         return self.hub.stats()
@@ -283,31 +291,75 @@ class ShardedBackend:
 
 class TreeBackend(ServerBackend):
     """ServerBackend whose workers reach the hub through a
-    message-forwarding tree (paper §4-§5): the TaskServer is hosted behind
-    a TCP frame server, `levels` layers of `Forwarder`s relay frames with
-    a shared pipelined upstream link per node, and each worker holds one
+    message-forwarding tree (paper §4-§5): the hub is hosted behind TCP
+    frame servers, `levels` layers of `Forwarder`s relay frames with a
+    shared pipelined upstream link per node, and each worker holds one
     connection to its leaf forwarder (`fanout` workers per leaf).
 
+    With `shards > 1` (or a caller-supplied `hub=`) the two scaling
+    levers COMPOSE (paper §6 item 4 behind §4): the top-level layer is
+    built from `ShardRouter`s instead of blind relays — each decodes the
+    frames the tree delivers and routes the Table-2 verbs by task hash
+    to per-shard TaskServers, each behind its own TCP frame server,
+    through the shared `ShardedHub` routing state (affinity steals,
+    cross-shard `__notify__` mediation, CompleteSteal split/merge).
+    Worker-less verbs (Create/Cancel) ride the boss link into a router,
+    so cross-shard dependency and poison traffic enters through the
+    same apex the workers use.
+
     Every worker-side call is timed end-to-end as an `rpc` event; each
-    forwarder hop additionally emits `op="hop:L<level>"` events, so
-    `OverheadReport.rpc_by_op` attributes where tree latency accrues.
+    forwarder hop additionally emits `op="hop:L<level>"` events, and
+    each per-shard round-trip behind a router emits
+    `op="hop:L1:s<shard>"`, so `OverheadReport.rpc_by_op` attributes
+    where tree latency accrues — per level, and per shard at the apex.
     """
 
     def __init__(self, server: Optional[TaskServer] = None, *,
                  workers: int = 1, fanout: int = 4, levels: int = 1,
+                 shards: int = 1, hub: Optional[ShardedHub] = None,
                  lease_timeout: Optional[float] = None, clock=None,
                  tracer=None):
         # lazy import: client.py is also imported by forwarder.py
         from repro.core.dwork.client import TCPServer, TCPTransport
 
         self.forwarders: list = []    # exists before the tracer setter runs
-        super().__init__(server=server, lease_timeout=lease_timeout,
-                         clock=clock, tracer=tracer)
+        self._shard_links = None
+        self._shard_tcp: list = []
+        n_shards = len(hub.shards) if hub is not None else max(int(shards), 1)
+        if hub is not None or n_shards > 1:
+            if server is not None:
+                raise ValueError("pass server= for a single hub OR "
+                                 "hub=/shards>1 for a sharded one, not both")
+            self.hub = hub or ShardedHub(n_shards,
+                                         lease_timeout=lease_timeout,
+                                         clock=clock)
+            self.server = None
+            self.tracer = tracer
+        else:
+            self.hub = None
+            super().__init__(server=server, lease_timeout=lease_timeout,
+                             clock=clock, tracer=tracer)
+        self.n_shards = n_shards
         self.fanout = max(int(fanout), 1)
         self.levels = max(int(levels), 1)
         self._TCPTransport = TCPTransport
-        self.tcp = TCPServer(("127.0.0.1", 0), self.server)
-        self.tcp.serve_background()
+        if self.hub is not None:
+            from repro.core.dwork.forwarder import ShardLinks
+
+            # one TCP frame server per shard: the per-shard verbs cross a
+            # real wire, so the hop:L1:s<j> fan-out timings are honest
+            self._shard_tcp = [TCPServer(("127.0.0.1", 0), s)
+                               for s in self.hub.shards]
+            for t in self._shard_tcp:
+                t.serve_background()
+            self._shard_links = ShardLinks(
+                [t.server_address for t in self._shard_tcp],
+                tracer=self.tracer)
+            self.hub.sender = self._shard_links
+            self.tcp = None
+        else:
+            self.tcp = TCPServer(("127.0.0.1", 0), self.server)
+            self.tcp.serve_background()
         self.forwarders = self._build_tree(max(int(workers), 1))
         self.leaves = self.forwarders[-1]
         self._conn: dict[str, object] = {}    # worker -> TCPTransport
@@ -316,8 +368,10 @@ class TreeBackend(ServerBackend):
 
     def _build_tree(self, workers: int):
         """Build `levels` forwarder layers bottom-up in size, top-down in
-        wiring: layer 1 feeds the hub, the leaf layer serves workers."""
-        from repro.core.dwork.forwarder import Forwarder
+        wiring: layer 1 feeds the hub, the leaf layer serves workers.
+        Sharded hub: the layer-1 nodes are `ShardRouter`s (hash routing
+        at the apex) sharing one hub + one set of per-shard links."""
+        from repro.core.dwork.forwarder import Forwarder, ShardRouter
 
         n_leaves = max(1, math.ceil(workers / self.fanout))
         sizes = [n_leaves]
@@ -325,15 +379,19 @@ class TreeBackend(ServerBackend):
             sizes.append(max(1, math.ceil(sizes[-1] / self.fanout)))
         sizes.reverse()                       # top (hub-facing) first
         layers = []
-        upstreams = [self.tcp.server_address]
+        upstreams = [self.tcp.server_address] if self.tcp is not None else []
         for level, size in enumerate(sizes, start=1):
             layer = []
             for i in range(size):
-                up = upstreams[i % len(upstreams)]
-                fwd = Forwarder(("127.0.0.1", 0), up, tracer=self.tracer,
-                                label=f"L{level}")
-                fwd.serve_background()
-                layer.append(fwd)
+                if level == 1 and self.hub is not None:
+                    node = ShardRouter(("127.0.0.1", 0), self.hub,
+                                       tracer=self.tracer, label=f"L{level}")
+                else:
+                    up = upstreams[i % len(upstreams)]
+                    node = Forwarder(("127.0.0.1", 0), up,
+                                     tracer=self.tracer, label=f"L{level}")
+                node.serve_background()
+                layer.append(node)
             upstreams = [f.server_address for f in layer]
             layers.append(layer)
         return layers
@@ -344,13 +402,22 @@ class TreeBackend(ServerBackend):
 
     @tracer.setter
     def tracer(self, tracer):
-        # the Forwarders capture the tracer at construction; a backend
-        # built without one (and patched later by Engine.__init__) must
-        # propagate it or every hop:L<k> event is silently lost
+        # the Forwarders (and the sharded hub's per-shard links) capture
+        # the tracer at construction; a backend built without one (and
+        # patched later by Engine.__init__) must propagate it or every
+        # hop:L<k>[:s<j>] event is silently lost
         self._tracer = tracer
         for layer in self.forwarders:
             for fwd in layer:
                 fwd.tracer = tracer
+        links = getattr(self, "_shard_links", None)
+        if links is not None:
+            links.tracer = tracer
+
+    def _requeued_total(self) -> int:
+        if self.hub is not None:
+            return self.hub.requeued_total()
+        return self.server.counters["requeued"]
 
     # --------------------------------------------------------- transports
     def _transport(self, worker: str):
@@ -365,11 +432,15 @@ class TreeBackend(ServerBackend):
     def _request(self, msg):
         """Route the shared protocol verbs over real sockets: worker
         messages go through the calling worker's forwarder connection,
-        worker-less ones (Create) over the boss link to the hub."""
+        worker-less ones (Create/Cancel) over the boss link — to the hub
+        direct, or into a top-level router when the hub is sharded (the
+        cross-shard `__notify__` fan-out rides the boss link's frames)."""
         worker = getattr(msg, "worker", None)
         if worker is None:
-            if self._boss is None:            # boss talks to the hub direct
-                self._boss = self._TCPTransport(*self.tcp.server_address)
+            if self._boss is None:
+                addr = (self.forwarders[0][0].server_address
+                        if self.hub is not None else self.tcp.server_address)
+                self._boss = self._TCPTransport(*addr)
             return self._boss.request(msg)
         return self._transport(worker).request(msg)
 
@@ -388,10 +459,27 @@ class TreeBackend(ServerBackend):
                         n=len(tasks))
 
     # ------------------------------------------------------ introspection
+    def prune_terminal(self, keep=()) -> int:
+        if self.hub is not None:
+            return self.hub.prune_terminal(keep=keep)
+        return super().prune_terminal(keep=keep)
+
+    def errors(self) -> set:
+        if self.hub is not None:
+            return self.hub.user_errors()
+        return super().errors()
+
+    def ready_depth(self) -> int:
+        if self.hub is not None:
+            return self.hub.ready_depth()
+        return super().ready_depth()
+
     def stats(self) -> dict:
-        stats = self.server.stats()
+        stats = self.hub.stats() if self.hub is not None \
+            else self.server.stats()
         stats["tree"] = {
             "levels": self.levels, "fanout": self.fanout,
+            "shards": self.n_shards,
             "forwarders": [len(layer) for layer in self.forwarders],
             "relayed": [sum(f.relayed for f in layer)
                         for layer in self.forwarders],
@@ -408,5 +496,16 @@ class TreeBackend(ServerBackend):
         for layer in reversed(self.forwarders):
             for fwd in layer:
                 fwd.close()
-        self.tcp.shutdown()
-        self.tcp.server_close()
+        if self._shard_links is not None:
+            # hand the hub back to in-process dispatch: a caller-supplied
+            # hub must stay usable after the tree is torn down (its verbs
+            # would otherwise hit the dead links forever)
+            if self.hub.sender is self._shard_links:
+                self.hub.sender = None
+            self._shard_links.close()
+        for t in self._shard_tcp:
+            t.shutdown()
+            t.server_close()
+        if self.tcp is not None:
+            self.tcp.shutdown()
+            self.tcp.server_close()

@@ -107,9 +107,6 @@ class Engine:
                  on_result: Optional[Callable] = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}")
-        if transport == "tree" and shards > 1:
-            raise ValueError("tree transport forwards to a single hub; "
-                             "use shards=1 (shard the hub behind it instead)")
         self.workers = max(int(workers), 0)
         self.capacity = capacity if capacity is not None else max(workers, 1)
         self.transport = transport
@@ -139,8 +136,11 @@ class Engine:
         self._owns_backend = backend is None
         if backend is None:
             if transport == "tree":
+                # shards > 1 composes both scaling levers: a ShardedHub
+                # behind the forwarding tree (hash routing at the apex)
                 backend = TreeBackend(workers=self.workers,
                                       fanout=tree_fanout, levels=tree_levels,
+                                      shards=shards,
                                       lease_timeout=lease_timeout,
                                       clock=clock, tracer=self.tracer)
             elif shards > 1:
@@ -153,6 +153,10 @@ class Engine:
         elif getattr(backend, "tracer", None) is None:
             backend.tracer = self.tracer
         self.backend = backend
+        # the dispatch-rate multiplier the METG retunes see (serving
+        # batch targets, elastic steal_n): authoritative from the
+        # backend, so a caller-supplied hub/backend is counted too
+        self.shards = getattr(backend, "n_shards", max(int(shards), 1))
         # long enough for a heartbeat lease to expire while idling
         if max_idle_rounds is None:
             max_idle_rounds = 500

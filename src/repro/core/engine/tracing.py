@@ -157,6 +157,10 @@ class LatencyReport:
     queue_depth_mean: float = 0.0    # sampled at every enqueue + dispatch
     queue_depth_max: int = 0
     batch_wait_mean_s: float = 0.0   # oldest request's age at coalesce time
+    # windowed snapshots (Frontend.snapshot) stamp their window here;
+    # whole-trace reports leave both at 0
+    t_s: float = 0.0                 # snapshot time on the trace clock
+    window_s: float = 0.0            # span the snapshot covers
 
     @classmethod
     def from_trace(cls, trace: "TraceRecorder") -> "LatencyReport":
@@ -214,6 +218,9 @@ class LatencyReport:
             "queue_depth_mean": round(self.queue_depth_mean, 2),
             "queue_depth_max": self.queue_depth_max,
             "batch_wait_mean_ms": round(self.batch_wait_mean_s * 1e3, 3),
+            **({"t_s": round(self.t_s, 3),
+                "window_s": round(self.window_s, 3)}
+               if self.window_s else {}),
         }
 
 

@@ -106,11 +106,17 @@ def efficiency(task_time: float, metg: float) -> float:
 
 
 def pick_batch_size(scheduler: str, ranks: int, per_task_s: float,
-                    target_eff: float = 0.9, model: METGModel = None) -> int:
+                    target_eff: float = 0.9, model: METGModel = None,
+                    shards: int = 1) -> int:
     """METG-aware batching (framework feature): how many requests/steps to
-    bundle per task so scheduling overhead stays below (1-target_eff)."""
+    bundle per task so scheduling overhead stays below (1-target_eff).
+    `shards` divides dwork's dispatch bound (a sharded hub — alone or
+    behind the forwarding tree — multiplies dispatch rate), so a sharded
+    deployment needs proportionally smaller batches for the same
+    efficiency target; the other scheduler laws ignore it."""
     m = model or METGModel.from_paper()
-    overhead = m.metg(scheduler, ranks)
+    kw = {"shards": max(int(shards), 1)} if scheduler == "dwork" else {}
+    overhead = m.metg(scheduler, ranks, **kw)
     # t*n / (t*n + overhead) >= eff  =>  n >= overhead*eff / (t*(1-eff))
     n = overhead * target_eff / (per_task_s * (1.0 - target_eff))
     return max(1, math.ceil(n))

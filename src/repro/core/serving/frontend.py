@@ -6,6 +6,14 @@ engine tasks sized by the METG granularity laws (adapting to the live
 worker count and observed per-request time), and a max-wait deadline so
 tail latency is bounded even when traffic trickles.  See the package
 docstring for the tuning guidance.
+
+Monitoring (`snapshot()` / `start_snapshots(interval_s)`): the frontend
+keeps a small windowed accumulator of per-request latencies and queue
+depths, independent of the engine trace, so a long-lived resident
+service can emit periodic `LatencyReport`s (p50/p95/p99 for the window
+since the previous snapshot) with bounded state — no trace scan, no
+trace retention requirement.  Snapshots land in the bounded
+`Frontend.snapshots` deque and optionally a callback.
 """
 from __future__ import annotations
 
@@ -15,6 +23,7 @@ from typing import Callable, Optional
 
 from repro.core.engine.model import (BATCH_FORMED, REQ_DONE, REQ_ENQUEUED,
                                      REQ_REJECTED, WorkerCrash, next_seq)
+from repro.core.engine.tracing import LatencyReport, percentile
 from repro.core.metg import METGModel, pick_batch_size
 
 
@@ -80,7 +89,10 @@ class Frontend:
                  max_queue: int = 256, max_batch: int = 64,
                  max_wait_s: float = 0.005, target_eff: float = 0.9,
                  per_request_s0: float = 1e-3, scheduler: str = "dwork",
-                 model: Optional[METGModel] = None, policy: str = "block"):
+                 model: Optional[METGModel] = None, policy: str = "block",
+                 snapshot_interval_s: Optional[float] = None,
+                 snapshot_keep: int = 120,
+                 on_snapshot: Optional[Callable] = None):
         if policy not in ("block", "reject"):
             raise ValueError(f"unknown backpressure policy {policy!r}")
         if not engine.resident:
@@ -104,6 +116,28 @@ class Frontend:
         self.rejected = 0
         self.batches = 0
         self._thread: Optional[threading.Thread] = None
+        # ---------------------------------------- monitoring snapshots
+        # windowed accumulator, reset on every snapshot(): bounded by the
+        # traffic of one window, never by service lifetime.  Accumulation
+        # only runs while monitoring is ARMED (ctor interval,
+        # start_snapshots(), or a priming snapshot() call) — a frontend
+        # nobody ever snapshots must not grow these lists forever.
+        self._monitoring = snapshot_interval_s is not None
+        self.snapshot_interval_s = snapshot_interval_s
+        self.on_snapshot = on_snapshot
+        self.snapshots: deque[LatencyReport] = deque(
+            maxlen=max(int(snapshot_keep), 1))
+        self._snap_lock = threading.Lock()
+        self._snap_t0 = engine.tracer.clock()
+        self._w_lats: list[float] = []
+        self._w_failed = 0
+        self._w_rejected = 0
+        self._w_batches = 0
+        self._w_batched = 0
+        self._w_wait_s = 0.0
+        self._w_depths: list[int] = []
+        self._snap_stop = threading.Event()
+        self._snap_thread: Optional[threading.Thread] = None
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> "Frontend":
@@ -117,6 +151,8 @@ class Frontend:
         self._thread = threading.Thread(target=self._coalesce_loop,
                                         name="serving-frontend", daemon=True)
         self._thread.start()
+        if self.snapshot_interval_s is not None:
+            self.start_snapshots(self.snapshot_interval_s)
         return self
 
     def close(self, *, drain: bool = True,
@@ -124,15 +160,21 @@ class Frontend:
         """Stop admitting, flush the queue as final batches, and (with
         `drain=True`) wait for every dispatched batch to finish.  Does NOT
         shut the engine down — that is the engine owner's call."""
+        monitoring = self._monitoring
+        self.stop_snapshots(final=False)
         with self._cond:
             self._closing = True
             self._cond.notify_all()
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if drain:
-            return self.engine.drain(timeout)
-        return True
+        ok = self.engine.drain(timeout) if drain else True
+        if monitoring:
+            # the tail window: requests that resolved during the flush +
+            # drain above must reach the monitor too, so the final
+            # snapshot is taken AFTER the drain, not before it
+            self.snapshot()
+        return ok
 
     # ------------------------------------------------------------- client
     def submit(self, payload, *, meta: Optional[dict] = None,
@@ -154,6 +196,9 @@ class Frontend:
                     self.rejected += 1
                     tracer.emit(REQ_REJECTED, depth=len(self._queue),
                                 policy=self.policy)
+                    if self._monitoring:
+                        with self._snap_lock:
+                            self._w_rejected += 1
                     raise AdmissionFull(
                         f"admission queue full ({self.max_queue})")
             # next_seq(): engine task names are single-use forever, so
@@ -163,9 +208,12 @@ class Frontend:
                                t_enqueue=tracer.clock())
             self._queue.append(req)
             self.accepted += 1
-            tracer.emit(REQ_ENQUEUED, task=req.name,
-                        depth=len(self._queue))
+            depth = len(self._queue)
+            tracer.emit(REQ_ENQUEUED, task=req.name, depth=depth)
             self._cond.notify_all()
+        if self._monitoring:
+            with self._snap_lock:
+                self._w_depths.append(depth)
         return req
 
     def flush(self):
@@ -179,10 +227,13 @@ class Frontend:
     def target_batch(self) -> int:
         """Current METG-aware batch target: the granularity at which
         scheduling overhead stays under (1 - target_eff) of compute, for
-        the LIVE worker count and the observed per-request time."""
+        the LIVE worker count, the observed per-request time, and the
+        engine's shard count (a sharded hub — alone or behind the tree —
+        divides the dispatch bound, so batches can shrink)."""
         live = max(self.engine.live_workers(), 1)
         n = pick_batch_size(self.scheduler, live, self._per_req_s,
-                            target_eff=self.target_eff, model=self.model)
+                            target_eff=self.target_eff, model=self.model,
+                            shards=getattr(self.engine, "shards", 1))
         return max(1, min(n, self.max_batch))
 
     def _coalesce_loop(self):
@@ -230,9 +281,16 @@ class Frontend:
         self.batches += 1
         name = f"__batch{next_seq()}"
         now = tracer.clock()
+        wait_s = now - batch[0].t_enqueue
         tracer.emit(BATCH_FORMED, task=name, size=len(batch),
-                    wait_s=now - batch[0].t_enqueue,
-                    target=self.target_batch(), depth=depth_after)
+                    wait_s=wait_s, target=self.target_batch(),
+                    depth=depth_after)
+        if self._monitoring:
+            with self._snap_lock:
+                self._w_batches += 1
+                self._w_batched += len(batch)
+                self._w_wait_s += wait_s
+                self._w_depths.append(depth_after)
         reqs = tuple(batch)
         self.engine.submit(name, fn=lambda: self._run_batch(reqs))
 
@@ -269,9 +327,98 @@ class Frontend:
         req.ok = ok
         req.error = error
         req.t_done = tracer.clock()
+        latency_s = req.t_done - req.t_enqueue
         tracer.emit(REQ_DONE, task=req.name, worker=None,
-                    latency_s=req.t_done - req.t_enqueue, ok=ok)
+                    latency_s=latency_s, ok=ok)
+        if self._monitoring:
+            with self._snap_lock:
+                self._w_lats.append(latency_s)
+                if not ok:
+                    self._w_failed += 1
         req._event.set()
+
+    # ---------------------------------------------------------- snapshots
+    def snapshot(self) -> LatencyReport:
+        """One windowed `LatencyReport` covering the requests resolved
+        since the previous snapshot (or since monitoring was armed),
+        appended to the bounded `self.snapshots` deque.  State is bounded
+        by one window's traffic, not service lifetime — monitoring for
+        long-lived resident services that run with `max_trace_events=`
+        ring buffers (or no trace retention at all).
+
+        Monitoring arms on the ctor's `snapshot_interval_s`, on
+        `start_snapshots()`, or on the FIRST call here — that priming
+        call returns an empty window (nothing was accumulating before),
+        and every later window is complete."""
+        clock = self.engine.tracer.clock
+        self._monitoring = True
+        with self._snap_lock:
+            lats = self._w_lats
+            depths = self._w_depths
+            n_failed, self._w_failed = self._w_failed, 0
+            n_rejected, self._w_rejected = self._w_rejected, 0
+            n_batches, self._w_batches = self._w_batches, 0
+            batched, self._w_batched = self._w_batched, 0
+            wait_s, self._w_wait_s = self._w_wait_s, 0.0
+            self._w_lats = []
+            self._w_depths = []
+            t1 = clock()
+            t0, self._snap_t0 = self._snap_t0, t1
+        lats.sort()
+        rep = LatencyReport(
+            n_requests=len(lats),
+            n_failed=n_failed,
+            n_rejected=n_rejected,
+            n_batches=n_batches,
+            mean_batch=(batched / n_batches) if n_batches else 0.0,
+            mean_s=(sum(lats) / len(lats)) if lats else 0.0,
+            p50_s=percentile(lats, 0.50),
+            p95_s=percentile(lats, 0.95),
+            p99_s=percentile(lats, 0.99),
+            max_s=lats[-1] if lats else 0.0,
+            queue_depth_mean=(sum(depths) / len(depths)) if depths else 0.0,
+            queue_depth_max=max(depths, default=0),
+            batch_wait_mean_s=(wait_s / n_batches) if n_batches else 0.0,
+            t_s=t1,
+            window_s=max(t1 - t0, 0.0),
+        )
+        self.snapshots.append(rep)
+        if self.on_snapshot is not None:
+            try:
+                self.on_snapshot(rep)
+            except Exception:    # noqa: BLE001 — monitoring must never
+                pass             # take the serving path down
+        return rep
+
+    def start_snapshots(self, interval_s: float) -> "Frontend":
+        """Spawn the periodic monitor: every `interval_s` a windowed
+        snapshot() lands in `self.snapshots` (and `on_snapshot`, if
+        set).  Idempotent; stopped by `stop_snapshots()` / `close()`."""
+        if self._snap_thread is not None:
+            return self
+        self._monitoring = True
+        self.snapshot_interval_s = interval_s
+        self._snap_stop.clear()
+
+        def _loop():
+            while not self._snap_stop.wait(self.snapshot_interval_s):
+                self.snapshot()
+
+        self._snap_thread = threading.Thread(
+            target=_loop, name="serving-snapshots", daemon=True)
+        self._snap_thread.start()
+        return self
+
+    def stop_snapshots(self, *, final: bool = True):
+        """Stop the periodic monitor; with `final=True` (default) take
+        one last snapshot so the tail window is not lost."""
+        th, self._snap_thread = self._snap_thread, None
+        if th is None:
+            return
+        self._snap_stop.set()
+        th.join()
+        if final:
+            self.snapshot()
 
     # ---------------------------------------------------------------- obs
     def stats(self) -> dict:

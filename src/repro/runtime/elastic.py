@@ -58,8 +58,11 @@ class ElasticPool:
         return self.client.submit_task(name, deps=deps, meta=meta)
 
     def steal_n_for(self, n_workers: int) -> int:
+        # shards divide dwork's dispatch bound, so a sharded hub (alone
+        # or behind the forwarding tree) needs proportionally less
+        # batching at the same worker count
         return pick_batch_size("dwork", max(n_workers, 1), self.per_task_s,
-                               model=self.metg)
+                               model=self.metg, shards=self.engine.shards)
 
     def _retune(self):
         """Membership changed: re-derive the METG batch size for the live

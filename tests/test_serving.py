@@ -400,3 +400,88 @@ def test_concurrent_submitters_thread_safe():
     rep = eng.shutdown()
     assert all(out.values())
     assert rep.overhead().requests.n_requests == 200
+
+
+# -------------------------------------------------- monitoring snapshots
+
+
+def test_frontend_snapshot_windows_are_disjoint_and_complete():
+    """snapshot() covers exactly the requests resolved since the previous
+    snapshot: windows never overlap, never drop, and reset to empty."""
+    eng = Engine(workers=2, resident=True, steal_n=2)
+    fe = _echo_frontend(eng, max_wait_s=0.002, per_request_s0=2e-6)
+    fe.start()
+    assert fe.snapshot().n_requests == 0         # priming call arms
+    reqs = [fe.submit(i) for i in range(40)]
+    fe.flush()
+    for r in reqs:
+        assert r.wait(30)
+    s1 = fe.snapshot()
+    assert s1.n_requests == 40
+    assert 0.0 < s1.p50_s <= s1.p99_s <= s1.max_s
+    assert s1.n_batches >= 1 and s1.window_s > 0.0
+    more = [fe.submit(i) for i in range(10)]
+    fe.flush()
+    for r in more:
+        assert r.wait(30)
+    s2 = fe.snapshot()
+    assert s2.n_requests == 10                   # only the new window
+    assert s2.t_s >= s1.t_s
+    assert fe.snapshot().n_requests == 0         # empty window is valid
+    assert [s.n_requests for s in fe.snapshots] == [0, 40, 10, 0]
+    assert "window_s" in s1.summary()
+    fe.close()
+    eng.shutdown()
+
+
+def test_frontend_periodic_snapshots_bounded_and_callback():
+    seen = []
+    eng = Engine(workers=2, resident=True, steal_n=2)
+    fe = _echo_frontend(eng, max_wait_s=0.001, per_request_s0=2e-6,
+                        snapshot_interval_s=0.02, snapshot_keep=4,
+                        on_snapshot=seen.append)
+    fe.start()
+    reqs = [fe.submit(i) for i in range(30)]
+    fe.flush()
+    for r in reqs:
+        assert r.wait(30)
+    deadline = time.time() + 10
+    while len(seen) < 5 and time.time() < deadline:
+        time.sleep(0.01)
+    fe.close()                                   # stops the monitor too
+    eng.shutdown()
+    assert len(seen) >= 5                        # periodic firing
+    assert len(fe.snapshots) <= 4                # bounded deque
+    assert sum(s.n_requests for s in seen) == 30 # windows partition traffic
+    assert all(s.window_s >= 0.0 for s in seen)
+
+
+def test_frontend_snapshot_counts_rejections_in_window():
+    eng = Engine(workers=1, resident=True)
+    fe = _echo_frontend(eng, max_queue=2, policy="reject", max_wait_s=10.0)
+    fe.start()
+    fe.snapshot()                                # arm monitoring
+    fe.submit(1)
+    fe.submit(2)
+    with pytest.raises(AdmissionFull):
+        fe.submit(3)
+    snap = fe.snapshot()
+    assert snap.n_rejected == 1
+    assert fe.snapshot().n_rejected == 0         # window reset
+    fe.flush()
+    fe.close()
+    eng.shutdown()
+
+
+def test_frontend_close_snapshot_covers_drain_tail():
+    """Requests that only resolve during close()'s flush+drain must still
+    reach the monitor: the final snapshot is taken AFTER the drain."""
+    eng = Engine(workers=2, resident=True, steal_n=2)
+    fe = _echo_frontend(eng, max_wait_s=5.0)     # nothing ships until close
+    fe.start()
+    fe.start_snapshots(60.0)                     # will never fire on its own
+    reqs = [fe.submit(i) for i in range(12)]
+    fe.close()                                   # flush + drain + snapshot
+    eng.shutdown()
+    assert all(r.done for r in reqs)
+    assert sum(s.n_requests for s in fe.snapshots) == 12

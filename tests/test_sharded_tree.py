@@ -1,0 +1,360 @@
+"""Sharded hub BEHIND the forwarding tree (paper §6 item 4 composed with
+§4): the top-level tree node routes the Table-2 verbs by task hash to
+per-shard TaskServers.  Covers the full engine lifecycle suite over
+`transport="tree", shards>1` — seeded worker kills (announced + silent),
+stragglers, cross-shard poison through the relay, CompleteSteal
+split/merge when the finished-batch and steal-target shards differ,
+pruning under the tree, and the futures client riding the composed
+configuration."""
+import pytest
+
+from repro.core.dwork import run_pool
+from repro.core.dwork.api import CompleteSteal, ExitResp, Steal, TaskMsg
+from repro.core.dwork.sharded import ShardedHub
+from repro.core.engine import (COMPLETED, RPC, STOLEN, Engine, FaultPlan,
+                               ManualClock)
+
+
+def flat_tree_engine(n, *, workers=4, shards=4, steal_n=4, **kw):
+    eng = Engine(workers=workers, transport="tree", shards=shards,
+                 steal_n=steal_n, **kw)
+    for i in range(n):
+        eng.submit(f"t{i}", fn=lambda: None)
+    return eng
+
+
+def name_on_shard(hub, shard, prefix):
+    """Probe names until one hashes to `shard` (str hashing is seeded per
+    process, so shard homes are discovered at runtime, not assumed)."""
+    return next(f"{prefix}{i}" for i in range(1000)
+                if hub._shard_of(f"{prefix}{i}") == shard)
+
+
+# ------------------------------------------------------------ lifecycle
+
+
+def test_sharded_tree_dag_execution_values():
+    eng = Engine(workers=2, transport="tree", shards=2, steal_n=2)
+    eng.submit("a", fn=lambda: 1)
+    eng.submit("b", fn=lambda: 2, deps=["a"])
+    eng.submit("c", fn=lambda: 3, deps=["a", "b"])
+    rep = eng.run()
+    assert rep.completed == {"a", "b", "c"} and not rep.stalled
+    assert rep.results["c"].value == 3
+
+
+def test_sharded_tree_all_shards_served():
+    rep = flat_tree_engine(200).run()
+    assert len(rep.completed) == 200 and not rep.stalled
+    assert rep.backend_stats["tree"]["shards"] == 4
+    per_shard = rep.backend_stats["shards"]
+    assert len(per_shard) == 4
+    # hash routing + affinity stealing actually spread the load
+    assert all(s["completed"] > 0 for s in per_shard)
+    assert sum(s["completed"] for s in per_shard) >= 200
+
+
+def test_sharded_tree_hop_attribution_per_shard_not_double_counted():
+    rep = flat_tree_engine(100, shards=2, workers=4).run()
+    ov = rep.overhead()
+    assert "hop:L1:s0" in ov.rpc_by_op and "hop:L1:s1" in ov.rpc_by_op
+    # per-shard hops are attribution-only: excluded from the end-to-end
+    # rpc totals exactly like plain forwarder hops
+    hop_n = sum(c for op, (c, _t) in ov.rpc_by_op.items()
+                if op.startswith("hop:"))
+    total_n = sum(c for c, _t in ov.rpc_by_op.values())
+    assert ov.n_rpc == total_n - hop_n
+    assert hop_n > 0
+
+
+def test_two_level_sharded_tree_routes_at_the_apex():
+    """Leaf forwarders blind-relay, the level-1 routers hash-route: both
+    hop flavors appear, and the composed run completes."""
+    eng = flat_tree_engine(60, workers=8, shards=2, tree_fanout=2,
+                           tree_levels=2)
+    rep = eng.run()
+    assert len(rep.completed) == 60 and not rep.stalled
+    assert rep.backend_stats["tree"]["forwarders"] == [2, 4]
+    ops = set(rep.overhead().rpc_by_op)
+    assert "hop:L2" in ops                       # leaf relays
+    assert {"hop:L1:s0", "hop:L1:s1"} <= ops     # apex shard fan-out
+    assert "hop:L1" not in ops                   # routers replace blind L1
+
+
+def test_sharded_tree_trace_counts_conserved():
+    rep = flat_tree_engine(80, shards=2, workers=2, steal_n=2).run()
+    tr = rep.trace
+    assert tr.count(COMPLETED) == 80
+    assert tr.count(STOLEN) >= 80
+    assert tr.count(RPC) > 0
+
+
+# ------------------------------------------------------------ fault paths
+
+
+def test_sharded_tree_announced_kill_zero_lost_tasks():
+    faults = FaultPlan(seed=7).kill_worker("w1", after_steals=4)
+    eng = flat_tree_engine(120, workers=3, shards=4, faults=faults)
+    rep = eng.run()
+    assert not rep.stalled
+    assert len(rep.completed) == 120             # zero lost tasks
+    assert rep.overhead().n_requeued >= 1
+    assert rep.backend_stats["completed"] >= 120
+    # nothing stuck leased on ANY shard after the recovery
+    assert all(s["assigned"] == 0 for s in rep.backend_stats["shards"])
+
+
+def test_sharded_tree_kill_mid_complete_steal_split_shards():
+    """Worker death while its finished batch and its steal target sit on
+    DIFFERENT shards: with affinity stealing a worker drains its home
+    shard, then its next CompleteSteal carries home-shard completions
+    while the steal is served by another shard (the split/merge path).
+    The kill must still lose zero tasks and leave no stale leases."""
+    faults = FaultPlan(seed=11).kill_worker("w0", after_steals=8)
+    eng = flat_tree_engine(80, workers=2, shards=2, steal_n=4,
+                           faults=faults)
+    rep = eng.run()
+    assert not rep.stalled
+    assert len(rep.completed) == 80
+    assert rep.overhead().n_requeued >= 1
+    assert all(s["assigned"] == 0 for s in rep.backend_stats["shards"])
+    # both shards actually saw traffic through the router
+    ov = rep.overhead()
+    assert "hop:L1:s0" in ov.rpc_by_op and "hop:L1:s1" in ov.rpc_by_op
+
+
+def test_sharded_tree_silent_death_recovered_by_lease():
+    clk = ManualClock(tick=1e-3)
+    faults = FaultPlan(seed=3).kill_worker("w1", after_steals=2, silent=True)
+    eng = Engine(workers=2, transport="tree", shards=2, steal_n=2,
+                 clock=clk, lease_timeout=0.05, faults=faults)
+    for i in range(20):
+        eng.submit(f"x{i}", fn=lambda: None)
+    rep = eng.run()
+    assert len(rep.completed) == 20 and not rep.stalled
+    assert rep.overhead().n_requeued >= 1
+
+
+def test_sharded_tree_straggler_jitter_recorded():
+    faults = FaultPlan(seed=11).stragglers(1e-3)
+    eng = Engine(workers=2, transport="tree", shards=2, steal_n=2,
+                 faults=faults)
+    for i in range(16):
+        eng.submit(f"j{i}", fn=lambda: None)
+    rep = eng.run()
+    assert len(rep.completed) == 16
+    assert rep.overhead().virtual_s != 0.0
+
+
+def test_sharded_tree_cross_shard_poison_through_relay():
+    """A producer failing on its home shard must poison a dependent homed
+    on ANOTHER shard even though every verb crossed the relay: the
+    poisoned `__notify__` can never Release the dependent's held proxy,
+    so the hub's propagation must fail the proxy (and the dependent)
+    instead of letting them dangle."""
+    hub = ShardedHub(2)
+    prod = name_on_shard(hub, 0, "prod")
+    dep = name_on_shard(hub, 1, "dep")
+    hub.create(prod)
+    hub.create(dep, deps=[prod])
+    hub.create(name_on_shard(hub, 1, "bystander"))
+    rep = run_pool(hub, lambda name, meta: name != prod,
+                   workers=2, steal_n=2, transport="tree", tree_fanout=2)
+    assert not rep.stalled
+    assert prod in rep.errors and dep in rep.errors
+    assert len(rep.completed) == 1               # the bystander ran
+    # the held proxy reached a terminal state too — nothing dangles
+    assert all(len(s.ready) == 0 for s in hub.shards)
+
+
+def test_sharded_tree_cancel_rides_the_boss_link():
+    """Cancel is worker-less, so it crosses the boss link into a router:
+    an unleased dep-waiting task is withdrawn on its home shard and its
+    cross-shard dependents are poisoned."""
+    eng = Engine(workers=2, transport="tree", shards=2, steal_n=2)
+    eng.submit("root", fn=lambda: None)
+    eng.submit("victim", fn=lambda: None, deps=["root"])
+    eng.submit("heir", fn=lambda: None, deps=["victim"])
+    assert eng.cancel("victim") is True          # unleased: dep-waiting
+    rep = eng.run()
+    assert not rep.stalled
+    assert rep.completed == {"root"}
+    assert "victim" in rep.errors and "heir" in rep.errors
+
+
+def test_sharded_tree_prune_under_the_tree():
+    """prune_terminal reaches every shard behind the tree (home-map
+    cleanup included) and the session keeps working afterwards."""
+    from repro.client import Client
+
+    with Client(scheduler="dwork", workers=2, transport="tree",
+                shards=2) as c:
+        xs = c.gather([c.submit(lambda v: v + 1, i) for i in range(30)])
+        assert xs == [i + 1 for i in range(30)]
+        hub = c.engine.backend.hub
+        before = sum(len(s.joins) for s in hub.shards)
+        assert c.prune() > 0
+        assert sum(len(s.joins) for s in hub.shards) < before
+        assert len(hub.home) < before            # home map pruned too
+        # single-use names: new work is unaffected by the prune
+        assert c.submit(lambda: 99).result(timeout=30) == 99
+
+
+# ------------------------------------------ CompleteSteal split/merge unit
+
+
+def recording_hub(n_shards=2):
+    hub = ShardedHub(n_shards)
+    sent = []
+
+    def sender(shard, msg):
+        sent.append((shard, msg))
+        return hub.shards[shard].handle(msg)
+
+    hub.sender = sender
+    return hub, sent
+
+
+def test_complete_steal_merges_target_shard_batch_onto_steal_frame():
+    """Completions homed on the steal-target shard ride the SAME
+    CompleteSteal frame as the steal (one per-shard round-trip)."""
+    hub, sent = recording_hub(2)
+    a = name_on_shard(hub, 0, "a")
+    b = name_on_shard(hub, 0, "b")
+    hub.create(a)
+    hub.create(b)
+    r, shard = hub.steal("w0", n=1, affinity=0)
+    assert isinstance(r, TaskMsg) and shard == 0
+    sent.clear()
+    r, shard = hub.complete_steal("w0", [(a, True, 0)], n=1, affinity=0)
+    assert isinstance(r, TaskMsg) and [t for t, _ in r.tasks] == [b]
+    merged = [(s, m) for s, m in sent if isinstance(m, CompleteSteal)]
+    assert len(merged) == 1 and merged[0][0] == 0
+    assert merged[0][1].done == [(a, True)] and merged[0][1].n == 1
+    # no separate complete-only frame was sent anywhere
+    assert not any(isinstance(m, CompleteSteal) and m.n == 0
+                   for _s, m in sent)
+
+
+def test_complete_steal_splits_batches_across_differing_shards():
+    """Finished batch homed on shard 0, steal served by shard 1 (shard 0
+    exhausted): the verb is SPLIT — a complete-only CompleteSteal to the
+    home shard, the steal probing on to the other shard."""
+    hub, sent = recording_hub(2)
+    a = name_on_shard(hub, 0, "a")
+    c = name_on_shard(hub, 1, "c")
+    hub.create(a)
+    hub.create(c)
+    r, shard = hub.steal("w0", n=1, affinity=0)
+    assert isinstance(r, TaskMsg) and shard == 0     # a, from shard 0
+    sent.clear()
+    r, shard = hub.complete_steal("w0", [(a, True, 0)], n=1, affinity=0)
+    assert isinstance(r, TaskMsg) and shard == 1     # c, from shard 1
+    # shard 0 got the merged frame (completions + steal attempt),
+    # shard 1 served the steal itself: split across shards, and the
+    # home-shard completions were applied before the cross-shard steal
+    frames = [(s, type(m).__name__) for s, m in sent]
+    assert frames[0] == (0, "CompleteSteal")
+    assert (1, "Steal") in frames
+    assert a in hub.shards[0].completed
+
+
+def test_complete_steal_with_failures_applies_before_steal_and_poisons():
+    """A failed completion never merges onto the steal frame: it is
+    applied (and its cross-shard poison propagated) BEFORE more work is
+    handed out."""
+    hub, sent = recording_hub(2)
+    prod = name_on_shard(hub, 0, "p")
+    dep = name_on_shard(hub, 1, "d")
+    hub.create(prod)
+    hub.create(dep, deps=[prod])
+    r, shard = hub.steal("w0", n=1, affinity=0)
+    assert isinstance(r, TaskMsg) and shard == 0
+    sent.clear()
+    r, _shard = hub.complete_steal("w0", [(prod, False, 0)], n=1,
+                                   affinity=0)
+    assert isinstance(r, ExitResp)                   # everything terminal
+    first = sent[0]
+    assert first[0] == 0 and isinstance(first[1], CompleteSteal)
+    assert first[1].n == 0                           # complete-only split
+    assert prod in hub.shards[0].errors
+    assert dep in hub.shards[1].errors               # poison crossed shards
+
+
+def test_wire_handle_round_trips_the_relay_encoding():
+    """`ShardedHub.handle` accepts the verbs exactly as a router decodes
+    them from the wire — including msgpack's tuples->lists mangling."""
+    from repro.core.dwork.api import decode, encode
+
+    hub = ShardedHub(2)
+    a = name_on_shard(hub, 0, "a")
+    b = name_on_shard(hub, 1, "b")
+    hub.create(a)
+    hub.create(b, deps=[a])                          # cross-shard dep
+    resp = hub.handle(decode(encode(Steal(worker="w0", n=2))))
+    assert isinstance(resp, TaskMsg)
+    got = [t for t, _m in resp.tasks]
+    assert got == [a]                                # b still dep-waiting
+    msg = decode(encode(CompleteSteal(worker="w0", done=[(a, True)], n=2)))
+    resp = hub.handle(msg)
+    assert isinstance(resp, TaskMsg)
+    assert [t for t, _m in resp.tasks] == [b]        # released via notify
+    assert isinstance(hub.handle(CompleteSteal(worker="w0",
+                                               done=[(b, True)], n=0)),
+                      ExitResp)
+    assert hub.handle(Steal(worker="w0", n=1)).__class__ is ExitResp
+
+
+# --------------------------------------------------------- futures client
+
+
+def test_client_futures_chain_across_kill_on_sharded_tree():
+    """The futures front door over the composed configuration: a chain of
+    dependent futures survives a seeded worker kill with exactly-once
+    resolution."""
+    from repro.client import Client
+
+    faults = FaultPlan(seed=9).kill_worker("w1", after_steals=6)
+    resolved = []
+    with Client(scheduler="dwork", workers=3, transport="tree", shards=4,
+                faults=faults) as c:
+        fs = [c.submit(lambda x: x * x, i) for i in range(40)]
+        head = c.submit(lambda: 1)
+        chain = head
+        for _ in range(5):
+            chain = c.submit(lambda v: v + 1, chain)
+        for f in fs:
+            f.add_done_callback(lambda f: resolved.append(f.name))
+        assert c.gather(fs) == [i * i for i in range(40)]
+        assert chain.result(timeout=60) == 6
+    assert sorted(resolved) == sorted({f.name for f in fs})   # exactly once
+
+
+def test_run_pool_sharded_hub_tree_matches_inproc_results():
+    hub = ShardedHub(2)
+    for i in range(50):
+        hub.create(f"t{i}", meta={"x": i})
+    rep = run_pool(hub, lambda name, meta: (True, meta["x"] * 2),
+                   workers=4, steal_n=4, transport="tree", tree_fanout=2)
+    assert len(rep.completed) == 50 and not rep.stalled
+    assert all(rep.results[f"t{i}"].value == 2 * i for i in range(50))
+    assert rep.backend_stats["tree"]["shards"] == 2
+    assert any(op.startswith("hop:L1:s")
+               for op in rep.overhead().rpc_by_op)
+    # the tree hands the hub back on teardown: a caller-supplied hub
+    # stays usable in-process (sender reset, not left on dead links)
+    assert hub.sender is None
+    hub.create("after_tree")
+    r, _shard = hub.steal("w0", n=1)
+    assert [t for t, _m in r.tasks] == ["after_tree"]
+
+
+def test_engine_shards_attribute_reflects_backend():
+    eng = Engine(workers=2, transport="tree", shards=3)
+    try:
+        assert eng.shards == 3
+        assert eng.backend.n_shards == 3
+    finally:
+        eng.backend.close()
+    eng = Engine(workers=2, transport="inproc")
+    assert eng.shards == 1
