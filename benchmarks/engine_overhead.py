@@ -24,13 +24,18 @@ import time
 from pathlib import Path
 
 from repro.core.dwork import Client, InProcTransport, TaskServer, run_pool
-from repro.core.engine import crosscheck
+from repro.core.engine import Engine, crosscheck
 from repro.core.metg import METGModel, PAPER_DWORK_RTT
 from repro.core.mpi_list import Context
 from repro.core.pmake import PMake
 
 WORKER_COUNTS = (1, 4, 16)
 CHECK_TOLERANCE = 1.25          # CI fails if overhead grows > 25%
+INSTR_TOLERANCE = 1.05          # metrics on vs off: <= 5% growth budget
+# ratio gates are meaningless at the noise floor: a sub-microsecond
+# jitter on a ~10us overhead reads as "percent growth" — the absolute
+# floor below absorbs it (scaled by machine speed in run_check)
+INSTR_FLOOR_US = 0.3
 REPO_ROOT = Path(__file__).resolve().parents[1]
 BASELINE = REPO_ROOT / "BENCH_engine.json"
 SWEEP_OUT = REPO_ROOT / "BENCH_engine_sweep.json"
@@ -132,6 +137,42 @@ def bench_mpilist(n_items: int, workers: int, ranks: int = 16,
     }
 
 
+def _engine_once(n_tasks: int, instrumented: bool) -> float:
+    """One batch Engine run (the executor hot loop, no shim layers);
+    returns per-task overhead in seconds.  With `instrumented=True` a
+    live MetricsRegistry is attached first — callback instruments over
+    the loop's own tables plus the sampled rpc histograms — exactly what
+    `Client.stats_server()` wires up."""
+    eng = Engine(workers=4, steal_n=4)
+    for i in range(n_tasks):
+        eng.submit(f"t{i}", meta={"x": i})
+    if instrumented:
+        from repro.core.obs import instrument
+        instrument(engine=eng)
+    rep = eng.run(lambda name, meta: (True, meta["x"] * 2))
+    return rep.overhead().per_task_overhead_s
+
+
+def bench_instrumentation(n_tasks: int = 1000, repeats: int = 5) -> dict:
+    """Instrumentation-overhead cell: per-task overhead with metrics
+    attached vs the bare engine.  The two sides are interleaved (off,
+    on, off, on, ...) and both take the best-of-N minimum, so machine
+    drift during the measurement hits both equally."""
+    best_off = best_on = float("inf")
+    for _ in range(max(repeats, 1)):
+        gc.collect()
+        best_off = min(best_off, _engine_once(n_tasks, False))
+        gc.collect()
+        best_on = min(best_on, _engine_once(n_tasks, True))
+    growth = (best_on / best_off) if best_off > 0 else 1.0
+    return {
+        "n_tasks": n_tasks,
+        "off_us": round(best_off * 1e6, 2),
+        "on_us": round(best_on * 1e6, 2),
+        "growth": round(growth, 4),
+    }
+
+
 def _warmup():
     """One throwaway run so the measured runs see warm bytecode/caches
     (the first dispatch loop of a process is ~2x slower)."""
@@ -164,6 +205,7 @@ def run(quick: bool = True) -> dict:
                      ("mpi-list", bench_mpilist)):
         out["schedulers"][name] = {
             f"workers={w}": fn(n, w) for w in WORKER_COUNTS}
+    out["instrumentation"] = bench_instrumentation()
     return out
 
 
@@ -236,6 +278,27 @@ def run_check() -> int:
         print(f"perf regression at workers={failures} "
               f"(> {CHECK_TOLERANCE:.0%} of committed BENCH_engine.json)",
               file=sys.stderr)
+        return 1
+    # instrumentation-overhead cell: attaching the obs registry must not
+    # cost the hot path more than the 5% budget.  Self-relative (on vs
+    # off measured back-to-back on THIS machine), so no baseline scaling
+    # — only the absolute noise floor is machine-scaled.  Same
+    # reproduce-to-fail retry policy as the regression cells above.
+    floor_us = INSTR_FLOOR_US * scale
+    cell = None
+    for attempt in range(3):
+        cell = bench_instrumentation()
+        if cell["on_us"] <= cell["off_us"] * INSTR_TOLERANCE + floor_us:
+            break
+        time.sleep(2)
+    ok = cell["on_us"] <= cell["off_us"] * INSTR_TOLERANCE + floor_us
+    print(f"instrumentation: {cell['off_us']:.2f}us bare vs "
+          f"{cell['on_us']:.2f}us with metrics (growth {cell['growth']:.3f}, "
+          f"limit {INSTR_TOLERANCE:.2f}x + {floor_us:.2f}us) "
+          f"{'OK' if ok else 'REGRESSED'}")
+    if not ok:
+        print(f"instrumentation overhead exceeds the "
+              f"{INSTR_TOLERANCE - 1:.0%} budget", file=sys.stderr)
         return 1
     return 0
 

@@ -100,6 +100,8 @@ def run_once(n: int = 1000, *, seed: int = 0, kill: bool = True) -> dict:
         "bad_responses": bad,
         "workers_killed": rep.trace.count("worker_dead"),
         "n_requeued": requeued,
+        "trace_emitted": rep.trace.n_emitted,
+        "trace_dropped": rep.trace.dropped,
         **lat.summary(),
     }
     if lost or bad:

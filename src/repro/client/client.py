@@ -111,6 +111,10 @@ class Client:
         self._loop_failed: Optional[BaseException] = None
         self._prune_every = max(int(prune_every), 0)
         self._resolved = 0
+        self._submitted = 0
+        self._futures_resolved = 0          # futures only (not __batch etc.)
+        self._metrics = None                # MetricsRegistry once attached
+        self._stats_servers: list = []      # stopped by close()
 
     @staticmethod
     def _adapt_server(server, *, transport, workers, tree_fanout,
@@ -279,6 +283,7 @@ class Client:
             if self._futures.get(name) is fut:
                 self._futures.pop(name, None)
             raise
+        self._submitted += 1
         if (self._loop_failed is not None or self._closed) \
                 and not fut.done():
             # the dispatch loop died — or close() ran to completion —
@@ -316,6 +321,7 @@ class Client:
         resurrected-stub containment.)"""
         fut = self._futures.pop(name, None)
         if fut is not None:
+            self._futures_resolved += 1
             if ok:
                 fut._resolve(state=_DONE, value=res.value, record=res)
             elif error == "cancelled" and res is None:
@@ -330,11 +336,10 @@ class Client:
             else:
                 fut._resolve(state=_DONE,
                              exception=TaskFailed(f"{name}: {error}"))
-        if self._prune_every:
-            self._resolved += 1
-            if self._resolved % self._prune_every == 0:
-                self._pruned_any = True
-                self.engine.prune_terminal()
+        self._resolved += 1
+        if self._prune_every and self._resolved % self._prune_every == 0:
+            self._pruned_any = True
+            self.engine.prune_terminal()
 
     def gather(self, futures: Iterable[Future], *,
                timeout: Optional[float] = None,
@@ -480,6 +485,9 @@ class Client:
                 self._report = self.engine.shutdown(drain=drain,
                                                     timeout=timeout)
         finally:
+            for srv in self._stats_servers:
+                srv.stop()
+            self._stats_servers = []
             for name in list(self._futures):
                 fut = self._futures.pop(name, None)
                 if fut is not None and not fut.done():
@@ -570,6 +578,13 @@ class Client:
         fe = Frontend(self.engine, execute_batch, **frontend_kw)
         fe.start()
         self._frontends.append(fe)
+        if self._metrics is not None:
+            # a stats server is already up: fold the new frontend in so
+            # its request latencies and admission counters appear live
+            from repro.core.obs import instrument
+
+            instrument(self._metrics, frontend=fe,
+                       frontend_index=len(self._frontends) - 1)
         return fe
 
     # --------------------------------------------------------- membership
@@ -585,6 +600,26 @@ class Client:
         return self.engine.live_workers()
 
     # ---------------------------------------------------------------- obs
+    def stats_server(self, port: int = 0, *, host: str = "127.0.0.1"):
+        """Start the live observability endpoint for this client: wires a
+        `MetricsRegistry` over the engine, backend, frontends, and the
+        futures counters (`repro.core.obs.instrument`), then serves
+        `/stats`, `/health`, and `/metrics` from an `http.server` thread.
+        `port=0` binds an ephemeral port — read it from the returned
+        `StatsServer`'s `.url`.  Idempotent metrics wiring; the server is
+        stopped automatically by `close()`.
+
+            srv = client.stats_server()
+            print(srv.url)        # point  python -m repro.core.obs.top  here
+        """
+        from repro.core.obs import StatsServer, instrument
+
+        self._metrics = instrument(self._metrics, client=self)
+        srv = StatsServer(self._metrics, client=self,
+                          host=host, port=port).start()
+        self._stats_servers.append(srv)
+        return srv
+
     def report(self) -> OverheadReport:
         """METG accounting for the session so far (or the final report
         after close): the same empirical per-task overhead / tasks-per-s /

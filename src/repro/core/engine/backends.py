@@ -61,6 +61,9 @@ class ServerBackend:
         self.server = server or TaskServer(lease_timeout=lease_timeout,
                                            clock=clock)
         self.tracer = tracer
+        # optional rpc-latency sink (repro.core.obs.RpcMetrics): fed the
+        # same sampled timings the trace gets, so rpc_sample= thins both
+        self.metrics = None
 
     # ------------------------------------------------------------ timing
     def _request(self, msg):
@@ -81,7 +84,11 @@ class ServerBackend:
             return self._request(msg)
         t0 = time.perf_counter()
         resp = self._request(msg)
-        tracer.emit(RPC, op=op, dt=time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        tracer.emit(RPC, op=op, dt=dt)
+        m = self.metrics
+        if m is not None:
+            m.observe(op, dt)
         return resp
 
     def _note_requeues(self, before: int):
@@ -105,8 +112,11 @@ class ServerBackend:
             return
         t0 = time.perf_counter()
         self.server.create_bulk(tasks)
-        tracer.emit(RPC, op="create_many", dt=time.perf_counter() - t0,
-                    n=len(tasks))
+        dt = time.perf_counter() - t0
+        tracer.emit(RPC, op="create_many", dt=dt, n=len(tasks))
+        m = self.metrics
+        if m is not None:
+            m.observe("create_many", dt)
 
     def steal(self, worker: str, n: int = 1):
         before = self._requeued_total()
@@ -152,6 +162,10 @@ class ServerBackend:
         the serving layer's queue-depth accounting, not a protocol verb)."""
         return len(self.server.ready)
 
+    def ready_depths(self) -> list:
+        """Per-shard ready depths (monitoring probe; one entry here)."""
+        return [self.ready_depth()]
+
     def stats(self) -> dict:
         return self.server.stats()
 
@@ -169,6 +183,7 @@ class ShardedBackend:
         self.hub = hub or ShardedHub(shards, lease_timeout=lease_timeout,
                                      clock=clock)
         self.tracer = tracer
+        self.metrics = None                   # see ServerBackend.metrics
         self._shard_of: dict[str, int] = {}   # stolen task -> serving shard
 
     @property
@@ -180,6 +195,12 @@ class ShardedBackend:
 
     def _emit_rpc(self, op: str, dt: float):
         self.tracer.emit(RPC, op=op, dt=dt)
+        m = self.metrics
+        if m is not None:
+            m.observe(op, dt)
+
+    def _requeued_total(self) -> int:
+        return self.hub.requeued_total()
 
     # shard affinity from the engine's worker naming (w<i>) — one
     # definition, shared with the hub's own wire-boundary routing
@@ -282,6 +303,9 @@ class ShardedBackend:
     def ready_depth(self) -> int:
         return self.hub.ready_depth()
 
+    def ready_depths(self) -> list:
+        return [len(s.ready) for s in self.hub.shards]
+
     def stats(self) -> dict:
         return self.hub.stats()
 
@@ -323,6 +347,7 @@ class TreeBackend(ServerBackend):
         from repro.core.dwork.client import TCPServer, TCPTransport
 
         self.forwarders: list = []    # exists before the tracer setter runs
+        self.metrics = None           # see ServerBackend.metrics
         self._shard_links = None
         self._shard_tcp: list = []
         n_shards = len(hub.shards) if hub is not None else max(int(shards), 1)
@@ -455,8 +480,11 @@ class TreeBackend(ServerBackend):
             self._request(Create(task=name, deps=list(deps),
                                  meta=dict(meta or {})))
         if sampled:
-            tracer.emit(RPC, op="create_many", dt=time.perf_counter() - t0,
-                        n=len(tasks))
+            dt = time.perf_counter() - t0
+            tracer.emit(RPC, op="create_many", dt=dt, n=len(tasks))
+            m = self.metrics
+            if m is not None:
+                m.observe("create_many", dt)
 
     # ------------------------------------------------------ introspection
     def prune_terminal(self, keep=()) -> int:
@@ -473,6 +501,11 @@ class TreeBackend(ServerBackend):
         if self.hub is not None:
             return self.hub.ready_depth()
         return super().ready_depth()
+
+    def ready_depths(self) -> list:
+        if self.hub is not None:
+            return [len(s.ready) for s in self.hub.shards]
+        return super().ready_depths()
 
     def stats(self) -> dict:
         stats = self.hub.stats() if self.hub is not None \

@@ -195,6 +195,15 @@ class Engine:
         self._thread: Optional[threading.Thread] = None
         self._report: Optional[EngineReport] = None
         self._loop_error: Optional[BaseException] = None
+        # -------------------------------------------------- observability
+        # plain tables the dispatch loop maintains unconditionally (one
+        # list-slot hit per completion); `repro.core.obs` reads them via
+        # zero-cost callback instruments, and worker_stats()/
+        # tasks_done_total() are the monitoring probes over them
+        self.worker_deaths = 0
+        self.exec_failed = 0                  # executions raised / not-ok
+        self._wstats: dict[str, list] = {}    # worker -> [done_n, busy_s]
+        self._dead_workers: set = set()
 
     # ------------------------------------------------------------- submit
     def submit(self, name: str, fn: Optional[Callable] = None, *,
@@ -485,6 +494,23 @@ class Engine:
         METG-aware batching should adapt to."""
         return max(self._live, 0)
 
+    def tasks_done_total(self) -> int:
+        """Task executions that reached COMPLETED/FAILED on a worker.
+        Requeued re-executions count each time: this is the throughput
+        counter the windowed tasks/s rate diffs, not the terminal-name
+        count (`OverheadReport.n_tasks`)."""
+        return sum(st[0] for st in list(self._wstats.values()))
+
+    def worker_stats(self) -> dict:
+        """Monitoring snapshot: worker -> {done, busy_s, alive}.  Read
+        under the GIL from the loop's own tables — approximate while the
+        loop runs, never blocking it.  `busy_s` sums real execution time
+        (TaskResult t_start..t_end), so diffing two snapshots gives a
+        per-worker busy fraction over the window."""
+        dead = self._dead_workers
+        return {w: {"done": st[0], "busy_s": st[1], "alive": w not in dead}
+                for w, st in list(self._wstats.items())}
+
     def add_worker(self, name: Optional[str] = None) -> str:
         """Grow the live pool (resident mode): the worker joins the steal
         rotation at the top of the next dispatch round."""
@@ -641,6 +667,10 @@ class Engine:
         n_alive = max(len(alive), 1)
         peak_workers = len(alive)
         dead: set[str] = set()
+        self._dead_workers = dead            # monitoring view (GIL reads)
+        wstats = self._wstats
+        for w in alive:
+            wstats.setdefault(w, [0, 0.0])
         steals = {w: 0 for w in alive}
         done_flag = {w: False for w in alive}
         # hot-path state, all maintained incrementally (no per-round scans):
@@ -698,6 +728,7 @@ class Engine:
             heartbeat-lease expiry), and scrub its pending launches."""
             nonlocal heap, n_pending, try_launch, progress
             dead.add(w)
+            self.worker_deaths += 1
             emit(WORKER_DEAD, worker=w, **extra)
             if finished[w]:
                 complete_steal(w, finished[w], 0)
@@ -755,6 +786,7 @@ class Engine:
                                     done_flag[w] = False
                                     outstanding[w] = 0
                                     finished[w] = []
+                                wstats.setdefault(w, [0, 0.0])
                                 self._live = len(alive) - len(dead)
                                 peak_workers = max(peak_workers, len(alive))
                             elif cmd == "lose" and w in steals \
@@ -787,6 +819,11 @@ class Engine:
                             bury(w, announce=True, crash=True)
                             continue
                         outstanding[w] -= 1
+                        st = wstats[w]
+                        st[0] += 1
+                        st[1] += res.t_end - res.t_start
+                        if not res.ok:
+                            self.exec_failed += 1
                         if record_results:
                             results[name] = res
                         if note_terminal:
@@ -877,6 +914,7 @@ class Engine:
                             # client-thread lock ping-pong over steal_n
                             notes = [] if note_terminal is not None \
                                 else None
+                            st = wstats[w]
                             for name, meta in accepted:
                                 # steal order == seq order: complete rides
                                 # on this worker's next CompleteSteal
@@ -888,6 +926,8 @@ class Engine:
                                     # it with the in-flight task
                                     bury(w, announce=True, crash=True)
                                     break
+                                st[0] += 1
+                                st[1] += res.t_end - res.t_start
                                 if record_results:
                                     results[name] = res
                                 finished[w].append((name, res.ok))
@@ -898,6 +938,7 @@ class Engine:
                                     if notes is None:
                                         on_terminal(name)
                                 else:
+                                    self.exec_failed += 1
                                     emit(FAILED, task=name, worker=w,
                                          error=res.error)
                             if notes:
@@ -962,6 +1003,11 @@ class Engine:
                                 progress = True
                                 continue
                             outstanding[w] -= 1
+                            st = wstats[w]
+                            st[0] += 1
+                            st[1] += res.t_end - res.t_start
+                            if not res.ok:
+                                self.exec_failed += 1
                             if record_results:
                                 results[name] = res
                             if note_terminal:

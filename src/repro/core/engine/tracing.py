@@ -137,6 +137,16 @@ class TraceRecorder:
     def latency_report(self) -> "LatencyReport":
         return LatencyReport.from_trace(self)
 
+    def to_chrome_trace(self, path: Optional[str] = None) -> dict:
+        """Export the event log as a Chrome Trace Event Format document
+        (Perfetto / `chrome://tracing` loadable): one lane per worker
+        with task spans, rpc and `hop:*` lanes, serving requests as
+        async spans.  Returns the document; with `path`, also writes it
+        as JSON (conventional suffix `.trace.json`).  See
+        `repro.core.obs.chrome_trace`."""
+        from repro.core.obs.chrome_trace import to_chrome_trace
+        return to_chrome_trace(self, path)
+
 
 @dataclass
 class LatencyReport:
@@ -145,6 +155,7 @@ class LatencyReport:
     percentiles (tail latency is the serving SLO, so p95/p99 matter more
     than the mean) plus admission queue-depth stats."""
     n_requests: int = 0              # requests that got a response
+    n_incomplete: int = 0            # REQ_DONE with no usable latency
     n_failed: int = 0                # responses delivered with ok=False
     n_rejected: int = 0              # bounced by admission backpressure
     n_batches: int = 0               # engine tasks the requests rode on
@@ -166,7 +177,7 @@ class LatencyReport:
     def from_trace(cls, trace: "TraceRecorder") -> "LatencyReport":
         lats: list[float] = []
         depths: list[int] = []
-        n_failed = n_rejected = n_batches = 0
+        n_failed = n_rejected = n_batches = n_incomplete = 0
         batched = 0
         wait_s = 0.0
         with trace._lock:
@@ -174,7 +185,15 @@ class LatencyReport:
         for e in events:
             ev = e.event
             if ev == REQ_DONE:
-                lats.append(e.extra.get("latency_s", 0.0))
+                lat = e.extra.get("latency_s")
+                if lat is None:
+                    # an unstamped completion (its lifecycle partner was
+                    # evicted from the ring, or a foreign emitter): skip
+                    # it — folding a 0.0 default into the population
+                    # would drag p50/mean toward zero
+                    n_incomplete += 1
+                    continue
+                lats.append(lat)
                 if not e.extra.get("ok", True):
                     n_failed += 1
             elif ev == REQ_ENQUEUED:
@@ -189,6 +208,7 @@ class LatencyReport:
         lats.sort()
         return cls(
             n_requests=len(lats),
+            n_incomplete=n_incomplete,
             n_failed=n_failed,
             n_rejected=n_rejected,
             n_batches=n_batches,
@@ -206,6 +226,7 @@ class LatencyReport:
     def summary(self) -> dict:
         return {
             "n_requests": self.n_requests, "n_failed": self.n_failed,
+            "n_incomplete": self.n_incomplete,
             "n_rejected": self.n_rejected, "n_batches": self.n_batches,
             "mean_batch": round(self.mean_batch, 2),
             "latency_ms": {
@@ -239,6 +260,11 @@ class OverheadReport:
     dispatch_s: float = 0.0          # total stolen -> run_start latency
     rpc_by_op: dict = field(default_factory=dict)  # op -> (count, total_s)
     requests: Optional[LatencyReport] = None  # serving mode, else None
+    # ring-buffer truncation accounting: a bounded TraceRecorder evicts
+    # its oldest events, so a report over it covers the retained window
+    # only — dropped > 0 says every count above under-reports
+    n_emitted: int = 0               # events the recorder ever emitted
+    dropped: int = 0                 # events evicted before this report
 
     @classmethod
     def from_trace(cls, trace: TraceRecorder, workers: int = 1
@@ -302,6 +328,8 @@ class OverheadReport:
             n_rpc=n_rpc,
             dispatch_s=dispatch,
             rpc_by_op=by_op,
+            n_emitted=trace.n_emitted,
+            dropped=trace.dropped,
         )
 
     # ------------------------------------------------------------ derived
@@ -345,6 +373,8 @@ class OverheadReport:
             "per_task_overhead_us": round(self.per_task_overhead_s * 1e6, 2),
             "rpc_per_task_us": round(self.rpc_per_task_s * 1e6, 2),
             "empirical_metg_s": self.empirical_metg(),
+            "n_emitted": self.n_emitted,
+            "dropped": self.dropped,
         }
         if self.requests is not None:
             out["requests"] = self.requests.summary()

@@ -1,0 +1,33 @@
+"""Live observability for the unified engine, serving layer, and client.
+
+Three pieces, designed to compose (see `docs/observability.md`):
+
+  * `metrics`      — lock-cheap Counter/Gauge/Histogram primitives and
+                     the `MetricsRegistry` (JSON dump + Prometheus text)
+  * `instrument`   — wires a registry onto a live Engine / Client /
+                     Frontend: callback instruments over state the hot
+                     loop maintains anyway, plus sampled rpc and
+                     per-request latency histograms
+  * `server`       — `StatsServer`: `/stats`, `/health`, `/metrics`
+                     over stdlib `http.server`;
+    `top`          — `python -m repro.core.obs.top` text dashboard
+  * `chrome_trace` — `to_chrome_trace`: the `TraceRecorder` event log
+                     as a Perfetto-loadable timeline (also available as
+                     `TraceRecorder.to_chrome_trace(path)`)
+
+The one-call front door is `Client.stats_server()`; everything here
+also works piecemeal on a bare `Engine`.
+"""
+from repro.core.obs.chrome_trace import to_chrome_trace
+from repro.core.obs.instrument import (RPC_BUCKETS, RpcMetrics,
+                                       ServingMetrics, instrument)
+from repro.core.obs.metrics import (LATENCY_BUCKETS, Counter, Gauge,
+                                    Histogram, MetricsRegistry)
+from repro.core.obs.server import StatsServer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "LATENCY_BUCKETS", "RPC_BUCKETS",
+    "RpcMetrics", "ServingMetrics", "instrument",
+    "StatsServer", "to_chrome_trace",
+]

@@ -1,0 +1,161 @@
+"""Wiring: attach a `MetricsRegistry` to a live engine / client /
+frontend.
+
+Two attachment styles, matched to the hot-path budget:
+
+  * **Callback instruments** (the default): counters and gauges built
+    with `fn=` read values the engine and frontend maintain anyway —
+    per-worker done/busy tables, ready depth, live workers, requeue and
+    crash counts, admission counters.  Attaching them adds literally
+    nothing to the dispatch loop; the cost is paid at scrape time.
+  * **Push histograms** for the two latency streams that have no
+    always-on accumulator: scheduler rpc round-trips (observed at the
+    backend's already-sampled timing sites, so `rpc_sample=` thins the
+    metric exactly like the trace) and per-request serving latency
+    (observed in `Frontend._resolve`).
+
+`instrument(registry, engine=... | client=... | frontend=...)` is
+idempotent per target and returns the registry, so it chains:
+
+    reg = instrument(MetricsRegistry(), client=client)
+
+`Client.stats_server()` calls this for you and serves the result over
+HTTP (`repro.core.obs.server`).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.obs.metrics import LATENCY_BUCKETS, MetricsRegistry
+
+# rpc round-trips live in the µs..ms decades; the tail of the default
+# ladder would waste half the buckets on impossible multi-second rpcs
+RPC_BUCKETS = tuple(b for b in LATENCY_BUCKETS if b <= 0.25)
+
+
+class RpcMetrics:
+    """Per-op rpc latency histograms, cached so the backend's sampled
+    timing site pays one dict hit + one observe per recorded call."""
+
+    __slots__ = ("_registry", "_by_op")
+
+    def __init__(self, registry: MetricsRegistry):
+        self._registry = registry
+        self._by_op: dict = {}
+
+    def observe(self, op: str, dt: float):
+        # the cache maps op -> BOUND Histogram.observe: the hot call is
+        # one dict hit + one call, no attribute chase
+        ob = self._by_op.get(op)
+        if ob is None:
+            h = self._registry.histogram(
+                "repro_rpc_latency_seconds",
+                "Scheduler round-trip latency per protocol verb "
+                "(worker-side end-to-end, sampled like the trace)",
+                labels={"op": op}, buckets=RPC_BUCKETS)
+            ob = self._by_op[op] = h.observe
+        ob(dt)
+
+
+class ServingMetrics:
+    """Push-side serving metrics: the per-request latency histogram
+    observed at response delivery (everything else about the frontend is
+    readable from its own counters via callbacks)."""
+
+    __slots__ = ("latency", "_failed")
+
+    def __init__(self, registry: MetricsRegistry, index: int = 0):
+        lbl = {"frontend": str(index)}
+        self.latency = registry.histogram(
+            "repro_request_latency_seconds",
+            "Serving enqueue -> response latency", labels=lbl)
+        self._failed = registry.counter(
+            "repro_requests_failed_total",
+            "Responses delivered with ok=False", labels=lbl)
+
+    def observe_request(self, latency_s: float, ok: bool):
+        self.latency.observe(latency_s)
+        if not ok:
+            self._failed.inc()
+
+
+def _instrument_engine(reg: MetricsRegistry, engine) -> None:
+    backend = engine.backend
+    if getattr(backend, "metrics", None) is None:
+        backend.metrics = RpcMetrics(reg)
+    reg.gauge("repro_live_workers", "Workers currently alive",
+              fn=engine.live_workers)
+    reg.counter("repro_worker_deaths_total",
+                "Workers killed (crash, injected fault, or lose_worker)",
+                fn=lambda: engine.worker_deaths)
+    reg.counter("repro_tasks_completed_total",
+                "Tasks that finished ok on a worker",
+                fn=lambda: engine.tasks_done_total() - engine.exec_failed)
+    reg.counter("repro_tasks_failed_total",
+                "Task executions that raised / returned not-ok",
+                fn=lambda: engine.exec_failed)
+    reg.counter("repro_requeued_total",
+                "Tasks recycled by Exit or lease expiry",
+                fn=backend._requeued_total)
+    reg.gauge("repro_ready_depth", "Tasks ready to steal, all shards",
+              fn=backend.ready_depth)
+    for i in range(getattr(backend, "n_shards", 1)):
+        reg.gauge("repro_shard_ready_depth",
+                  "Tasks ready to steal on one shard",
+                  labels={"shard": str(i)},
+                  fn=lambda b=backend, i=i: b.ready_depths()[i])
+    tracer = engine.tracer
+    reg.counter("repro_trace_events_total", "Trace events emitted",
+                fn=lambda: tracer.n_emitted)
+    reg.counter("repro_trace_dropped_total",
+                "Trace events evicted by the ring buffer",
+                fn=lambda: tracer.dropped)
+
+
+def _instrument_frontend(reg: MetricsRegistry, fe, index: int = 0) -> None:
+    if getattr(fe, "metrics", None) is None:
+        fe.metrics = ServingMetrics(reg, index=index)
+    lbl = {"frontend": str(index)}
+    reg.counter("repro_requests_accepted_total",
+                "Requests admitted to the serving queue", labels=lbl,
+                fn=lambda: fe.accepted)
+    reg.counter("repro_requests_rejected_total",
+                "Requests bounced by admission backpressure", labels=lbl,
+                fn=lambda: fe.rejected)
+    reg.counter("repro_batches_total",
+                "Engine tasks the requests were coalesced into",
+                labels=lbl, fn=lambda: fe.batches)
+    reg.gauge("repro_serving_queue_depth", "Requests waiting to batch",
+              labels=lbl, fn=lambda: len(fe._queue))
+    reg.gauge("repro_serving_target_batch", "Current METG batch target",
+              labels=lbl, fn=fe.target_batch)
+
+
+def _instrument_client(reg: MetricsRegistry, client) -> None:
+    client._metrics = reg            # Client.serve() instruments later fes
+    _instrument_engine(reg, client.engine)
+    for i, fe in enumerate(client._frontends):
+        _instrument_frontend(reg, fe, index=i)
+    reg.counter("repro_futures_submitted_total", "Futures submitted",
+                fn=lambda: client._submitted)
+    reg.counter("repro_futures_resolved_total",
+                "Futures that reached a terminal state",
+                fn=lambda: client._futures_resolved)
+    reg.gauge("repro_futures_pending", "Futures awaiting resolution",
+              fn=lambda: len(client._futures))
+
+
+def instrument(registry: Optional[MetricsRegistry] = None, *,
+               engine=None, client=None, frontend=None,
+               frontend_index: int = 0) -> MetricsRegistry:
+    """Attach live metrics to the given target(s); builds a fresh
+    registry when none is passed.  Safe to call more than once — the
+    registry's get-or-create semantics make re-instrumentation a no-op."""
+    reg = registry if registry is not None else MetricsRegistry()
+    if client is not None:
+        _instrument_client(reg, client)
+    if engine is not None:
+        _instrument_engine(reg, engine)
+    if frontend is not None:
+        _instrument_frontend(reg, frontend, index=frontend_index)
+    return reg

@@ -115,6 +115,9 @@ class Frontend:
         self.accepted = 0
         self.rejected = 0
         self.batches = 0
+        # optional serving-metrics sink (repro.core.obs.ServingMetrics):
+        # observed at response delivery, beside the REQ_DONE emit
+        self.metrics = None
         self._thread: Optional[threading.Thread] = None
         # ---------------------------------------- monitoring snapshots
         # windowed accumulator, reset on every snapshot(): bounded by the
@@ -330,6 +333,9 @@ class Frontend:
         latency_s = req.t_done - req.t_enqueue
         tracer.emit(REQ_DONE, task=req.name, worker=None,
                     latency_s=latency_s, ok=ok)
+        m = self.metrics
+        if m is not None:
+            m.observe_request(latency_s, ok)
         if self._monitoring:
             with self._snap_lock:
                 self._w_lats.append(latency_s)

@@ -39,6 +39,13 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--max-wait-ms", type=float, default=20.0,
                     help="frontend deadline before a partial batch ships")
+    ap.add_argument("--stats-port", type=int, default=None,
+                    help="serve /stats, /health, /metrics on this port "
+                         "while requests run (0 = ephemeral; see "
+                         "python -m repro.core.obs.top)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the session as a Perfetto-loadable "
+                         "Chrome trace (.trace.json) at exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced() if args.reduced else get_config(args.arch)
@@ -64,6 +71,11 @@ def main(argv=None):
 
     client = Client(scheduler="dwork", workers=args.workers,
                     lease_timeout=120.0)
+    if args.stats_port is not None:
+        srv = client.stats_server(port=args.stats_port)
+        print(f"[serve] live stats at {srv.url}/stats "
+              f"(/health, /metrics; dashboard: python -m "
+              f"repro.core.obs.top --url {srv.url})")
     frontend = client.serve(execute_batch,
                             max_queue=max(args.requests, 16),
                             max_batch=max(args.requests, 1),
@@ -85,6 +97,10 @@ def main(argv=None):
         assert r.value.shape == (args.max_new,)
         done += 1
     report = client.close()
+    if args.trace_out:
+        report.trace.to_chrome_trace(args.trace_out)
+        print(f"[serve] Chrome trace written to {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")
     lat = report.trace.latency_report()
     print(f"[serve] all {done} requests served in {time.time() - t0:.1f}s; "
           f"batches={lat.n_batches} mean_batch={lat.mean_batch:.1f}")

@@ -1,0 +1,444 @@
+"""Observability subsystem tests: metrics registry semantics, Prometheus
+exposition, live instrumentation over a running engine, the streaming
+stats endpoint under load, Chrome-trace export, and the trace-accounting
+satellites (rpc-sampling scale-up, ring-buffer drop counting, incomplete
+request latencies)."""
+import json
+import re
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.client import Client
+from repro.core.engine import (COMPLETED, REQ_DONE, REQ_ENQUEUED, RPC,
+                               RUN_END, RUN_START, Engine, LatencyReport,
+                               ManualClock, OverheadReport, TraceRecorder)
+from repro.core.obs import (LATENCY_BUCKETS, Counter, Gauge, Histogram,
+                            MetricsRegistry, StatsServer, instrument,
+                            to_chrome_trace)
+from repro.core.obs import top as obs_top
+
+
+# ------------------------------------------------------ metrics registry
+
+
+def test_registry_get_or_create_is_keyed_by_name_and_labels():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "help")
+    assert reg.counter("x_total") is a                 # same key, same obj
+    b = reg.counter("x_total", labels={"op": "steal"})
+    assert b is not a                                  # labels split series
+    assert reg.counter("x_total", labels={"op": "steal"}) is b
+    a.inc()
+    a.inc(4)
+    assert a.value == 5 and b.value == 0
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("thing")
+    with pytest.raises(TypeError):
+        reg.gauge("thing")
+    with pytest.raises(TypeError):
+        reg.histogram("thing")
+
+
+def test_callback_instruments_read_at_scrape_and_never_raise():
+    reg = MetricsRegistry()
+    state = {"n": 7}
+    c = reg.counter("cb_total", fn=lambda: state["n"])
+    assert c.value == 7
+    state["n"] = 9
+    assert c.value == 9                                # read live, not cached
+    with pytest.raises(RuntimeError):
+        c.inc()                                        # owner already counts
+    boom = reg.gauge("boom", fn=lambda: 1 / 0)
+    assert boom.value == 0                             # monitoring never raises
+
+
+def test_gauge_set_inc_dec():
+    g = Gauge("g")
+    g.set(10)
+    g.inc(5)
+    g.dec(2)
+    assert g.value == 13
+
+
+def test_histogram_observe_quantile_snapshot():
+    h = Histogram("lat", buckets=(0.001, 0.01, 0.1, 1.0))
+    for v in (0.0005, 0.005, 0.005, 0.05, 0.5):
+        h.observe(v)
+    assert h.count == 5 and abs(h.sum - 0.5605) < 1e-9
+    snap = h.snapshot()
+    assert snap["buckets"]["0.001"] == 1               # cumulative counts
+    assert snap["buckets"]["0.01"] == 3
+    assert snap["buckets"]["1.0"] == 5
+    assert snap["buckets"]["+Inf"] == 5
+    q50, q95 = h.quantile(0.5), h.quantile(0.95)
+    assert 0.001 <= q50 <= 0.01                        # median in 2nd bucket
+    assert q95 <= 1.0 and q95 >= q50
+    assert Histogram("empty").quantile(0.5) == 0.0
+
+
+def test_histogram_default_buckets_span_us_to_seconds():
+    assert LATENCY_BUCKETS[0] == 1e-6 and LATENCY_BUCKETS[-1] == 10.0
+    assert list(LATENCY_BUCKETS) == sorted(LATENCY_BUCKETS)
+
+
+def test_dump_keys_are_label_qualified():
+    reg = MetricsRegistry()
+    reg.counter("a_total", labels={"op": "steal"}).inc(3)
+    reg.gauge("depth").set(2)
+    reg.histogram("h", labels={"k": "v"}).observe(0.5)
+    d = reg.dump()
+    assert d["counters"]['a_total{op="steal"}'] == 3
+    assert d["gauges"]["depth"] == 2
+    assert d["histograms"]['h{k="v"}']["count"] == 1
+
+
+# prometheus text format 0.0.4: sample lines are
+#   name{label="v",...} value   |   name value
+_PROM_SAMPLE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
+    r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\})? '
+    r'(-?\d+(\.\d+)?([eE][+-]?\d+)?|[+-]Inf|NaN)$')
+
+
+def test_prometheus_exposition_parses():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests served", labels={"op": "steal"}).inc(3)
+    reg.counter("req_total", labels={"op": "create"}).inc(1)
+    reg.gauge("depth", "queue depth").set(4)
+    reg.histogram("lat_seconds", "latency", buckets=(0.01, 0.1)).observe(0.05)
+    text = reg.prometheus()
+    assert text.endswith("\n")
+    samples = 0
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("#"):
+            assert re.match(r"^# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* ", line)
+            continue
+        assert _PROM_SAMPLE.match(line), f"bad sample line: {line!r}"
+        samples += 1
+    # HELP/TYPE emitted once per family even with two req_total series
+    assert text.count("# TYPE req_total counter") == 1
+    # histogram expands to cumulative buckets + _sum/_count
+    assert 'lat_seconds_bucket{le="0.01"} 0' in text
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+    assert "lat_seconds_count 1" in text
+    assert samples >= 8
+
+
+def test_prometheus_escapes_label_values():
+    reg = MetricsRegistry()
+    reg.counter("esc_total", labels={"p": 'a"b\\c\nd'}).inc()
+    text = reg.prometheus()
+    assert r'p="a\"b\\c\nd"' in text
+
+
+# ------------------------------------------------- instrumented engine
+
+
+def test_instrumented_batch_engine_reports_live_counts():
+    eng = Engine(workers=4, steal_n=4)
+    for i in range(200):
+        eng.submit(f"t{i}", meta={"x": i})
+    reg = instrument(engine=eng)
+    eng.run(lambda name, meta: (True, meta["x"] * 2))
+    d = reg.dump()
+    assert d["counters"]["repro_tasks_completed_total"] == 200
+    assert d["counters"]["repro_tasks_failed_total"] == 0
+    assert d["counters"]["repro_worker_deaths_total"] == 0
+    assert d["counters"]["repro_trace_events_total"] > 0
+    assert d["gauges"]["repro_ready_depth"] == 0
+    # rpc histograms observed at the backend's sampled timing sites
+    rpc = {k: v for k, v in d["histograms"].items()
+           if k.startswith("repro_rpc_latency_seconds")}
+    assert rpc and all(v["count"] > 0 for v in rpc.values())
+    # per-worker table the server view is built from
+    ws = eng.worker_stats()
+    assert sum(s["done"] for s in ws.values()) == 200
+    assert all(s["alive"] for s in ws.values())
+    assert eng.tasks_done_total() == 200
+
+
+def test_instrument_is_idempotent_and_chains():
+    eng = Engine(workers=1)
+    reg = instrument(engine=eng)
+    assert instrument(reg, engine=eng) is reg          # re-instrument: no-op
+    m = eng.backend.metrics
+    assert m is not None
+    instrument(reg, engine=eng)
+    assert eng.backend.metrics is m                    # not replaced
+
+
+def test_failed_tasks_count_in_failed_not_completed():
+    eng = Engine(workers=2)
+    for i in range(20):
+        eng.submit(f"t{i}", meta={"x": i})
+    reg = instrument(engine=eng)
+    eng.run(lambda name, meta: (name != "t7", meta["x"]))
+    d = reg.dump()
+    assert d["counters"]["repro_tasks_failed_total"] == 1
+    assert d["counters"]["repro_tasks_completed_total"] == 19
+
+
+# --------------------------------- satellite: rpc sampling + ring drops
+
+
+def test_rpc_sampling_scales_report_and_thins_metrics():
+    tracer = TraceRecorder(rpc_sample=4)
+    eng = Engine(workers=4, steal_n=2, tracer=tracer)
+    reg = instrument(engine=eng)      # BEFORE submit: creates are rpcs too
+    for i in range(200):
+        eng.submit(f"t{i}", meta={"x": i})
+    rep = eng.run(lambda name, meta: (True, meta["x"]))
+    ov = rep.overhead()
+    recorded = len(tracer.of(RPC))
+    assert 0 < recorded < tracer.rpc_seen              # thinned 4:1-ish
+    # the report scales the sampled totals back up to the true call count
+    assert ov.n_rpc == tracer.rpc_seen
+    # the rpc histograms ride the SAME sampling: one observation per
+    # recorded event, not per call
+    d = reg.dump()
+    observed = sum(v["count"] for k, v in d["histograms"].items()
+                   if k.startswith("repro_rpc_latency_seconds"))
+    assert observed == recorded
+
+
+def test_rpc_scale_up_excludes_hop_ops():
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock)
+    # 2 sampled end-to-end round-trips out of 8 seen...
+    tr.rpc_sample = 4
+    for _ in range(8):
+        if tr.sample_rpc():
+            tr.emit(RPC, op="complete_steal", dt=1e-3)
+    # ...plus forwarding-tree hops, emitted directly (no sample_rpc call)
+    tr.emit(RPC, op="hop:L1", dt=5e-4)
+    tr.emit(RPC, op="hop:L1", dt=5e-4)
+    ov = OverheadReport.from_trace(tr)
+    assert ov.n_rpc == 8                               # scaled to rpc_seen
+    assert abs(ov.rpc_s - 8 * 1e-3) < 1e-9             # 2 recorded x 8/2
+    # hops appear in the per-op breakdown but not in the scaled totals
+    assert ov.rpc_by_op["hop:L1"][0] == 2
+    assert ov.rpc_by_op["complete_steal"][0] == 2
+
+
+def test_ring_buffer_drop_count_under_concurrent_emit():
+    tr = TraceRecorder(max_events=100)
+    threads = [threading.Thread(
+        target=lambda: [tr.emit(COMPLETED, task="t") for _ in range(500)])
+        for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tr.n_emitted == 4000                        # no lost increments
+    assert len(tr.events) == 100
+    assert tr.dropped == 3900
+
+
+def test_overhead_summary_carries_emitted_and_dropped():
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock, max_events=4)
+    for i in range(10):
+        tr.emit(COMPLETED, task=f"t{i}")
+    s = OverheadReport.from_trace(tr).summary()
+    assert s["n_emitted"] == 10 and s["dropped"] == 6
+    # unbounded recorder: dropped stays 0
+    tr2 = TraceRecorder(clock=clock)
+    tr2.emit(COMPLETED, task="t")
+    s2 = OverheadReport.from_trace(tr2).summary()
+    assert s2["n_emitted"] == 1 and s2["dropped"] == 0
+
+
+def test_latency_report_skips_unstamped_req_done():
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock)
+    tr.emit(REQ_DONE, task="r0", latency_s=0.010, ok=True)
+    tr.emit(REQ_DONE, task="r1")                       # partner evicted
+    tr.emit(REQ_DONE, task="r2", latency_s=0.030, ok=True)
+    rep = LatencyReport.from_trace(tr)
+    assert rep.n_requests == 2 and rep.n_incomplete == 1
+    assert abs(rep.mean_s - 0.020) < 1e-9              # no 0.0 dragging p50
+    assert rep.summary()["n_incomplete"] == 1
+
+
+# ------------------------------------------------------- stats endpoint
+
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        ctype = resp.headers.get("Content-Type", "")
+        return resp.read().decode(), ctype
+
+
+def test_stats_server_live_under_load():
+    with Client(scheduler="dwork", workers=4, shards=2) as c:
+        srv = c.stats_server()
+        fe = c.serve(lambda ps: [p * 2 for p in ps], max_wait_s=0.002)
+        fs = [c.submit(lambda x=x: x * x) for x in range(300)]
+        reqs = [fe.submit(i) for i in range(50)]
+
+        # scrape while the engine is running — it must keep dispatching
+        body, ctype = _get(srv.url + "/stats")
+        assert ctype.startswith("application/json")
+        mid = json.loads(body)
+        assert mid["engine"]["live_workers"] == 4
+        assert mid["rates"]["window_s"] is not None    # baselined at start()
+
+        assert c.gather(fs) == [x * x for x in range(300)]
+        assert all(r.wait(30.0) and r.value == i * 2
+                   for i, r in enumerate(reqs))
+
+        stats = json.loads(_get(srv.url + "/stats")[0])
+        assert stats["engine"]["tasks_done"] >= 300
+        assert stats["engine"]["tasks_failed"] == 0
+        assert stats["engine"]["shard_ready_depth"] == [0, 0]
+        assert stats["engine"]["trace"]["n_emitted"] > 0
+        assert len(stats["workers"]) == 4
+        for row in stats["workers"].values():
+            assert row["alive"] and 0.0 <= row["busy_frac"] <= 1.0
+        assert stats["serving"] and stats["serving"][0]["n_requests"] >= 0
+
+        health = json.loads(_get(srv.url + "/health")[0])
+        assert health["ok"] and health["live_workers"] == 4
+
+        body, ctype = _get(srv.url + "/metrics")
+        assert "version=0.0.4" in ctype
+        for line in body.splitlines():
+            if line and not line.startswith("#"):
+                assert _PROM_SAMPLE.match(line), f"bad: {line!r}"
+        assert "repro_live_workers 4" in body
+        assert "repro_futures_submitted_total" in body
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/nope")
+        assert ei.value.code == 404
+    # client close stops the server: the port no longer answers
+    with pytest.raises(OSError):
+        _get(srv.url + "/health", timeout=0.5)
+
+
+def test_stats_server_windowed_rates_diff_between_scrapes():
+    eng = Engine(workers=2, resident=True)
+    eng.start()
+    try:
+        reg = instrument(engine=eng)
+        with StatsServer(reg, engine=eng) as srv:
+            for i in range(100):
+                eng.submit(f"t{i}", fn=lambda: None)
+            assert eng.drain(timeout=30)
+            s1 = json.loads(_get(srv.url + "/stats")[0])
+            assert s1["rates"]["tasks_per_s"] > 0      # work since baseline
+            s2 = json.loads(_get(srv.url + "/stats")[0])
+            assert s2["rates"]["tasks_per_s"] == 0.0   # nothing in window
+            assert s2["engine"]["tasks_done"] == 100
+    finally:
+        eng.shutdown()
+
+
+def test_stats_server_start_stop_idempotent():
+    srv = StatsServer(MetricsRegistry())
+    assert srv.start() is srv and srv.start() is srv
+    port = srv.port
+    assert port != 0
+    srv.stop()
+    srv.stop()                                         # double stop is fine
+
+
+# -------------------------------------------------------- chrome trace
+
+
+def test_chrome_trace_structure_and_worker_lanes(tmp_path):
+    with Client(scheduler="dwork", workers=2) as c:
+        fe = c.serve(lambda ps: [p + 1 for p in ps], max_wait_s=0.002)
+        fs = [c.submit(lambda x=x: x) for x in range(40)]
+        reqs = [fe.submit(i) for i in range(10)]
+        c.gather(fs)
+        assert all(r.wait(30.0) for r in reqs)
+        report = c.close()
+    out = tmp_path / "t.trace.json"
+    doc = report.trace.to_chrome_trace(str(out))
+    loaded = json.loads(out.read_text())
+    assert loaded == doc and doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    lanes = {e["args"]["name"]: e["tid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "w0" in lanes and "w1" in lanes and "requests" in lanes
+    assert lanes["w0"] < lanes["w1"] < lanes["requests"]  # pool order first
+    # every task execution is an X span on its worker's lane
+    spans = [e for e in evs if e["ph"] == "X" and e.get("cat") == "task"]
+    assert spans
+    assert {e["tid"] for e in spans} <= {lanes["w0"], lanes["w1"]}
+    for e in spans:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    # serving requests are async b/e pairs balanced per id
+    begins = [e["id"] for e in evs if e["ph"] == "b"]
+    ends = [e["id"] for e in evs if e["ph"] == "e"]
+    assert sorted(begins) == sorted(ends) and len(ends) == 10
+    for e in evs:
+        assert "pid" in e and "tid" in e
+
+
+def test_chrome_trace_synthesizes_begin_for_evicted_enqueue():
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock)
+    clock.advance(1.0)
+    tr.emit(REQ_DONE, task="r9", latency_s=0.25, ok=True)
+    tr.emit(REQ_DONE, task="r8")                       # unstamped: skipped
+    doc = to_chrome_trace(tr)
+    pairs = [e for e in doc["traceEvents"] if e["ph"] in ("b", "e")]
+    assert [e["ph"] for e in pairs] == ["b", "e"]
+    assert all(e["id"] == "r9" for e in pairs)
+    b, e = pairs
+    assert abs((e["ts"] - b["ts"]) - 0.25 * 1e6) < 1.0  # begin at t - lat
+
+
+def test_chrome_trace_rpc_and_worker_events():
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock)
+    tr.emit(RUN_START, task="a", worker="w0")
+    clock.advance(0.002)
+    tr.emit(RUN_END, task="a", worker="w0")
+    tr.emit(RPC, op="complete_steal", dt=1e-3, n=4)
+    tr.emit(RPC, op="hop:L1", dt=5e-4)
+    doc = to_chrome_trace(tr)
+    evs = doc["traceEvents"]
+    lanes = {e["args"]["name"]: e["tid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert set(lanes) == {"w0", "rpc", "hop:L1"}
+    task = next(e for e in evs if e.get("cat") == "task")
+    assert abs(task["dur"] - 2000.0) < 1.0             # 2ms in us
+    rpc = next(e for e in evs if e.get("cat") == "rpc"
+               and e["name"] == "complete_steal")
+    assert rpc["tid"] == lanes["rpc"] and rpc["args"]["n"] == 4
+    hop = next(e for e in evs if e["name"] == "hop:L1")
+    assert hop["tid"] == lanes["hop:L1"]
+
+
+# ----------------------------------------------------------- dashboard
+
+
+def test_top_render_and_fetch():
+    eng = Engine(workers=2, resident=True)
+    eng.start()
+    try:
+        reg = instrument(engine=eng)
+        with StatsServer(reg, engine=eng) as srv:
+            for i in range(20):
+                eng.submit(f"t{i}", fn=lambda: None)
+            assert eng.drain(timeout=30)
+            stats = obs_top.fetch(srv.url)
+            text = obs_top.render(stats)
+            assert "WORKER" in text and "w0" in text and "w1" in text
+            assert "tasks/s" in text
+    finally:
+        eng.shutdown()
+    assert isinstance(obs_top.render({}), str)         # degrade, not crash
