@@ -1,0 +1,277 @@
+"""Chaos harness: a seeded mixed workload under combined injected faults,
+emitted as BENCH_chaos.json — the repo's robustness gate.
+
+Two phases, both seeded end-to-end:
+
+  * **serving+retry** — a futures DAG and open serving traffic share one
+    resident engine while a worker is killed mid-stream and a seeded
+    fraction of task executions fail transiently (`fail_first_k`).  The
+    `RetryPolicy` must absorb every transient failure (all futures and
+    requests resolve with correct values) within budget: with k=1 and
+    max_attempts=3, retries == distinct affected tasks, never more.
+  * **crash+recover** — a journaled batch campaign is killed mid-DAG
+    (every worker dies -> stall, the in-memory universe is gone), then
+    `Engine.recover(journal_dir)` rebuilds from the write-ahead journal
+    and completes the workload.  Asserted: zero task loss (phase-1 +
+    phase-2 executions cover the universe exactly) and zero
+    double-completion (the two execution sets are disjoint).
+
+Modes:
+    (default)   run both phases -> BENCH_chaos.json (+ stdout)
+    --check     re-run and assert every invariant; wall-clock compared
+                against the committed baseline (generous tolerance — this
+                gate is about correctness under faults, not speed)
+    --artifacts DIR   keep the recovered journal + a listing under DIR
+                (CI uploads it as the sample recovered-journal artifact)
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro.client import Client
+from repro.core.engine import (Engine, FaultPlan, Journal, RetryPolicy)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BASELINE = REPO_ROOT / "BENCH_chaos.json"
+
+N_FUTURES = 240
+N_REQUESTS = 200
+N_RECOVERY_TASKS = 400
+FAIL_RATE = 0.3                # seeded fraction of tasks failing once
+MAX_ATTEMPTS = 3               # retry budget (> k=1, so all must recover)
+KILL_AFTER_STEALS = 20         # w3 dies mid-stream in the serving phase
+CHECK_WALL_TOLERANCE = 4.0     # correctness gate: loose wall-clock bound
+
+
+def _calibrate_us() -> float:
+    """Machine-speed probe (same estimator as the other benchmark gates)."""
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        total = 0
+        for i in range(100000):
+            total += i * i
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+# ------------------------------------------------------ phase 1: serving
+
+
+def phase_serving(seed: int = 0) -> dict:
+    """Futures DAG + serving traffic on one engine, under a worker kill
+    and seeded transient failures absorbed by RetryPolicy."""
+    plan = (FaultPlan(seed).fail_first_k(1, rate=FAIL_RATE)
+            .kill_worker("w3", after_steals=KILL_AFTER_STEALS))
+    t0 = time.perf_counter()
+    with Client(workers=4, transport="thread", faults=plan,
+                retry=RetryPolicy(max_attempts=MAX_ATTEMPTS, backoff=0.0,
+                                  seed=seed)) as c:
+        fe = c.serve(lambda ps: [p * 3 + 1 for p in ps],
+                     max_queue=4096, max_batch=16, max_wait_s=0.002,
+                     per_request_s0=2e-6)
+        # chained futures DAG: stable task names (key=) so the seeded
+        # fault draws are identical run to run
+        futs: list = []
+        for i in range(N_FUTURES):
+            if i % 3 and futs:
+                futs.append(c.submit(lambda a, i=i: a + i, futs[-1],
+                                     key=f"chaos{i}"))
+            else:
+                futs.append(c.submit(lambda i=i: i * 2, key=f"chaos{i}"))
+        reqs = [fe.submit(i, timeout=None if i % 5 else 60.0)
+                for i in range(N_REQUESTS)]
+        values = c.gather(futs)
+        for r in reqs:
+            if not r.wait(60):
+                raise AssertionError(f"request lost: {r}")
+        fe.flush()
+        # ---------------- invariants, checked while the engine is live
+        expect = []
+        for i in range(N_FUTURES):
+            expect.append(expect[-1] + i if i % 3 and expect else i * 2)
+        if values != expect:
+            raise AssertionError("future values corrupted under faults")
+        bad = sum(1 for i, r in enumerate(reqs)
+                  if not r.ok or r.value != 3 * i + 1)
+        timed_out = sum(1 for r in reqs if r.timed_out)
+        if bad or timed_out:
+            raise AssertionError(
+                f"serving loss under faults: bad={bad} timeouts={timed_out}")
+        retries = c.engine.retries_total
+        deaths = c.engine.worker_deaths
+        n_tasks = c.engine.tasks_done_total()
+        rep = c.close()
+    wall = time.perf_counter() - t0
+    # retry budget: k=1 transient failure per affected task, so retries
+    # can never exceed the task universe (futures + coalesced batches)
+    if not (1 <= retries <= n_tasks):
+        raise AssertionError(f"retry count out of budget: {retries} "
+                             f"(tasks={n_tasks})")
+    if deaths != 1:
+        raise AssertionError(f"injected worker kill did not bite: {deaths}")
+    ov = rep.overhead()
+    return {
+        "n_futures": N_FUTURES, "n_requests": N_REQUESTS,
+        "fail_rate": FAIL_RATE, "retries": retries,
+        "n_retried_events": ov.n_retried, "n_requeued": ov.n_requeued,
+        "workers_killed": deaths, "wall_s": round(wall, 4),
+    }
+
+
+# ----------------------------------------------------- phase 2: recovery
+
+
+def phase_recovery(seed: int = 0, keep_dir=None) -> dict:
+    """Journaled batch campaign killed mid-DAG, then recovered from the
+    write-ahead journal.  `keep_dir` preserves the recovered journal
+    (CI artifact); otherwise it is deleted."""
+    jdir = Path(keep_dir) if keep_dir is not None \
+        else Path(tempfile.mkdtemp(prefix="chaos-journal-"))
+    if jdir.exists() and any(jdir.iterdir()):
+        shutil.rmtree(jdir)
+    n = N_RECOVERY_TASKS
+    universe = {f"t{i}" for i in range(n)}
+    phase1: list = []
+    phase2: list = []
+    t0 = time.perf_counter()
+    # the crash: every worker dies mid-campaign -> the run stalls and the
+    # in-memory task tables are lost with the engine
+    faults = (FaultPlan(seed).kill_worker("w0", after_steals=n // 8)
+              .kill_worker("w1", after_steals=n // 8))
+    eng = Engine(workers=2, transport="thread", journal=str(jdir),
+                 faults=faults, max_idle_rounds=50)
+    for i in range(n):
+        deps = [f"t{i-1}"] if i % 4 else []      # chains of 4
+        eng.submit(f"t{i}", deps=deps, meta={"i": i})
+    rep1 = eng.run(lambda name, meta: phase1.append(name) or True)
+    if not rep1.stalled:
+        raise AssertionError("simulated crash did not stall the engine")
+    done1 = set(rep1.completed)
+    if not done1 or done1 >= universe:
+        raise AssertionError(f"crash not mid-DAG: {len(done1)}/{n} done")
+
+    st = Journal.replay(jdir)
+    if st.completed != done1:
+        raise AssertionError("journal lost terminal records across crash")
+
+    eng2 = Engine.recover(str(jdir), workers=2, transport="thread")
+    rep2 = eng2.run(lambda name, meta: phase2.append(name) or True)
+    wall = time.perf_counter() - t0
+    if rep2.stalled:
+        raise AssertionError("recovery run stalled")
+    # zero loss + zero double-completion
+    if done1 | set(phase2) != universe:
+        missing = universe - done1 - set(phase2)
+        raise AssertionError(f"task loss across recovery: {missing}")
+    dupes = done1 & set(phase2)
+    if dupes:
+        raise AssertionError(f"double-completion across recovery: {dupes}")
+    st2 = Journal.replay(jdir)
+    if len(st2.completed) != n or st2.pending():
+        raise AssertionError(f"recovered journal inconsistent: "
+                             f"{st2.summary()}")
+    # compact so the kept artifact shows the checkpoint idiom too
+    j = Journal(jdir)
+    j.checkpoint()
+    j.close()
+    listing = sorted(f"{p.name} ({p.stat().st_size}B)"
+                     for p in jdir.iterdir())
+    out = {
+        "n_tasks": n, "done_before_crash": len(done1),
+        "recovered": len(phase2), "requeues_journaled": st2.requeues,
+        "wall_s": round(wall, 4),
+        "journal": {**Journal.replay(jdir).summary(), "files": listing},
+    }
+    if keep_dir is None:
+        shutil.rmtree(jdir)
+    return out
+
+
+# ---------------------------------------------------------------- driver
+
+
+def run(seed: int = 0, artifacts=None) -> dict:
+    art = Path(artifacts) if artifacts else None
+    if art is not None:
+        art.mkdir(parents=True, exist_ok=True)
+    serving = phase_serving(seed)
+    recovery = phase_recovery(
+        seed, keep_dir=(art / "recovered-journal") if art else None)
+    out = {
+        "seed": seed,
+        "serving": serving,
+        "recovery": recovery,
+        "invariants": {
+            "zero_task_loss": True,          # raised above otherwise
+            "no_double_completion": True,
+            "retries_within_budget": True,
+            "zero_request_loss": True,
+        },
+        "wall_s": round(serving["wall_s"] + recovery["wall_s"], 4),
+        "calibration_us": round(_calibrate_us(), 1),
+    }
+    if art is not None:
+        (art / "journal_listing.txt").write_text(
+            "\n".join(recovery["journal"]["files"]) + "\n")
+        (art / "BENCH_chaos.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def run_check(artifacts=None) -> int:
+    """CI robustness gate: every invariant must hold under the seeded
+    fault mix; wall clock only has to stay within a loose multiple of
+    the committed baseline (scaled by machine speed)."""
+    baseline = json.loads(BASELINE.read_text())
+    scale = 1.0
+    base_cal = baseline.get("calibration_us")
+    if base_cal:
+        scale = min(max(_calibrate_us() / base_cal, 1.0), 4.0)
+    wall_limit = baseline["wall_s"] * CHECK_WALL_TOLERANCE * scale
+    print(f"machine-speed scale vs baseline: {scale:.2f}x "
+          f"(wall limit {wall_limit:.1f}s)")
+    last_err = None
+    for attempt in range(3):
+        try:
+            meas = run(baseline.get("seed", 0), artifacts=artifacts)
+        except AssertionError as e:
+            # a chaos invariant is deterministic under the seed: one
+            # retry guards against environment flakes, not real bugs
+            last_err = e
+            print(f"attempt {attempt + 1}: INVARIANT FAILED: {e}",
+                  file=sys.stderr)
+            time.sleep(2)
+            continue
+        ok = meas["wall_s"] <= wall_limit
+        print(f"chaos: retries={meas['serving']['retries']} "
+              f"recovered={meas['recovery']['recovered']}"
+              f"/{meas['recovery']['n_tasks']} "
+              f"wall={meas['wall_s']:.2f}s (limit {wall_limit:.1f}s) "
+              f"{'OK' if ok else 'TOO SLOW'}")
+        if ok:
+            return 0
+        last_err = AssertionError(f"wall {meas['wall_s']} > {wall_limit}")
+        time.sleep(2)
+    print(f"chaos gate failed: {last_err}", file=sys.stderr)
+    return 1
+
+
+def _artifacts_arg(argv: list):
+    if "--artifacts" in argv:
+        return argv[argv.index("--artifacts") + 1]
+    return None
+
+
+if __name__ == "__main__":
+    artifacts = _artifacts_arg(sys.argv)
+    if "--check" in sys.argv:
+        sys.exit(run_check(artifacts=artifacts))
+    result = run(artifacts=artifacts)
+    BASELINE.write_text(json.dumps(result, indent=1))
+    print(json.dumps(result, indent=1))
+    print(f"\nwrote {BASELINE}", file=sys.stderr)

@@ -60,7 +60,8 @@ class Client:
                  tree_fanout: int = 4, tree_levels: int = 1,
                  keep_results: bool = True,
                  max_trace_events: Optional[int] = None,
-                 prune_every: int = 0, **engine_kw):
+                 prune_every: int = 0, retry=None,
+                 journal_dir=None, **engine_kw):
         scheduler = scheduler.replace("-", "_")
         if scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}; "
@@ -98,7 +99,8 @@ class Client:
             shards=shards, backend=backend, tracer=tracer, faults=faults,
             clock=clock, poll=poll, lease_timeout=lease_timeout,
             tree_fanout=tree_fanout, tree_levels=tree_levels,
-            resident=self.resident, keep_results=keep_results, **engine_kw)
+            resident=self.resident, keep_results=keep_results,
+            retry=retry, journal=journal_dir, **engine_kw)
         self._futures: dict[str, Future] = {}
         self._cv = threading.Condition(threading.Lock())  # every Future
         self._waiters = 0                    # result() callers blocked
@@ -148,7 +150,7 @@ class Client:
     # ------------------------------------------------------------- submit
     def submit(self, fn: Callable, *args, key: Optional[str] = None,
                priority: float = 0.0, slots: int = 1, deps=(),
-               **kwargs) -> Future:
+               retry=None, **kwargs) -> Future:
         """Schedule `fn(*args, **kwargs)` and return its `Future`.
 
         Any `Future` among the arguments is lifted into an engine
@@ -159,10 +161,15 @@ class Client:
         pool capacity the task occupies while running (pmake nodes).
         Task names are single-use — pass `key=` only for unique names.
 
-        NOTE: `key`, `priority`, `slots`, and `deps` are reserved by
-        this signature (per the scheduler API) and are NOT forwarded to
-        `fn` — to call a function with a same-named keyword, wrap it:
-        `c.submit(functools.partial(fn, priority=3), x)`."""
+        `retry` attaches a per-task `RetryPolicy` (overrides the
+        client-wide `retry=` passed at construction); transient failures
+        re-enqueue with backoff instead of failing the future.
+
+        NOTE: `key`, `priority`, `slots`, `deps`, and `retry` are
+        reserved by this signature (per the scheduler API) and are NOT
+        forwarded to `fn` — to call a function with a same-named
+        keyword, wrap it: `c.submit(functools.partial(fn, priority=3),
+        x)`."""
         self._check_open()
         name = key if key is not None else \
             f"{getattr(fn, '__name__', 'task')}-{next_seq()}"
@@ -183,11 +190,11 @@ class Client:
         fut = Future(self, name)
         return self._submit(fut, fn=_make_call(fut, fn, args, kwargs),
                             deps=dep_names, priority=priority,
-                            slots=max(int(slots), 1))
+                            slots=max(int(slots), 1), retry=retry)
 
     def submit_task(self, name: str, *, deps=(), meta: Optional[dict] = None,
                     priority: float = 0.0, slots: int = 1,
-                    fn: Optional[Callable] = None) -> Future:
+                    fn: Optional[Callable] = None, retry=None) -> Future:
         """Schedule a NAMED task executed by the client's `executor=`
         callback (or `fn`, a zero-arg callable) — the by-name execution
         style of the pmake and elastic adapters, with a `Future` attached.
@@ -201,7 +208,7 @@ class Client:
             return self._fail_fast(name, fdeps)
         return self._submit(Future(self, name), fn=fn, deps=dep_names,
                             meta=meta, priority=priority,
-                            slots=max(int(slots), 1))
+                            slots=max(int(slots), 1), retry=retry)
 
     def map(self, fn: Callable, *iterables, priority: float = 0.0,
             slots: int = 1) -> list:

@@ -18,6 +18,9 @@ makes that claim *measurable* in one place instead of three ad-hoc loops:
                  slots/priority launch (pmake EFT)
     faults.py    heartbeat leases, dead-worker requeue, seeded fault and
                  straggler injection (no wall-clock dependence in tests)
+    journal.py   write-ahead journal + compacted checkpoints for the
+                 Table-2 transitions; `Engine.recover(journal_dir)`
+                 rebuilds a crashed session (docs/robustness.md)
     tracing.py   empirical per-task overhead + METG from event streams
                  (optionally rpc-sampled), cross-checked against the
                  analytic laws in core/metg.py
@@ -63,11 +66,13 @@ from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
                                         ShardedBackend, TreeBackend)
 from repro.core.engine.executor import Engine, EngineReport
 from repro.core.engine.faults import FaultPlan
+from repro.core.engine.journal import Journal, JournalState
 from repro.core.engine.model import (BATCH_FORMED, CANCELLED, COMPLETED,
                                      CREATED, FAILED, READY, REQ_DONE,
-                                     REQ_ENQUEUED, REQ_REJECTED, REQUEUED,
-                                     RPC, RUN_END, RUN_START, STOLEN,
-                                     WORKER_DEAD, EngineTask, ManualClock,
+                                     REQ_ENQUEUED, REQ_REJECTED, REQ_TIMEOUT,
+                                     REQUEUED, RETRIED, RPC, RUN_END,
+                                     RUN_START, STOLEN, WORKER_DEAD,
+                                     EngineTask, ManualClock, RetryPolicy,
                                      TaskResult, TraceEvent, WorkerCrash)
 from repro.core.engine.tracing import (LatencyReport, OverheadReport,
                                        TraceRecorder, crosscheck,
@@ -76,10 +81,12 @@ from repro.core.engine.tracing import (LatencyReport, OverheadReport,
 __all__ = [
     "Engine", "EngineReport", "EngineTask", "TaskResult", "TraceEvent",
     "TraceRecorder", "OverheadReport", "LatencyReport", "FaultPlan",
+    "Journal", "JournalState", "RetryPolicy",
     "ManualClock", "WorkerCrash", "percentile",
     "ServerBackend", "ShardedBackend", "TreeBackend", "crosscheck",
     "DONE", "EMPTY",
     "CREATED", "READY", "STOLEN", "RUN_START", "RUN_END", "COMPLETED",
-    "FAILED", "REQUEUED", "CANCELLED", "WORKER_DEAD", "RPC",
-    "REQ_ENQUEUED", "REQ_DONE", "REQ_REJECTED", "BATCH_FORMED",
+    "FAILED", "REQUEUED", "RETRIED", "CANCELLED", "WORKER_DEAD", "RPC",
+    "REQ_ENQUEUED", "REQ_DONE", "REQ_REJECTED", "REQ_TIMEOUT",
+    "BATCH_FORMED",
 ]

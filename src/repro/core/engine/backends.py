@@ -64,6 +64,10 @@ class ServerBackend:
         # optional rpc-latency sink (repro.core.obs.RpcMetrics): fed the
         # same sampled timings the trace gets, so rpc_sample= thins both
         self.metrics = None
+        # optional write-ahead journal (engine.journal.Journal): requeue
+        # events are backend-observed, so the engine hands its journal
+        # down for the ["rq", n, via] records
+        self.journal = None
 
     # ------------------------------------------------------------ timing
     def _request(self, msg):
@@ -93,8 +97,11 @@ class ServerBackend:
 
     def _note_requeues(self, before: int):
         n = self._requeued_total() - before
-        if n > 0 and self.tracer is not None:
-            self.tracer.emit(REQUEUED, n=n, via="lease")
+        if n > 0:
+            if self.tracer is not None:
+                self.tracer.emit(REQUEUED, n=n, via="lease")
+            if self.journal is not None:
+                self.journal.append_requeue(n, "lease")
 
     # ---------------------------------------------------------- protocol
     def create(self, name: str, deps=(), meta=None):
@@ -139,8 +146,11 @@ class ServerBackend:
         before = self._requeued_total()
         self._call("exit", Exit(worker=worker))
         n = self._requeued_total() - before
-        if n > 0 and self.tracer is not None:
-            self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
+        if n > 0:
+            if self.tracer is not None:
+                self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
+            if self.journal is not None:
+                self.journal.append_requeue(n, "exit")
         return n
 
     def cancel(self, name: str) -> bool:
@@ -184,6 +194,7 @@ class ShardedBackend:
                                      clock=clock)
         self.tracer = tracer
         self.metrics = None                   # see ServerBackend.metrics
+        self.journal = None                   # see ServerBackend.journal
         self._shard_of: dict[str, int] = {}   # stolen task -> serving shard
 
     @property
@@ -282,8 +293,11 @@ class ShardedBackend:
         before = self.hub.requeued_total()
         self.hub.exit_worker(worker)
         n = self.hub.requeued_total() - before
-        if n > 0 and self.tracer is not None:
-            self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
+        if n > 0:
+            if self.tracer is not None:
+                self.tracer.emit(REQUEUED, worker=worker, n=n, via="exit")
+            if self.journal is not None:
+                self.journal.append_requeue(n, "exit")
         return n
 
     def cancel(self, name: str) -> bool:
@@ -348,6 +362,7 @@ class TreeBackend(ServerBackend):
 
         self.forwarders: list = []    # exists before the tracer setter runs
         self.metrics = None           # see ServerBackend.metrics
+        self.journal = None           # see ServerBackend.journal
         self._shard_links = None
         self._shard_tcp: list = []
         n_shards = len(hub.shards) if hub is not None else max(int(shards), 1)

@@ -57,15 +57,17 @@ from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from heapq import heapify, heappop, heappush
+from pathlib import Path
 from typing import Callable, Optional
 
 from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
                                         ShardedBackend, TreeBackend)
 from repro.core.engine.faults import FaultPlan
+from repro.core.engine.journal import Journal
 from repro.core.engine.model import (CANCELLED, COMPLETED, CREATED, FAILED,
-                                     READY, RUN_END, RUN_START, STOLEN,
-                                     WORKER_DEAD, EngineTask, TaskResult,
-                                     WorkerCrash)
+                                     READY, RETRIED, RUN_END, RUN_START,
+                                     STOLEN, WORKER_DEAD, EngineTask,
+                                     RetryPolicy, TaskResult, WorkerCrash)
 from repro.core.engine.tracing import OverheadReport, TraceRecorder
 
 TRANSPORTS = ("inproc", "thread", "tree")
@@ -104,7 +106,9 @@ class Engine:
                  max_idle_rounds: Optional[int] = None, tree_fanout: int = 4,
                  tree_levels: int = 1, resident: bool = False,
                  keep_results: bool = True,
-                 on_result: Optional[Callable] = None):
+                 on_result: Optional[Callable] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 journal=None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}")
         self.workers = max(int(workers), 0)
@@ -112,6 +116,15 @@ class Engine:
         self.transport = transport
         self.steal_n = max(int(steal_n), 1)
         self.faults = faults
+        # engine-wide transient-failure policy (per-task `retry=` on
+        # submit overrides it); None = a failure poisons immediately
+        self.retry = retry
+        # durable control plane: a write-ahead `Journal` (or a directory
+        # path, which constructs and OWNS one — closed when the dispatch
+        # loop exits).  Off by default: journaling is opt-in so the
+        # fault-free hot path pays only a None check.
+        self._owns_journal = isinstance(journal, (str, Path))
+        self.journal = Journal(journal) if self._owns_journal else journal
         self.poll = poll
         self.lease_timeout = lease_timeout
         self.resident = bool(resident)
@@ -153,6 +166,11 @@ class Engine:
         elif getattr(backend, "tracer", None) is None:
             backend.tracer = self.tracer
         self.backend = backend
+        if self.journal is not None:
+            # backends journal the requeue records their verbs observe
+            # (Exit recycling, lease expiry) — the engine journals
+            # create/terminal itself
+            backend.journal = self.journal
         # the dispatch-rate multiplier the METG retunes see (serving
         # batch targets, elastic steal_n): authoritative from the
         # backend, so a caller-supplied hub/backend is counted too
@@ -202,25 +220,31 @@ class Engine:
         # tasks_done_total() are the monitoring probes over them
         self.worker_deaths = 0
         self.exec_failed = 0                  # executions raised / not-ok
+        self.retries_total = 0                # re-enqueues by RetryPolicy
+        self._attempts: dict[str, int] = {}   # failed executions per task
         self._wstats: dict[str, list] = {}    # worker -> [done_n, busy_s]
         self._dead_workers: set = set()
 
     # ------------------------------------------------------------- submit
     def submit(self, name: str, fn: Optional[Callable] = None, *,
                deps=(), meta: Optional[dict] = None, priority: float = 0.0,
-               slots: int = 1) -> EngineTask:
+               slots: int = 1,
+               retry: Optional[RetryPolicy] = None) -> EngineTask:
         """Register a task.  Submit producers before dependents: the task
         server forward-declares an unknown dep as a READY stub and treats
         a later Create of the same name as a no-op (dwork §2.2 semantics),
         so a dependent submitted first would run before its producer.
         In resident mode this is thread-safe and may be called while the
-        dispatch loop is running."""
+        dispatch loop is running.  `retry` overrides the engine-wide
+        `RetryPolicy` for this task."""
         task = EngineTask(name=name, fn=fn, deps=tuple(deps),
                           meta=dict(meta or {}), slots=max(int(slots), 1),
-                          priority=priority)
+                          priority=priority, retry=retry)
         if not self.resident:
             self.tasks[name] = task
             self.backend.create(name, deps=task.deps, meta=task.meta)
+            if self.journal is not None:
+                self.journal.append_create(name, task.deps, task.meta)
             self.tracer.emit(CREATED, task=name)
             if task.deps:
                 self._waiting[name] = set(task.deps)
@@ -281,6 +305,10 @@ class Engine:
                         why = f"dependency {failed_dep} failed"
                         emit(CREATED, task=name)
                         emit(FAILED, task=name, error=why)
+                        j = self.journal
+                        if j is not None:
+                            j.append_create(name, task.deps, task.meta)
+                            j.append_terminal(name, False, why)
                         if notify is not None:
                             pending.append((name, False, None, why))
                         continue
@@ -301,7 +329,10 @@ class Engine:
             # submitting client thread adds no events (and no span) of
             # its own — the dispatch window stays the measured quantity,
             # exactly as on the batch path where creation precedes run()
+            j = self.journal
             for task, ready in creates:
+                if j is not None:
+                    j.append_create(task.name, task.deps, task.meta)
                 emit(CREATED, task=task.name)
                 if ready:
                     emit(READY, task=task.name)
@@ -380,11 +411,20 @@ class Engine:
         if name in self._terminal:
             return 0
         self._terminal.add(name)
+        self._attempts.pop(name, None)      # bounded retry state
         known = name in self.tasks
         if error is None and res is not None:
             error = res.error
         if want and known:
             pending.append((name, ok, res, error))
+        j = self.journal
+        if j is not None:
+            if ok:
+                j.append_terminal(name, True)
+            elif error == "cancelled" and res is None:
+                j.append_cancel(name)
+            else:
+                j.append_terminal(name, False, error)
         n = 1 if known else 0
         if not ok:
             self._failed.add(name)
@@ -396,8 +436,11 @@ class Engine:
                         continue
                     self._terminal.add(succ)
                     self._failed.add(succ)
+                    self._attempts.pop(succ, None)
                     why = f"poisoned by {name}"
                     self.tracer.emit(FAILED, task=succ, error=why)
+                    if j is not None:
+                        j.append_terminal(succ, False, why)
                     if want:
                         pending.append((succ, False, None, why))
                     n += 1
@@ -442,12 +485,17 @@ class Engine:
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every submitted task is terminal (True) or the
-        timeout expires (False).  Does not stop the loop."""
+        timeout expires (False).  Does not stop the loop.  With a
+        journal attached, a successful drain syncs it — "drained" then
+        also means "durable"."""
         with self._cond:
-            return self._cond.wait_for(
+            ok = self._cond.wait_for(
                 lambda: (self._inflight <= 0 and not self._mailbox)
                 or self._loop_error is not None,
                 timeout)
+        if ok and self.journal is not None:
+            self.journal.sync()
+        return ok
 
     def shutdown(self, *, drain: bool = True,
                  timeout: Optional[float] = None) -> Optional[EngineReport]:
@@ -609,6 +657,57 @@ class Engine:
                          if backend else 0)
         return len(prunable) + n_backend
 
+    # ----------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, journal_dir, **engine_kw) -> "Engine":
+        """Rebuild an engine from a journal directory after a crash.
+
+        Replays checkpoint + WAL into the control-plane state, then:
+
+          * terminal names (completed / failed / cancelled) seed the
+            exactly-once accounting — they never re-run, never re-fire
+            `on_result`, and dependents treat completed producers as
+            satisfied;
+          * every created-but-not-terminal task is re-submitted with its
+            surviving dependencies, which re-marks leased-but-unfinished
+            work from the crashed run as ready (the journal records no
+            leases: an assignment that never completed is work to redo);
+          * a pending task whose producer failed before the crash is
+            poisoned immediately, exactly as the live engine would have.
+
+        The returned engine journals into the SAME directory (appends
+        continue where the crashed run stopped), so a recovered session
+        is itself recoverable.  Task `fn` closures are not journaled —
+        run the recovered engine with an `execute(name, meta)` callback
+        (the by-name style of the dwork/pmake adapters), carrying
+        whatever the callback needs in each task's `meta`.
+
+        `engine_kw` is forwarded to the constructor (workers, transport,
+        shards, resident=..., retry=..., ...).  Works with all three
+        backends: recovery happens above the backend, which starts
+        empty and receives the re-created universe."""
+        state = Journal.replay(journal_dir)
+        eng = cls(journal=str(journal_dir), **engine_kw)
+        eng._recovered = state
+        terminal = state.terminal()
+        eng._terminal |= terminal
+        eng._failed.update(state.failed)
+        eng._failed.update(state.cancelled)
+        completed = state.completed
+        journal = eng.journal
+        for name, deps, meta in state.pending():
+            live = tuple(d for d in deps if d not in completed)
+            bad = next((d for d in live if d in eng._failed), None)
+            if bad is not None:
+                eng._terminal.add(name)
+                eng._failed.add(name)
+                why = f"dependency {bad} failed"
+                eng.tracer.emit(FAILED, task=name, error=why)
+                journal.append_terminal(name, False, why)
+                continue
+            eng.submit(name, deps=live, meta=meta)
+        return eng
+
     # -------------------------------------------------------------- exec
     def _execute_registered(self, name: str, meta: dict):
         task = self.tasks.get(name)
@@ -643,7 +742,8 @@ class Engine:
         virtual = 0.0
         if self.faults is not None:
             virtual = self.faults.delay_s(name, worker)
-            if self.faults.force_fail(name, worker):
+            if self.faults.force_fail(name, worker,
+                                      self._attempts.get(name, 0)):
                 ok, err = False, err or "injected fault"
             tracer.emit(RUN_END, task=name, worker=worker, virtual_s=virtual)
         else:
@@ -696,11 +796,13 @@ class Engine:
         run_one = self._run_one
         on_terminal = self._on_terminal
         # terminal accounting runs in resident mode (drain bookkeeping)
-        # and whenever a result listener is attached (futures client,
-        # either mode); `_terminal` then doubles as the duplicate-steal
-        # guard so `keep_results=False` sessions stay exactly-once too
+        # and whenever a result listener OR a journal is attached (the
+        # journal records terminal transitions at the same chokepoint);
+        # `_terminal` then doubles as the duplicate-steal guard so
+        # `keep_results=False` sessions stay exactly-once too
         note_terminal = (self._note_terminal
-                         if resident or self.on_result is not None else None)
+                         if resident or self.on_result is not None
+                         or self.journal is not None else None)
         note_many = self._note_terminal_many
         terminal_seen = self._terminal if note_terminal else ()
         record_results = self.keep_results or not resident
@@ -720,6 +822,43 @@ class Engine:
         # without it a full backlog gets drained/re-pushed every poll
         try_launch = True
         progress = False
+        # retry plumbing: a transiently-failed execution is re-enqueued
+        # onto the launch heap with a not-before stamp (seeded-jitter
+        # backoff) instead of reporting Complete(ok=False) — the worker
+        # keeps its scheduler-side assignment, so a retry costs zero
+        # protocol round-trips.  backoff_wait marks a round where heap
+        # entries were held for their backoff deadline only.
+        retry_default = self.retry
+        attempts = self._attempts
+        backoff_wait = False
+
+        def retry_delay(name: str, res: TaskResult):
+            """None = fail for real; else the backoff before re-run."""
+            task = self.tasks.get(name)
+            pol = (task.retry if task is not None
+                   and task.retry is not None else retry_default)
+            if pol is None:
+                return None
+            attempt = attempts.get(name, 0) + 1
+            attempts[name] = attempt
+            if not pol.should_retry(attempt, res.error):
+                return None
+            return pol.delay_s(name, attempt)
+
+        def schedule_retry(name: str, meta, w: str, delay: float):
+            nonlocal seq, n_pending, try_launch
+            self.retries_total += 1
+            emit(RETRIED, task=name, worker=w, attempt=attempts[name],
+                 delay_s=delay)
+            pending_names.add(name)
+            seq += 1
+            heappush(heap, (
+                -priority_of(name, meta), seq,
+                {"name": name, "meta": meta, "worker": w,
+                 "slots": self._slots_of(name, meta),
+                 "t_ready": time.perf_counter() + delay}))
+            n_pending += 1
+            try_launch = True
 
         def bury(w: str, *, announce: bool, **extra):
             """Retire a dead worker mid-stream: flush the completions it
@@ -754,6 +893,7 @@ class Engine:
             while True:
                 rounds += 1
                 progress = False
+                backoff_wait = False
                 stopping = not resident or self._stop
                 # 0) resident: abort / membership commands / live retuning
                 if resident:
@@ -820,6 +960,15 @@ class Engine:
                             continue
                         outstanding[w] -= 1
                         st = wstats[w]
+                        if not res.ok:
+                            delay = retry_delay(name, res)
+                            if delay is not None:
+                                # transient: the worker keeps its
+                                # assignment; re-enqueue after backoff
+                                st[1] += res.t_end - res.t_start
+                                outstanding[w] += 1
+                                schedule_retry(name, rec["meta"], w, delay)
+                                continue
                         st[0] += 1
                         st[1] += res.t_end - res.t_start
                         if not res.ok:
@@ -926,6 +1075,17 @@ class Engine:
                                     # it with the in-flight task
                                     bury(w, announce=True, crash=True)
                                     break
+                                if not res.ok:
+                                    delay = retry_delay(name, res)
+                                    if delay is not None:
+                                        # the fast path never counted
+                                        # this steal in outstanding: the
+                                        # heap re-enqueue must
+                                        st[1] += res.t_end - res.t_start
+                                        outstanding[w] += 1
+                                        schedule_retry(name, meta, w,
+                                                       delay)
+                                        continue
                                 st[0] += 1
                                 st[1] += res.t_end - res.t_start
                                 if record_results:
@@ -982,6 +1142,12 @@ class Engine:
                             pending_names.discard(name)
                             n_pending -= 1
                             continue
+                        t_ready = it.get("t_ready")
+                        if t_ready is not None \
+                                and t_ready > time.perf_counter():
+                            held.append(entry)    # retry backoff pending
+                            backoff_wait = True
+                            continue
                         if name in running:
                             # a dead worker's copy is still in flight;
                             # wait for it to drain before re-launching
@@ -1002,6 +1168,16 @@ class Engine:
                                 bury(w, announce=True, crash=True)
                                 progress = True
                                 continue
+                            if not res.ok:
+                                delay = retry_delay(name, res)
+                                if delay is not None:
+                                    # still held by w (outstanding not
+                                    # yet decremented): re-enqueue only
+                                    wstats[w][1] += res.t_end - res.t_start
+                                    schedule_retry(name, it["meta"], w,
+                                                   delay)
+                                    progress = True
+                                    continue
                             outstanding[w] -= 1
                             st = wstats[w]
                             st[0] += 1
@@ -1022,10 +1198,16 @@ class Engine:
                             fut = pool.submit(self._run_one, exec_fn, name,
                                               it["meta"], w)
                             running[name] = {"worker": w, "fut": fut,
-                                             "slots": slots}
+                                             "slots": slots,
+                                             "meta": it["meta"]}
                         progress = True
                     for entry in held:
                         heappush(heap, entry)
+                    if backoff_wait:
+                        # a held backoff entry needs another launch pass
+                        # once its deadline arrives, whatever else the
+                        # round did
+                        try_launch = True
                 # 5) termination (batch mode, or resident after shutdown())
                 if stopping and not running and not n_pending:
                     live = [w for w in alive if w not in dead]
@@ -1046,6 +1228,12 @@ class Engine:
                         break
                 if progress:
                     idle_rounds = 0
+                elif backoff_wait:
+                    # retries waiting out their backoff are forward
+                    # progress in waiting, not a stall
+                    idle_rounds = 0
+                    try_launch = True
+                    time.sleep(self.poll)
                 elif not running:
                     idle_rounds += 1
                     if idle_rounds >= self.max_idle_rounds and stopping:
@@ -1057,6 +1245,13 @@ class Engine:
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
+            journal = self.journal
+            if journal is not None:
+                # a clean exit is fully durable; an owned journal (built
+                # from a path) is closed with the loop
+                journal.sync()
+                if self._owns_journal:
+                    journal.close()
             if self._owns_backend:
                 # in the finally so a mid-run RPC failure can't leak the
                 # tree's sockets/threads; stats()/errors() below only

@@ -14,6 +14,10 @@ Three fault families (mapped to the paper's failure modes):
                      (`TaskServer(lease_timeout=..., clock=ManualClock())`).
   * task failure   — `fail_task(name)` / `fail_rate(p)`: the task reports
                      Complete(ok=False) and poisons transitive successors.
+                     `fail_first_k(k)` makes failures *transient*: only the
+                     first k execution attempts of each affected task fail,
+                     so a `RetryPolicy(max_attempts > k)` deterministically
+                     recovers — the retry paths' test harness.
   * stragglers     — `stragglers(sigma)`: per-(task, worker) Gaussian
                      *virtual* delay, recorded in the trace but never slept.
                      Feeds the mpi-list Gumbel sync-gap model
@@ -33,6 +37,9 @@ class FaultPlan:
         self._fail: set[str] = set()
         self._fail_rate: float = 0.0
         self._sigma: float = 0.0
+        self._first_k: int = 0                 # transient: fail attempts < k
+        self._first_k_rate: float = 1.0
+        self._first_k_tasks: Optional[set] = None
 
     # -------------------------------------------------------- configure
     def kill_worker(self, worker: str, after_steals: int = 1,
@@ -50,6 +57,19 @@ class FaultPlan:
         self._fail_rate = p
         return self
 
+    def fail_first_k(self, k: int, rate: float = 1.0,
+                     tasks: Optional[list] = None) -> "FaultPlan":
+        """Transient failures: each affected task's first `k` execution
+        attempts fail, then it succeeds.  `rate` < 1 selects the affected
+        subset by seeded draw (keyed by task name); `tasks` restricts
+        injection to an explicit set.  Pairs with `RetryPolicy`: with
+        `max_attempts > k` the workload deterministically completes, with
+        `max_attempts <= k` the affected tasks deterministically poison."""
+        self._first_k = int(k)
+        self._first_k_rate = float(rate)
+        self._first_k_tasks = set(tasks) if tasks is not None else None
+        return self
+
     def stragglers(self, sigma: float) -> "FaultPlan":
         self._sigma = sigma
         return self
@@ -65,11 +85,23 @@ class FaultPlan:
     def dies_silently(self, worker: str) -> bool:
         return worker in self._silent
 
-    def force_fail(self, task: str, worker: Optional[str] = None) -> bool:
+    def force_fail(self, task: str, worker: Optional[str] = None,
+                   attempt: int = 0) -> bool:
+        """Should this execution of `task` fail?  `attempt` is how many
+        times the task has already run (0 on first execution) — the
+        engine's retry machinery threads it through so `fail_first_k`
+        injection stops once a task has burned its transient budget."""
         if task in self._fail:
             return True
-        if self._fail_rate > 0.0:
-            return self._rng("fail", task).random() < self._fail_rate
+        if self._fail_rate > 0.0 \
+                and self._rng("fail", task).random() < self._fail_rate:
+            return True
+        if self._first_k > 0 and attempt < self._first_k:
+            if self._first_k_tasks is not None:
+                return task in self._first_k_tasks
+            if self._first_k_rate >= 1.0:
+                return True
+            return self._rng("first_k", task).random() < self._first_k_rate
         return False
 
     def delay_s(self, task: str, worker: Optional[str] = None) -> float:

@@ -18,6 +18,7 @@ Mapping to Fig. 2 / Table 2 messages:
 from __future__ import annotations
 
 import itertools
+import random
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
@@ -31,6 +32,7 @@ RUN_END = "run_end"
 COMPLETED = "completed"
 FAILED = "failed"
 REQUEUED = "requeued"
+RETRIED = "retried"             # transient failure re-enqueued (RetryPolicy)
 CANCELLED = "cancelled"         # client cancel before the task was stolen
 WORKER_DEAD = "worker_dead"
 RPC = "rpc"                     # one scheduler round-trip (the paper's RTT)
@@ -40,6 +42,7 @@ RPC = "rpc"                     # one scheduler round-trip (the paper's RTT)
 REQ_ENQUEUED = "req_enqueued"   # admitted to the frontend queue
 REQ_DONE = "req_done"           # response delivered (extra: latency_s, ok)
 REQ_REJECTED = "req_rejected"   # bounced by admission backpressure
+REQ_TIMEOUT = "req_timeout"     # queued past its deadline (never dispatched)
 BATCH_FORMED = "batch_formed"   # requests coalesced into one engine task
 
 TERMINAL = (COMPLETED, FAILED)
@@ -75,6 +78,54 @@ class TraceEvent:
                 f"extra={self.extra!r})")
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Transient-failure handling for task executions.
+
+    A failed execution (raise, ok=False, or an injected fault) is
+    re-enqueued with seeded-jitter exponential backoff until it has run
+    `max_attempts` times; only exhaustion marks the task failed and
+    poisons its successors.  `retry_on` (substrings matched against the
+    error repr) limits which failures count as transient — anything else
+    fails immediately.  `WorkerCrash` is never retried: a dying worker's
+    assignment is requeued by the Exit/lease machinery, not by policy.
+
+    Backoff for attempt k (1-based) is `backoff * 2**(k-1)` scaled by a
+    seeded uniform jitter in [1, 1+jitter] — keyed by (seed, task,
+    attempt), so the delay is a pure function of the plan, independent
+    of execution order (the same determinism contract as `FaultPlan`).
+    Retried tasks keep their scheduler-side assignment, so a retry costs
+    no extra protocol round-trip — only the backoff delay, which trades
+    against METG: keep `backoff` well under the task duration times
+    `max_attempts` or retries dominate the overhead budget (see
+    docs/robustness.md)."""
+    max_attempts: int = 3
+    backoff: float = 0.0
+    jitter: float = 0.5
+    seed: int = 0
+    retry_on: Optional[tuple] = None
+
+    def should_retry(self, attempt: int, error: Optional[str] = None) -> bool:
+        """Is a re-run allowed after `attempt` executions (1-based) ended
+        with `error`?"""
+        if attempt >= self.max_attempts:
+            return False
+        if self.retry_on is None:
+            return True
+        err = error or ""
+        return any(pat in err for pat in self.retry_on)
+
+    def delay_s(self, task: str, attempt: int) -> float:
+        """Seeded-jitter backoff before re-run number `attempt + 1`."""
+        if self.backoff <= 0.0:
+            return 0.0
+        base = self.backoff * (2.0 ** max(attempt - 1, 0))
+        if self.jitter <= 0.0:
+            return base
+        u = random.Random(f"{self.seed}:retry:{task}:{attempt}").random()
+        return base * (1.0 + self.jitter * u)
+
+
 @dataclass
 class EngineTask:
     """A unit of work submitted to the engine.
@@ -83,7 +134,8 @@ class EngineTask:
     by the mpi-list adapter and examples); schedulers that execute by name
     (dwork's `execute(name, meta)`, pmake's script runner) leave it None.
     `slots` is the number of pool slots the task occupies while running
-    (pmake: nodes, `nrs`); `priority` is greedy-highest-first (pmake EFT).
+    (pmake: nodes, `nrs`); `priority` is greedy-highest-first (pmake EFT);
+    `retry` overrides the engine-wide `RetryPolicy` for this task.
     """
     name: str
     fn: Optional[Callable[[], Any]] = None
@@ -91,6 +143,7 @@ class EngineTask:
     meta: dict = field(default_factory=dict)
     slots: int = 1
     priority: float = 0.0
+    retry: Optional[RetryPolicy] = None
 
 
 @dataclass(slots=True)

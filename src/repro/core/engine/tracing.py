@@ -32,8 +32,9 @@ from typing import Callable, Optional
 
 from repro.core.engine.model import (BATCH_FORMED, COMPLETED, FAILED,
                                      REQ_DONE, REQ_ENQUEUED, REQ_REJECTED,
-                                     REQUEUED, RPC, RUN_END, RUN_START,
-                                     STOLEN, TraceEvent, real_clock)
+                                     REQUEUED, RETRIED, RPC, RUN_END,
+                                     RUN_START, STOLEN, TraceEvent,
+                                     real_clock)
 from repro.core.metg import same_order
 
 
@@ -251,6 +252,7 @@ class OverheadReport:
     n_tasks: int = 0                 # tasks that reached a terminal event
     n_failed: int = 0
     n_requeued: int = 0
+    n_retried: int = 0               # transient failures re-enqueued
     workers: int = 1
     wall_s: float = 0.0
     compute_s: float = 0.0           # sum of real run durations
@@ -320,6 +322,7 @@ class OverheadReport:
             n_tasks=trace.count(COMPLETED) + trace.count(FAILED),
             n_failed=trace.count(FAILED),
             n_requeued=requeued,
+            n_retried=trace.count(RETRIED),
             workers=max(workers, 1),
             wall_s=trace.span_s(),
             compute_s=compute,
@@ -367,7 +370,8 @@ class OverheadReport:
     def summary(self) -> dict:
         out = {
             "n_tasks": self.n_tasks, "n_failed": self.n_failed,
-            "n_requeued": self.n_requeued, "workers": self.workers,
+            "n_requeued": self.n_requeued, "n_retried": self.n_retried,
+            "workers": self.workers,
             "wall_s": round(self.wall_s, 6),
             "tasks_per_s": round(self.tasks_per_s, 1),
             "per_task_overhead_us": round(self.per_task_overhead_s * 1e6, 2),

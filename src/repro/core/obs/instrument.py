@@ -97,6 +97,13 @@ def _instrument_engine(reg: MetricsRegistry, engine) -> None:
     reg.counter("repro_requeued_total",
                 "Tasks recycled by Exit or lease expiry",
                 fn=backend._requeued_total)
+    reg.counter("repro_task_retries_total",
+                "Transient task failures re-enqueued by RetryPolicy",
+                fn=lambda: engine.retries_total)
+    reg.counter("repro_journal_bytes_total",
+                "Bytes appended to the write-ahead journal",
+                fn=lambda: (engine.journal.bytes_written
+                            if engine.journal is not None else 0))
     reg.gauge("repro_ready_depth", "Tasks ready to steal, all shards",
               fn=backend.ready_depth)
     for i in range(getattr(backend, "n_shards", 1)):
@@ -122,6 +129,9 @@ def _instrument_frontend(reg: MetricsRegistry, fe, index: int = 0) -> None:
     reg.counter("repro_requests_rejected_total",
                 "Requests bounced by admission backpressure", labels=lbl,
                 fn=lambda: fe.rejected)
+    reg.counter("repro_requests_timeout_total",
+                "Requests withdrawn after queueing past their deadline",
+                labels=lbl, fn=lambda: fe.timeouts)
     reg.counter("repro_batches_total",
                 "Engine tasks the requests were coalesced into",
                 labels=lbl, fn=lambda: fe.batches)

@@ -170,11 +170,15 @@ class StatsServer:
                     row["busy_frac"] = round(min(max(frac, 0.0), 1.0), 4)
                 workers[w] = row
             tracer = eng.tracer
+            journal = eng.journal
             payload["engine"] = {
                 "live_workers": eng.live_workers(),
                 "worker_deaths": eng.worker_deaths,
                 "tasks_done": done_total,
                 "tasks_failed": eng.exec_failed,
+                "tasks_retried": eng.retries_total,
+                "journal_bytes": (journal.bytes_written
+                                  if journal is not None else 0),
                 "ready_depth": eng.backend.ready_depth(),
                 "shard_ready_depth": eng.backend.ready_depths(),
                 "trace": {"n_emitted": tracer.n_emitted,

@@ -42,6 +42,8 @@ def render(stats: dict) -> str:
          f" (deaths {eng.get('worker_deaths', 0)})"),
         (f"  ready depth {eng.get('ready_depth', 0)}"
          f"   per-shard {eng.get('shard_ready_depth', [])}"
+         f"   retried {eng.get('tasks_retried', 0)}"
+         f"   journal {eng.get('journal_bytes', 0)}B"
          f"   trace emitted {trace.get('n_emitted', 0)}"
          f" dropped {trace.get('dropped', 0)}"),
         "",

@@ -22,7 +22,8 @@ from collections import deque
 from typing import Callable, Optional
 
 from repro.core.engine.model import (BATCH_FORMED, REQ_DONE, REQ_ENQUEUED,
-                                     REQ_REJECTED, WorkerCrash, next_seq)
+                                     REQ_REJECTED, REQ_TIMEOUT, WorkerCrash,
+                                     next_seq)
 from repro.core.engine.tracing import LatencyReport, percentile
 from repro.core.metg import METGModel, pick_batch_size
 
@@ -37,10 +38,10 @@ class ServeRequest:
     worker death hit the already-set guard), waitable from any thread."""
 
     __slots__ = ("name", "payload", "meta", "t_enqueue", "t_done",
-                 "value", "ok", "error", "_event")
+                 "value", "ok", "error", "deadline", "timed_out", "_event")
 
     def __init__(self, name: str, payload, meta: Optional[dict],
-                 t_enqueue: float):
+                 t_enqueue: float, deadline: Optional[float] = None):
         self.name = name
         self.payload = payload
         self.meta = meta or {}
@@ -49,6 +50,8 @@ class ServeRequest:
         self.value = None
         self.ok = False
         self.error: Optional[str] = None
+        self.deadline = deadline       # absolute trace-clock dispatch cutoff
+        self.timed_out = False         # expired in the queue, never ran
         self._event = threading.Event()
 
     def wait(self, timeout: Optional[float] = None) -> bool:
@@ -114,6 +117,8 @@ class Frontend:
         self._force_flush = False
         self.accepted = 0
         self.rejected = 0
+        self.timeouts = 0              # queued past their deadline
+        self._n_deadlines = 0          # queued requests carrying a deadline
         self.batches = 0
         # optional serving-metrics sink (repro.core.obs.ServingMetrics):
         # observed at response delivery, beside the REQ_DONE emit
@@ -184,7 +189,15 @@ class Frontend:
                timeout: Optional[float] = None) -> ServeRequest:
         """Admit one request.  With a full queue: `policy="reject"` raises
         `AdmissionFull` immediately; `policy="block"` waits for space up
-        to `timeout` seconds (None = forever) and then raises."""
+        to `timeout` seconds (None = forever) and then raises.
+
+        `timeout` is also the request's QUEUE DEADLINE: once admitted, a
+        request still undispatched `timeout` seconds after its enqueue is
+        withdrawn and resolved with `ok=False`, `timed_out=True`, and a
+        `TimeoutError` repr in `error` (plus a `REQ_TIMEOUT` trace
+        event) — overload sheds the oldest deadline work instead of
+        serving unboundedly stale responses.  A dispatched request always
+        runs to completion; the deadline only covers queue wait."""
         tracer = self.engine.tracer
         with self._cond:
             if self._closing:
@@ -207,9 +220,13 @@ class Frontend:
             # next_seq(): engine task names are single-use forever, so
             # request/batch names must be unique across every frontend
             # that ever shares an engine (or a task server)
-            req = ServeRequest(f"__req{next_seq()}", payload, meta,
-                               t_enqueue=tracer.clock())
+            t_enq = tracer.clock()
+            req = ServeRequest(
+                f"__req{next_seq()}", payload, meta, t_enqueue=t_enq,
+                deadline=(t_enq + timeout) if timeout is not None else None)
             self._queue.append(req)
+            if req.deadline is not None:
+                self._n_deadlines += 1
             self.accepted += 1
             depth = len(self._queue)
             tracer.emit(REQ_ENQUEUED, task=req.name, depth=depth)
@@ -244,6 +261,8 @@ class Frontend:
         while True:
             with self._cond:
                 while True:
+                    if self._n_deadlines:
+                        self._expire_overdue(clock())
                     if self._closing:
                         break
                     n = len(self._queue)
@@ -260,6 +279,14 @@ class Frontend:
                         # under a ManualClock `age` may never advance;
                         # the floor keeps the wait finite either way
                         wait = max(self.max_wait_s - age, 1e-4)
+                    if self._n_deadlines:
+                        # wake at the earliest queue deadline too, so an
+                        # expiry is detected promptly even when the batch
+                        # deadline is far off
+                        earliest = min(r.deadline for r in self._queue
+                                       if r.deadline is not None)
+                        dl = max(earliest - clock(), 1e-4)
+                        wait = dl if wait is None else min(wait, dl)
                     self._cond.wait(wait)
                 self._force_flush = False
                 if not self._queue:
@@ -268,6 +295,9 @@ class Frontend:
                     continue
                 take = min(len(self._queue), max(self.target_batch(), 1))
                 batch = [self._queue.popleft() for _ in range(take)]
+                if self._n_deadlines:
+                    self._n_deadlines -= sum(1 for r in batch
+                                             if r.deadline is not None)
                 depth_after = len(self._queue)
                 self._cond.notify_all()      # space freed: wake submitters
             try:
@@ -278,6 +308,26 @@ class Frontend:
                 err = repr(e)
                 for r in batch:
                     self._resolve(r, ok=False, error=err)
+
+    def _expire_overdue(self, now: float):
+        """Withdraw every queued request past its deadline and resolve it
+        as timed out (caller holds `self._cond`)."""
+        expired = [r for r in self._queue
+                   if r.deadline is not None and now >= r.deadline]
+        if not expired:
+            return
+        dead = set(map(id, expired))
+        self._queue = deque(r for r in self._queue if id(r) not in dead)
+        self._n_deadlines -= len(expired)
+        self.timeouts += len(expired)
+        tracer = self.engine.tracer
+        for r in expired:
+            r.timed_out = True
+            tracer.emit(REQ_TIMEOUT, task=r.name,
+                        waited_s=now - r.t_enqueue)
+            self._resolve(r, ok=False, error=repr(TimeoutError(
+                f"{r.name}: queued past its deadline")))
+        self._cond.notify_all()          # space freed: wake submitters
 
     def _dispatch(self, batch: list, depth_after: int):
         tracer = self.engine.tracer
@@ -432,6 +482,7 @@ class Frontend:
             depth = len(self._queue)
         return {
             "accepted": self.accepted, "rejected": self.rejected,
+            "timeouts": self.timeouts,
             "batches": self.batches, "queue_depth": depth,
             "target_batch": self.target_batch(),
             "per_request_ewma_s": self._per_req_s,

@@ -1,0 +1,428 @@
+"""Durable control plane tests: write-ahead journal round-trips, crash
+recovery via `Engine.recover` (across transports and sharding), retry
+policies (transient recovery, exhaustion poisoning, backoff
+determinism), and the serving frontend's per-request queue deadline."""
+import json
+import os
+
+import pytest
+
+from repro.client import Client
+from repro.core.engine import (COMPLETED, FAILED, REQ_TIMEOUT, RETRIED,
+                               Engine, FaultPlan, Journal, RetryPolicy)
+from repro.core.serving import Frontend
+
+# ---------------------------------------------------------------- journal
+
+
+def test_journal_round_trip(tmp_path):
+    j = Journal(tmp_path, sync_every=1)
+    j.append_create("a", (), {"k": 1})
+    j.append_create("b", ("a",), {})
+    j.append_create("c", ("b",), {})
+    j.append_terminal("a", True)
+    j.append_terminal("b", False, "boom")
+    j.append_cancel("c")
+    j.append_requeue(2, "exit")
+    j.close()
+    st = Journal.replay(tmp_path)
+    assert st.created["a"] == ((), {"k": 1})
+    assert st.created["b"] == (("a",), {})
+    assert st.completed == {"a"}
+    assert st.failed == {"b": "boom"}
+    assert st.cancelled == {"c"}
+    assert st.requeues == 2
+    assert st.terminal() == {"a", "b", "c"}
+    assert st.pending() == []
+
+
+def test_journal_appends_are_name_deduplicated(tmp_path):
+    j = Journal(tmp_path, sync_every=1)
+    j.append_create("a", (), {})
+    j.append_terminal("a", True)
+    before = j.bytes_written
+    # duplicate create, a second terminal, and a cancel-after-terminal
+    # must all write nothing (exactly-once terminal, idempotent replay)
+    j.append_create("a", ("x",), {"other": 1})
+    j.append_terminal("a", False, "late duplicate")
+    j.append_cancel("a")
+    assert j.bytes_written == before
+    j.close()
+    st = Journal.replay(tmp_path)
+    assert st.completed == {"a"} and not st.failed and not st.cancelled
+
+
+def test_journal_tolerates_torn_tail(tmp_path):
+    j = Journal(tmp_path, sync_every=1)
+    j.append_create("a", (), {})
+    j.append_create("b", (), {})
+    j.append_terminal("a", True)
+    j.close()
+    seg = sorted(tmp_path.glob("wal-*.jsonl"))[-1]
+    with open(seg, "a", encoding="utf-8") as fh:
+        fh.write('["ok","b"')          # mid-write crash: no newline, torn
+    st = Journal.replay(tmp_path)
+    assert st.torn_lines == 1
+    assert st.completed == {"a"}       # the torn record never happened
+    assert [n for n, _, _ in st.pending()] == ["b"]
+
+
+def test_journal_checkpoint_compacts_and_rotates(tmp_path):
+    j = Journal(tmp_path, sync_every=1)
+    for i in range(10):
+        j.append_create(f"t{i}", (), {})
+    for i in range(8):
+        j.append_terminal(f"t{i}", True)
+    old_segs = set(tmp_path.glob("wal-*.jsonl"))
+    j.checkpoint()
+    assert (tmp_path / "checkpoint.json").exists()
+    live_segs = set(tmp_path.glob("wal-*.jsonl"))
+    assert not (old_segs & live_segs)          # superseded segments gone
+    doc = json.loads((tmp_path / "checkpoint.json").read_text())
+    # compaction: only non-terminal creates survive in the checkpoint
+    assert sorted(n for n, _, _ in doc["created"]) == ["t8", "t9"]
+    j.append_terminal("t8", True)              # appends continue post-rotate
+    j.close()
+    st = Journal.replay(tmp_path)
+    assert len(st.completed) == 9
+    assert [n for n, _, _ in st.pending()] == ["t9"]
+
+
+def test_journal_auto_checkpoint_threshold(tmp_path):
+    j = Journal(tmp_path, sync_every=1, checkpoint_every=5)
+    for i in range(6):
+        j.append_create(f"t{i}", (), {})
+    assert j.n_checkpoints >= 1
+    j.close()
+    st = Journal.replay(tmp_path)
+    assert len(st.created) == 6
+
+
+# ------------------------------------------------------- engine journaling
+
+
+def test_engine_journals_a_batch_run(tmp_path):
+    jdir = tmp_path / "j"
+    eng = Engine(workers=2, transport="inproc", journal=str(jdir))
+    eng.submit("a", fn=lambda: 1)
+    eng.submit("b", fn=lambda: 2, deps=["a"])
+    rep = eng.run()
+    assert rep.completed == {"a", "b"}
+    st = Journal.replay(jdir)
+    assert st.completed == {"a", "b"} and not st.pending()
+
+
+def test_engine_journals_failure_and_poison(tmp_path):
+    def execute(name, meta):
+        if name == "bad":
+            raise ValueError("boom")
+        return True
+
+    eng = Engine(workers=1, transport="inproc", journal=str(tmp_path))
+    eng.submit("bad")
+    eng.submit("child", deps=["bad"])
+    eng.run(execute)
+    st = Journal.replay(tmp_path)
+    assert set(st.failed) == {"bad", "child"}
+    assert "boom" in st.failed["bad"]
+    assert "bad" in st.failed["child"]   # poison records name the culprit
+
+
+def test_resident_drain_makes_journal_durable(tmp_path):
+    eng = Engine(workers=2, transport="thread", resident=True,
+                 journal=str(tmp_path), on_result=lambda *a: None)
+    eng.start()
+    for i in range(20):
+        eng.submit(f"t{i}", fn=lambda i=i: i)
+    assert eng.drain(10.0)
+    # drained => durable: replay BEFORE shutdown already sees everything
+    st = Journal.replay(tmp_path)
+    assert len(st.completed) == 20
+    eng.shutdown()
+
+
+# --------------------------------------------------------------- recovery
+
+RECOVERY_MATRIX = [("inproc", 1), ("thread", 1), ("tree", 1), ("tree", 2)]
+
+
+@pytest.mark.parametrize("transport,shards", RECOVERY_MATRIX)
+def test_recover_completes_a_crashed_run(tmp_path, transport, shards):
+    """Phase 1 crashes mid-DAG (every worker dies -> stall); recovery
+    re-runs exactly the unfinished tasks and completes the workload with
+    zero loss and zero double-completions."""
+    n = 24
+    jdir = str(tmp_path / "j")
+    phase1: list = []
+    phase2: list = []
+
+    def make_execute(sink):
+        def execute(name, meta):
+            sink.append(name)
+            return True
+        return execute
+
+    faults = (FaultPlan(seed=2).kill_worker("w0", after_steals=3)
+              .kill_worker("w1", after_steals=3))
+    eng = Engine(workers=2, transport=transport, shards=shards,
+                 journal=jdir, faults=faults, max_idle_rounds=50)
+    for i in range(n):
+        deps = [f"t{i-1}"] if i % 4 else []      # chains of 4, 6 roots
+        eng.submit(f"t{i}", deps=deps, meta={"i": i})
+    rep1 = eng.run(make_execute(phase1))
+    assert rep1.stalled                          # the simulated crash
+    done1 = set(rep1.completed)
+    assert 0 < len(done1) < n                    # genuinely mid-DAG
+
+    st = Journal.replay(jdir)
+    assert st.completed == done1                 # journal saw every terminal
+    assert len(st.pending()) == n - len(done1)
+
+    eng2 = Engine.recover(jdir, workers=2, transport=transport,
+                          shards=shards)
+    rep2 = eng2.run(make_execute(phase2))
+    assert not rep2.stalled
+    # zero loss, zero double-completion
+    assert set(phase2) == {f"t{i}" for i in range(n)} - done1
+    assert not (set(phase2) & set(phase1))
+    st2 = Journal.replay(jdir)
+    assert len(st2.completed) == n and not st2.pending()
+
+
+def test_recover_preserves_exactly_once_on_result(tmp_path):
+    """A recovered resident session: `on_result` fires once per pending
+    task and NEVER for tasks that completed before the crash."""
+    jdir = str(tmp_path)
+    j = Journal(jdir, sync_every=1)
+    j.append_create("a", (), {})
+    j.append_create("b", ("a",), {})
+    j.append_create("c", ("b",), {})
+    j.append_terminal("a", True)
+    j.close()
+    fired: list = []
+    eng = Engine.recover(jdir, workers=2, transport="thread", resident=True,
+                         on_result=lambda name, ok, res, err:
+                         fired.append((name, ok)))
+    eng.start(lambda name, meta: True)
+    assert eng.drain(10.0)
+    eng.shutdown()
+    assert sorted(fired) == [("b", True), ("c", True)]
+
+
+def test_recover_poisons_pending_task_with_failed_dep(tmp_path):
+    jdir = str(tmp_path)
+    j = Journal(jdir, sync_every=1)
+    j.append_create("bad", (), {})
+    j.append_create("child", ("bad",), {})
+    j.append_create("ok", (), {})
+    j.append_terminal("bad", False, "died before the crash")
+    j.close()
+    ran: list = []
+    eng = Engine.recover(jdir, workers=1, transport="inproc")
+    rep = eng.run(lambda name, meta: ran.append(name) or True)
+    assert ran == ["ok"]                 # the poisoned child never runs
+    assert rep.completed == {"ok"}
+    st = Journal.replay(jdir)
+    assert "child" in st.failed and "dependency bad failed" in \
+        st.failed["child"]
+
+
+def test_recovered_engine_is_itself_recoverable(tmp_path):
+    """Appends continue in the same directory: crash the recovery run and
+    recover again."""
+    jdir = str(tmp_path)
+    j = Journal(jdir, sync_every=1)
+    for i in range(8):
+        j.append_create(f"t{i}", (), {})
+    j.append_terminal("t0", True)
+    j.close()
+    faults = FaultPlan(seed=1).kill_worker("w0", after_steals=2)
+    eng = Engine.recover(jdir, workers=1, transport="inproc", faults=faults,
+                         max_idle_rounds=50)
+    rep = eng.run(lambda name, meta: True)
+    assert rep.stalled
+    eng2 = Engine.recover(jdir, workers=2, transport="inproc")
+    rep2 = eng2.run(lambda name, meta: True)
+    assert not rep2.stalled
+    st = Journal.replay(jdir)
+    assert len(st.completed) == 8 and not st.pending()
+
+
+# ----------------------------------------------------------------- retry
+
+
+@pytest.mark.parametrize("transport", ["inproc", "thread"])
+def test_transient_failures_recover_within_budget(tmp_path, transport):
+    faults = FaultPlan(seed=3).fail_first_k(2)
+    eng = Engine(workers=2, transport=transport, faults=faults,
+                 retry=RetryPolicy(max_attempts=3, backoff=0.0))
+    for i in range(8):
+        eng.submit(f"t{i}", fn=lambda i=i: i)
+    rep = eng.run()
+    assert len(rep.completed) == 8 and not rep.stalled
+    assert eng.retries_total == 16               # 2 transient fails per task
+    retried = [e for e in rep.trace.of(RETRIED)]
+    assert len(retried) == 16
+    assert {e.extra["attempt"] for e in retried} == {1, 2}
+    assert rep.overhead().n_retried == 16
+
+
+def test_retry_exhaustion_poisons_dependents():
+    faults = FaultPlan().fail_first_k(5)         # outlives the budget
+    eng = Engine(workers=1, transport="inproc", faults=faults,
+                 retry=RetryPolicy(max_attempts=2))
+    eng.submit("x", fn=lambda: 1)
+    eng.submit("child", fn=lambda: 2, deps=["x"])
+    rep = eng.run()
+    assert not rep.results["x"].ok
+    assert "child" in rep.errors                 # poisoned, never ran
+    assert eng.retries_total == 1                # attempts 1->2, then fail
+    assert rep.trace.count(FAILED) == 1          # x; child poisons serverside
+
+
+def test_per_task_retry_overrides_engine_default():
+    faults = FaultPlan().fail_first_k(1, tasks=["flaky", "doomed"])
+    eng = Engine(workers=1, transport="inproc", faults=faults)  # no default
+    eng.submit("flaky", fn=lambda: "v",
+               retry=RetryPolicy(max_attempts=3))
+    eng.submit("doomed", fn=lambda: "w")         # no policy: fails at once
+    rep = eng.run()
+    assert rep.results["flaky"].ok
+    assert not rep.results["doomed"].ok
+    assert eng.retries_total == 1
+
+
+def test_retry_on_filters_error_classes():
+    def execute(name, meta):
+        raise ValueError("permanent config error")
+
+    eng = Engine(workers=1, transport="inproc",
+                 retry=RetryPolicy(max_attempts=5,
+                                   retry_on=("TimeoutError", "ConnectionError")))
+    eng.submit("t")
+    rep = eng.run(execute)
+    assert not rep.results["t"].ok
+    assert eng.retries_total == 0                # non-matching: no retry
+
+
+def test_backoff_is_a_seeded_pure_function():
+    pol = RetryPolicy(max_attempts=4, backoff=0.1, jitter=0.5, seed=7)
+    d1 = [pol.delay_s("task-a", k) for k in (1, 2, 3)]
+    d2 = [pol.delay_s("task-a", k) for k in (1, 2, 3)]
+    assert d1 == d2                              # deterministic
+    assert d1[0] < d1[1] < d1[2]                 # exponential growth
+    assert all(0.1 * 2 ** (k - 1) <= d <= 0.1 * 2 ** (k - 1) * 1.5
+               for k, d in zip((1, 2, 3), d1))
+    assert pol.delay_s("task-b", 1) != d1[0]     # keyed per task
+
+
+def test_backoff_delay_is_honoured_without_stalling():
+    faults = FaultPlan(seed=9).fail_first_k(1)
+    eng = Engine(workers=2, transport="thread", faults=faults,
+                 retry=RetryPolicy(max_attempts=2, backoff=0.02,
+                                   jitter=0.0, seed=1))
+    for i in range(4):
+        eng.submit(f"t{i}", fn=lambda i=i: i)
+    rep = eng.run()
+    assert len(rep.completed) == 4 and not rep.stalled
+    assert rep.wall_s >= 0.02                    # the backoff really waited
+
+
+def test_worker_crash_is_never_retried():
+    """WorkerCrash requeues via Exit (n_requeued), not via RetryPolicy."""
+    from repro.core.engine import WorkerCrash
+
+    hits: dict = {}
+
+    def execute(name, meta):
+        if name == "t0" and not hits.get("t0"):
+            hits["t0"] = 1
+            raise WorkerCrash("die")
+        return True
+
+    eng = Engine(workers=2, transport="inproc",
+                 retry=RetryPolicy(max_attempts=5))
+    for i in range(6):
+        eng.submit(f"t{i}")
+    rep = eng.run(execute)
+    assert len(rep.completed) == 6
+    assert eng.retries_total == 0
+    assert rep.overhead().n_requeued >= 1
+
+
+# ------------------------------------------------------------ client layer
+
+
+def test_client_retry_and_journal_dir(tmp_path):
+    jdir = str(tmp_path / "wal")
+    attempts: dict = {}
+
+    def flaky(x):
+        attempts[x] = attempts.get(x, 0) + 1
+        if attempts[x] == 1:
+            raise ConnectionError("transient")
+        return x * 10
+
+    with Client(workers=2, transport="thread", journal_dir=jdir,
+                retry=RetryPolicy(max_attempts=3, backoff=0.0)) as c:
+        futs = [c.submit(flaky, i) for i in range(5)]
+        assert c.gather(futs) == [0, 10, 20, 30, 40]
+        assert c.engine.retries_total == 5
+    st = Journal.replay(jdir)
+    assert len(st.completed) == 5 and not st.pending()
+
+
+def test_client_per_submit_retry_exhaustion_raises():
+    def always(x):
+        raise ConnectionError("still down")
+
+    with Client(workers=1, transport="inproc") as c:
+        f = c.submit(always, 1, retry=RetryPolicy(max_attempts=2,
+                                                  backoff=0.0))
+        # the original in-process exception is delivered, post-exhaustion
+        with pytest.raises(ConnectionError):
+            f.result(timeout=10.0)
+        assert c.engine.retries_total == 1
+
+
+# -------------------------------------------------------- frontend deadline
+
+
+def test_frontend_queue_deadline_times_out():
+    eng = Engine(workers=2, transport="thread", resident=True)
+    eng.start()
+    # huge batch target + long max_wait: queued requests sit until flushed
+    fe = Frontend(eng, lambda ps: [p * 2 for p in ps], max_batch=64,
+                  max_wait_s=5.0, per_request_s0=1e-6)
+    fe.start()
+    try:
+        doomed = fe.submit(1, timeout=0.05)
+        kept = fe.submit(2)                       # no deadline
+        assert doomed.wait(5.0)
+        assert doomed.timed_out and not doomed.ok
+        assert "TimeoutError" in doomed.error
+        assert not kept.done
+        fe.flush()
+        assert kept.wait(5.0) and kept.ok and kept.value == 4
+        assert fe.stats()["timeouts"] == 1
+        assert fe.engine.tracer.count(REQ_TIMEOUT) == 1
+        # the timed-out request never reached a batch
+        assert fe.accepted == 2
+    finally:
+        fe.close()
+        eng.shutdown()
+
+
+def test_frontend_dispatched_requests_ignore_deadline():
+    eng = Engine(workers=2, transport="thread", resident=True)
+    eng.start()
+    fe = Frontend(eng, lambda ps: [p + 1 for p in ps],
+                  max_batch=1, max_wait_s=0.001)  # dispatch immediately
+    fe.start()
+    try:
+        r = fe.submit(41, timeout=30.0)
+        assert r.wait(5.0) and r.ok and r.value == 42
+        assert not r.timed_out and fe.stats()["timeouts"] == 0
+    finally:
+        fe.close()
+        eng.shutdown()
