@@ -10,6 +10,11 @@ slowed-down client.  The run doubles as the subsystem's acceptance demo:
 mid-stream (seeded FaultPlan), zero requests lost, p50/p95/p99 latency
 reported from the trace.
 
+The load is two-tenant mixed: requests alternate between `tenant-a` and
+`tenant-b` labels, and the report carries per-tenant p50/p95/p99 in its
+`tenants` section (reporting only — groundwork for a fairness gate; the
+--check gate still compares the aggregate percentiles).
+
 Modes:
     (default)   quick run -> BENCH_serving.json (+ stdout)
     --full      5000 requests instead of 1000
@@ -36,6 +41,7 @@ MEAN_GAP_S = 150e-6            # ~6.7k req/s offered load
 MAX_WAIT_S = 0.002             # frontend deadline (bounds p50 from below)
 MAX_BATCH = 32
 KILL_AFTER_STEALS = 5          # w1 dies once it has stolen 5 batch tasks
+TENANTS = ("tenant-a", "tenant-b")   # mixed load alternates between these
 # latency tolerances are looser than the engine-overhead gate (1.25x):
 # tail percentiles on a shared runner are far noisier than best-of means
 CHECK_P95_TOLERANCE = 2.0
@@ -77,7 +83,9 @@ def run_once(n: int = 1000, *, seed: int = 0, kill: bool = True) -> dict:
             if remaining <= 0:
                 break
             time.sleep(remaining if remaining > 1e-3 else 0)
-        reqs.append(fe.submit(i))
+        # two-tenant mixed load: deterministic alternation, so both
+        # tenants see the same seeded arrival process interleaved
+        reqs.append(fe.submit(i, tenant=TENANTS[i % 2]))
     lost = 0
     for r in reqs:
         if not r.wait(60):
@@ -106,6 +114,8 @@ def run_once(n: int = 1000, *, seed: int = 0, kill: bool = True) -> dict:
     }
     if lost or bad:
         raise AssertionError(f"request loss/corruption: {out}")
+    if sorted(out.get("tenants", ())) != sorted(TENANTS):
+        raise AssertionError(f"per-tenant slices missing: {out.keys()}")
     if kill and (out["workers_killed"] != 1 or requeued < 1):
         raise AssertionError(f"injected kill did not bite: {out}")
     return out

@@ -1,13 +1,16 @@
 """Observability demo: a resident client under mixed load with the live
 stats endpoint up, scraped while the engine runs, and the whole session
-exported as a Perfetto-loadable Chrome trace at exit.
+exported as a Perfetto-loadable Chrome trace + a critical-path explain
+report at exit.
 
     PYTHONPATH=src python examples/obs_demo.py
     PYTHONPATH=src python examples/obs_demo.py --port 8787   # then, elsewhere:
     PYTHONPATH=src python -m repro.core.obs.top --url http://127.0.0.1:8787
 
-CI runs this with --stats-out/--trace-out and uploads both files as
-workflow artifacts, so every run leaves an inspectable timeline.
+CI runs this with --stats-out/--trace-out/--explain-out and uploads the
+files as workflow artifacts, so every run leaves an inspectable timeline
+AND its explanation (which chain of tasks gated the makespan, scheduler
+vs compute split).
 """
 import argparse
 import json
@@ -30,6 +33,8 @@ def main(argv=None):
                     help="write the final /stats JSON here")
     ap.add_argument("--trace-out", default=None,
                     help="write the Chrome trace (.trace.json) here")
+    ap.add_argument("--explain-out", default=None,
+                    help="write the critical-path explain report here")
     args = ap.parse_args(argv)
 
     with Client(scheduler="dwork", workers=args.workers, shards=2) as c:
@@ -37,10 +42,14 @@ def main(argv=None):
         print(f"live stats at {srv.url}/stats  (/health, /metrics; "
               f"dashboard: python -m repro.core.obs.top --url {srv.url})")
 
-        # mixed load: plain futures + a serving frontend, concurrently
+        # mixed load: plain futures + a serving frontend, concurrently;
+        # requests alternate tenant labels so the per-tenant slices show
+        # up in /stats and the tenant-labelled latency histograms
         fe = c.serve(lambda ps: [p * 2 for p in ps], max_wait_s=0.002)
+        fe.snapshot()                    # arm windowed tenant monitoring
         fs = [c.submit(lambda x=x: x * x) for x in range(args.futures)]
-        reqs = [fe.submit(i) for i in range(args.requests)]
+        reqs = [fe.submit(i, tenant=("blue" if i % 2 else "green"))
+                for i in range(args.requests)]
 
         # scrape mid-flight: the engine keeps running under the GET
         time.sleep(0.05)
@@ -70,10 +79,33 @@ def main(argv=None):
                 json.dump(stats, f, indent=1, default=str)
             print(f"wrote {args.stats_out}")
 
+        # per-tenant accounting from the trace (the windowed /stats
+        # slices cover scrape-to-scrape; this is the whole session)
+        by_t = c.engine.tracer.latency_report().by_tenant or {}
+        print("tenants : " + ", ".join(
+            f"{t}: {r.n_requests} req p95 {r.p95_s * 1e3:.2f}ms"
+            for t, r in sorted(by_t.items())))
+
+        # the critical-path explanation of the session so far: which
+        # chain gated the makespan, scheduler vs compute split
+        cp = c.report().explain()
+        print(f"explain : {len(cp.path)} tasks gate the "
+              f"{cp.makespan_s * 1e3:.1f}ms makespan "
+              f"(scheduler {cp.sched_frac:.0%}, "
+              f"concurrency mean {cp.concurrency_mean:.2f} "
+              f"peak {cp.concurrency_peak})")
+        if args.explain_out:
+            from repro.core.obs.explain import render
+            with open(args.explain_out, "w") as f:
+                f.write(render(cp) + "\n")
+            print(f"wrote {args.explain_out}")
+
         report = c.close()
     if args.trace_out:
-        report.trace.to_chrome_trace(args.trace_out)
-        print(f"wrote {args.trace_out} (open in https://ui.perfetto.dev)")
+        report.trace.to_chrome_trace(
+            args.trace_out, critical_path=cp.path)
+        print(f"wrote {args.trace_out} (open in https://ui.perfetto.dev — "
+              f"the 'critical path' lane is the makespan chain)")
     return 0
 
 

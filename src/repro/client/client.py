@@ -150,7 +150,8 @@ class Client:
     # ------------------------------------------------------------- submit
     def submit(self, fn: Callable, *args, key: Optional[str] = None,
                priority: float = 0.0, slots: int = 1, deps=(),
-               retry=None, **kwargs) -> Future:
+               retry=None, tenant: Optional[str] = None,
+               **kwargs) -> Future:
         """Schedule `fn(*args, **kwargs)` and return its `Future`.
 
         Any `Future` among the arguments is lifted into an engine
@@ -165,9 +166,18 @@ class Client:
         client-wide `retry=` passed at construction); transient failures
         re-enqueue with backoff instead of failing the future.
 
-        NOTE: `key`, `priority`, `slots`, `deps`, and `retry` are
-        reserved by this signature (per the scheduler API) and are NOT
-        forwarded to `fn` — to call a function with a same-named
+        `tenant` labels the task for per-tenant observability: the label
+        lands in the task's engine `meta` (the same slot the serving
+        layer uses) so accounting tools can slice by tenant.  Purely
+        observational — scheduling never looks at it.  (Serving-path
+        requests take the label via `Frontend.submit(tenant=)`, which
+        also threads it through REQ_* trace events, windowed
+        `LatencyReport.by_tenant` slices, and the tenant-labelled
+        request-latency histogram.)
+
+        NOTE: `key`, `priority`, `slots`, `deps`, `retry`, and `tenant`
+        are reserved by this signature (per the scheduler API) and are
+        NOT forwarded to `fn` — to call a function with a same-named
         keyword, wrap it: `c.submit(functools.partial(fn, priority=3),
         x)`."""
         self._check_open()
@@ -188,9 +198,13 @@ class Client:
             # the final report and keeps the raw dispatch hot path)
             self._live_results_needed = True
         fut = Future(self, name)
+        engine_kw = {}
+        if tenant is not None:
+            engine_kw["meta"] = {"tenant": tenant}
         return self._submit(fut, fn=_make_call(fut, fn, args, kwargs),
                             deps=dep_names, priority=priority,
-                            slots=max(int(slots), 1), retry=retry)
+                            slots=max(int(slots), 1), retry=retry,
+                            **engine_kw)
 
     def submit_task(self, name: str, *, deps=(), meta: Optional[dict] = None,
                     priority: float = 0.0, slots: int = 1,

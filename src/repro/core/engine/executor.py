@@ -245,12 +245,16 @@ class Engine:
             self.backend.create(name, deps=task.deps, meta=task.meta)
             if self.journal is not None:
                 self.journal.append_create(name, task.deps, task.meta)
-            self.tracer.emit(CREATED, task=name)
             if task.deps:
+                # deps ride the CREATED event so a saved/exported trace is
+                # self-describing for critical-path analysis; dep-less
+                # tasks (the dispatch hot path) keep the bare emit
+                self.tracer.emit(CREATED, task=name, deps=list(task.deps))
                 self._waiting[name] = set(task.deps)
                 for d in task.deps:
                     self._succs.setdefault(d, []).append(name)
             else:
+                self.tracer.emit(CREATED, task=name)
                 self.tracer.emit(READY, task=name)
             return task
         # resident: mailbox enqueue.  The dispatch loop ingests creates in
@@ -303,7 +307,7 @@ class Engine:
                         self._terminal.add(name)
                         self._failed.add(name)
                         why = f"dependency {failed_dep} failed"
-                        emit(CREATED, task=name)
+                        emit(CREATED, task=name, deps=list(task.deps))
                         emit(FAILED, task=name, error=why)
                         j = self.journal
                         if j is not None:
@@ -333,7 +337,10 @@ class Engine:
             for task, ready in creates:
                 if j is not None:
                     j.append_create(task.name, task.deps, task.meta)
-                emit(CREATED, task=task.name)
+                if task.deps:
+                    emit(CREATED, task=task.name, deps=list(task.deps))
+                else:
+                    emit(CREATED, task=task.name)
                 if ready:
                     emit(READY, task=task.name)
         for note in pending:
@@ -548,6 +555,15 @@ class Engine:
         counter the windowed tasks/s rate diffs, not the terminal-name
         count (`OverheadReport.n_tasks`)."""
         return sum(st[0] for st in list(self._wstats.values()))
+
+    def dep_table(self) -> dict:
+        """Monitoring snapshot of the dependency graph: task name ->
+        tuple of dependency names, for every registered task that has
+        dependencies.  Read under the GIL (approximate while the loop
+        runs, like `worker_stats`); the critical-path analyzer
+        (`repro.core.obs.critical_path`) joins it against the trace —
+        exported traces carry the same edges on their CREATED events."""
+        return {n: t.deps for n, t in list(self.tasks.items()) if t.deps}
 
     def worker_stats(self) -> dict:
         """Monitoring snapshot: worker -> {done, busy_s, alive}.  Read

@@ -25,6 +25,7 @@ order of magnitude — the engine's validation loop for the models.
 """
 from __future__ import annotations
 
+import json
 import threading
 from collections import deque
 from dataclasses import dataclass, field
@@ -138,15 +139,62 @@ class TraceRecorder:
     def latency_report(self) -> "LatencyReport":
         return LatencyReport.from_trace(self)
 
-    def to_chrome_trace(self, path: Optional[str] = None) -> dict:
+    def to_chrome_trace(self, path: Optional[str] = None, *,
+                        critical_path: Optional[list] = None) -> dict:
         """Export the event log as a Chrome Trace Event Format document
         (Perfetto / `chrome://tracing` loadable): one lane per worker
         with task spans, rpc and `hop:*` lanes, serving requests as
-        async spans.  Returns the document; with `path`, also writes it
-        as JSON (conventional suffix `.trace.json`).  See
-        `repro.core.obs.chrome_trace`."""
+        async spans.  `critical_path` (a list of task names, e.g.
+        `CriticalPathReport.path`) adds a dedicated lane plus flow
+        arrows linking the path's executions.  Returns the document;
+        with `path`, also writes it as JSON (conventional suffix
+        `.trace.json`).  See `repro.core.obs.chrome_trace`."""
         from repro.core.obs.chrome_trace import to_chrome_trace
-        return to_chrome_trace(self, path)
+        return to_chrome_trace(self, path, critical_path=critical_path)
+
+    # -------------------------------------------------------- persistence
+    def save(self, path: str) -> int:
+        """Write the event log as JSON Lines: one header object (recorder
+        counters), then one `[t, event, task, worker, extra]` array per
+        event.  The format round-trips through `TraceRecorder.load`, so a
+        trace captured in one process can be analyzed offline
+        (`python -m repro.core.obs.explain <path>`).  Returns the number
+        of events written."""
+        with self._lock:
+            events = list(self.events)
+        with open(path, "w") as f:
+            json.dump({"format": "repro-trace", "version": 1,
+                       "n_emitted": self.n_emitted,
+                       "dropped": max(0, self.n_emitted - len(events)),
+                       "rpc_seen": self.rpc_seen,
+                       "rpc_sample": self.rpc_sample}, f)
+            f.write("\n")
+            for e in events:
+                json.dump([e.t, e.event, e.task, e.worker,
+                           e.extra if e.extra else None], f)
+                f.write("\n")
+        return len(events)
+
+    @classmethod
+    def load(cls, path: str) -> "TraceRecorder":
+        """Rebuild a recorder from a `save()`d JSONL file (unbounded —
+        the ring, if any, was applied at capture time; eviction counts
+        are restored so reports stay honest about truncation)."""
+        tr = cls()
+        with open(path) as f:
+            header = json.loads(f.readline())
+            if header.get("format") != "repro-trace":
+                raise ValueError(f"{path}: not a repro trace "
+                                 "(missing JSONL header)")
+            for line in f:
+                if not line.strip():
+                    continue
+                t, event, task, worker, extra = json.loads(line)
+                tr.events.append(TraceEvent(t, event, task, worker, extra))
+        tr.n_emitted = int(header.get("n_emitted", len(tr.events)))
+        tr.rpc_seen = int(header.get("rpc_seen", 0))
+        tr.rpc_sample = max(int(header.get("rpc_sample", 1)), 1)
+        return tr
 
 
 @dataclass
@@ -173,6 +221,24 @@ class LatencyReport:
     # whole-trace reports leave both at 0
     t_s: float = 0.0                 # snapshot time on the trace clock
     window_s: float = 0.0            # span the snapshot covers
+    # per-tenant slices: tenant label -> LatencyReport (latency fields
+    # only), present when any request carried a tenant= label
+    by_tenant: Optional[dict] = None
+
+    @classmethod
+    def _tenant_slice(cls, lats: list, n_failed: int = 0,
+                      n_rejected: int = 0) -> "LatencyReport":
+        """A latency-only sub-report for one tenant's sorted latencies."""
+        return cls(
+            n_requests=len(lats),
+            n_failed=n_failed,
+            n_rejected=n_rejected,
+            mean_s=(sum(lats) / len(lats)) if lats else 0.0,
+            p50_s=percentile(lats, 0.50),
+            p95_s=percentile(lats, 0.95),
+            p99_s=percentile(lats, 0.99),
+            max_s=lats[-1] if lats else 0.0,
+        )
 
     @classmethod
     def from_trace(cls, trace: "TraceRecorder") -> "LatencyReport":
@@ -181,6 +247,7 @@ class LatencyReport:
         n_failed = n_rejected = n_batches = n_incomplete = 0
         batched = 0
         wait_s = 0.0
+        tenant_lats: dict = {}       # tenant -> [lats, n_failed, n_rejected]
         with trace._lock:
             events = list(trace.events)
         for e in events:
@@ -195,8 +262,15 @@ class LatencyReport:
                     n_incomplete += 1
                     continue
                 lats.append(lat)
-                if not e.extra.get("ok", True):
+                ok = e.extra.get("ok", True)
+                if not ok:
                     n_failed += 1
+                tenant = e.extra.get("tenant")
+                if tenant is not None:
+                    row = tenant_lats.setdefault(tenant, [[], 0, 0])
+                    row[0].append(lat)
+                    if not ok:
+                        row[1] += 1
             elif ev == REQ_ENQUEUED:
                 depths.append(e.extra.get("depth", 0))
             elif ev == BATCH_FORMED:
@@ -206,8 +280,18 @@ class LatencyReport:
                 depths.append(e.extra.get("depth", 0))
             elif ev == REQ_REJECTED:
                 n_rejected += 1
+                tenant = e.extra.get("tenant")
+                if tenant is not None:
+                    tenant_lats.setdefault(tenant, [[], 0, 0])[2] += 1
         lats.sort()
+        by_tenant = None
+        if tenant_lats:
+            by_tenant = {}
+            for tenant, (tl, tf, tr) in sorted(tenant_lats.items()):
+                tl.sort()
+                by_tenant[tenant] = cls._tenant_slice(tl, tf, tr)
         return cls(
+            by_tenant=by_tenant,
             n_requests=len(lats),
             n_incomplete=n_incomplete,
             n_failed=n_failed,
@@ -243,6 +327,20 @@ class LatencyReport:
             **({"t_s": round(self.t_s, 3),
                 "window_s": round(self.window_s, 3)}
                if self.window_s else {}),
+            **({"tenants": {
+                tenant: {
+                    "n_requests": rep.n_requests,
+                    "n_failed": rep.n_failed,
+                    "n_rejected": rep.n_rejected,
+                    "latency_ms": {
+                        "mean": round(rep.mean_s * 1e3, 3),
+                        "p50": round(rep.p50_s * 1e3, 3),
+                        "p95": round(rep.p95_s * 1e3, 3),
+                        "p99": round(rep.p99_s * 1e3, 3),
+                        "max": round(rep.max_s * 1e3, 3),
+                    },
+                } for tenant, rep in self.by_tenant.items()}}
+               if self.by_tenant else {}),
         }
 
 
@@ -267,6 +365,10 @@ class OverheadReport:
     # only — dropped > 0 says every count above under-reports
     n_emitted: int = 0               # events the recorder ever emitted
     dropped: int = 0                 # events evicted before this report
+    # the source recorder, kept so `explain()` can run the post-hoc
+    # critical-path analysis without re-plumbing; None for hand-built
+    # reports (excluded from summary())
+    trace: Optional[TraceRecorder] = None
 
     @classmethod
     def from_trace(cls, trace: TraceRecorder, workers: int = 1
@@ -318,6 +420,7 @@ class OverheadReport:
         if lat.n_requests == 0 and lat.n_rejected == 0:
             lat = None                    # batch mode: no request stream
         return cls(
+            trace=trace,
             requests=lat,
             n_tasks=trace.count(COMPLETED) + trace.count(FAILED),
             n_failed=trace.count(FAILED),
@@ -366,6 +469,22 @@ class OverheadReport:
     def empirical_metg(self) -> float:
         """Task duration at which measured overhead = compute (50% eff)."""
         return self.per_task_overhead_s
+
+    def explain(self, **kw) -> "object":
+        """Post-hoc critical-path analysis over the source trace: *why*
+        did this run take `wall_s` — which chain of tasks gated the
+        makespan, and how much of it was scheduler time (dep-wait +
+        queue + dispatch + notify) vs compute?  Returns a
+        `repro.core.obs.critical_path.CriticalPathReport`; keyword
+        arguments (`deps=`, `scheduler=`, `steal_n=`, ...) are forwarded
+        to `CriticalPathReport.from_trace`.  Strictly an analysis pass —
+        nothing here runs on the dispatch hot path."""
+        if self.trace is None:
+            raise ValueError("explain() needs the source trace; this "
+                             "report was built without one")
+        from repro.core.obs.critical_path import CriticalPathReport
+        kw.setdefault("workers", self.workers)
+        return CriticalPathReport.from_trace(self.trace, **kw)
 
     def summary(self) -> dict:
         out = {

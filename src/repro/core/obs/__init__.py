@@ -13,12 +13,19 @@ Three pieces, designed to compose (see `docs/observability.md`):
     `top`          — `python -m repro.core.obs.top` text dashboard
   * `chrome_trace` — `to_chrome_trace`: the `TraceRecorder` event log
                      as a Perfetto-loadable timeline (also available as
-                     `TraceRecorder.to_chrome_trace(path)`)
+                     `TraceRecorder.to_chrome_trace(path)`), with an
+                     optional critical-path lane + flow arrows
+  * `critical_path` — `CriticalPathReport`: post-hoc causal analysis of
+                     a run (makespan decomposition, concurrency vs the
+                     METG-law ideal, idle gaps, stragglers);
+    `explain`      — `python -m repro.core.obs.explain <trace>` CLI and
+                     the text renderer over it
 
 The one-call front door is `Client.stats_server()`; everything here
 also works piecemeal on a bare `Engine`.
 """
 from repro.core.obs.chrome_trace import to_chrome_trace
+from repro.core.obs.critical_path import CriticalPathReport
 from repro.core.obs.instrument import (RPC_BUCKETS, RpcMetrics,
                                        ServingMetrics, instrument)
 from repro.core.obs.metrics import (LATENCY_BUCKETS, Counter, Gauge,
@@ -29,5 +36,5 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "LATENCY_BUCKETS", "RPC_BUCKETS",
     "RpcMetrics", "ServingMetrics", "instrument",
-    "StatsServer", "to_chrome_trace",
+    "StatsServer", "to_chrome_trace", "CriticalPathReport",
 ]

@@ -16,11 +16,19 @@ Lane layout (one `tid` per lane, stable across exports):
     request name (overlapping freely), with batch formations and
     rejections as instants.  A REQ_DONE whose enqueue partner was
     evicted from the ring buffer gets its begin synthesized at
-    `t - latency_s`; one without `latency_s` at all is skipped.
+    `t - latency_s`, clamped at the trace epoch (a request older than
+    the retained window must not render at a negative timestamp); one
+    without `latency_s` at all is skipped.
+  * with `critical_path=` (a list of task names, e.g.
+    `CriticalPathReport.path`): a dedicated `critical path` lane at the
+    top repeating the path's final executions in order, plus flow
+    arrows (`s`/`f` pairs) linking each path task's run to the next
+    across the worker lanes — the makespan chain, scrubbed visually.
 
-`to_chrome_trace(trace, path=None)` returns the document as a dict and,
-with `path`, writes it as JSON (the conventional suffix is
-`.trace.json`).  `TraceRecorder.to_chrome_trace` forwards here.
+`to_chrome_trace(trace, path=None, critical_path=None)` returns the
+document as a dict and, with `path`, writes it as JSON (the
+conventional suffix is `.trace.json`).  `TraceRecorder.to_chrome_trace`
+forwards here.
 """
 from __future__ import annotations
 
@@ -42,7 +50,8 @@ def _worker_key(w: str):
     return (1, 0, str(w))
 
 
-def to_chrome_trace(trace, path: Optional[str] = None) -> dict:
+def to_chrome_trace(trace, path: Optional[str] = None, *,
+                    critical_path: Optional[list] = None) -> dict:
     with trace._lock:
         events = list(trace.events)
     t0 = min((e.t for e in events), default=0.0)
@@ -50,6 +59,9 @@ def to_chrome_trace(trace, path: Optional[str] = None) -> dict:
     def us(t: float) -> float:
         return (t - t0) * 1e6
 
+    cp = list(critical_path or ())
+    cp_set = set(cp)
+    cp_runs: dict = {}           # path task -> last (ts, dur, worker) run
     spans: list = []             # events carrying a symbolic lane key
     open_start: dict = {}        # task -> t (sequential pairing, as in
     req_open: set = set()        #          OverheadReport.from_trace)
@@ -67,6 +79,12 @@ def to_chrome_trace(trace, path: Optional[str] = None) -> dict:
                 spans.append((("w", e.worker), {
                     "ph": "X", "name": e.task, "cat": "task",
                     "ts": us(ts), "dur": max(us(e.t) - us(ts), 0.0)}))
+                if e.task in cp_set:
+                    # last execution wins: that is the one the critical
+                    # path's decomposition attributes
+                    cp_runs[e.task] = (us(ts),
+                                       max(us(e.t) - us(ts), 0.0),
+                                       e.worker)
         elif ev == RPC:
             op = e.extra.get("op", "?")
             dt = e.extra.get("dt", 0.0)
@@ -94,10 +112,13 @@ def to_chrome_trace(trace, path: Optional[str] = None) -> dict:
                 continue          # partner evicted AND unstamped: no span
             other_lanes.add("requests")
             if e.task not in req_open:
-                # enqueue evicted from the ring: synthesize the begin
+                # enqueue evicted from the ring: synthesize the begin,
+                # clamped at the trace epoch — a request enqueued before
+                # the retained window began must not render at a
+                # negative timestamp (Perfetto misplaces the span)
                 spans.append((("requests",), {
                     "ph": "b", "cat": "request", "id": str(e.task),
-                    "name": "request", "ts": us(e.t - lat)}))
+                    "name": "request", "ts": max(us(e.t - lat), 0.0)}))
             else:
                 req_open.discard(e.task)
             spans.append((("requests",), {
@@ -138,9 +159,32 @@ def to_chrome_trace(trace, path: Optional[str] = None) -> dict:
                 "cat": "scheduler", "ts": us(e.t),
                 "args": dict(e.extra)}))
 
-    # lane order: workers in pool order, then rpc, hops, scheduler,
-    # requests — matched by thread_sort_index metadata below
-    lanes: list = [("w", w) for w in sorted(workers, key=_worker_key)]
+    # critical-path overlay: a dedicated lane repeating the path's final
+    # executions in order, plus s/f flow arrows stitching consecutive
+    # path tasks together across the worker lanes
+    cp_drawn = [t for t in cp if t in cp_runs]
+    for i, task in enumerate(cp_drawn):
+        ts, dur, w = cp_runs[task]
+        spans.append((("critical",), {
+            "ph": "X", "name": task, "cat": "critical_path",
+            "ts": ts, "dur": dur, "args": {"order": i, "worker": w}}))
+    for i in range(len(cp_drawn) - 1):
+        a, b = cp_drawn[i], cp_drawn[i + 1]
+        ts_a, dur_a, w_a = cp_runs[a]
+        ts_b, _dur_b, w_b = cp_runs[b]
+        flow = {"id": i + 1, "name": "critical-path",
+                "cat": "critical_path"}
+        spans.append((("w", w_a), {
+            **flow, "ph": "s", "ts": ts_a + dur_a}))
+        spans.append((("w", w_b), {
+            **flow, "ph": "f", "bp": "e", "ts": max(ts_b, ts_a + dur_a)}))
+
+    # lane order: critical path on top, workers in pool order, then rpc,
+    # hops, scheduler, requests — matched by thread_sort_index below
+    lanes: list = []
+    if cp_drawn:
+        lanes.append(("critical",))
+    lanes.extend(("w", w) for w in sorted(workers, key=_worker_key))
     if "rpc" in other_lanes:
         lanes.append(("rpc",))
     lanes.extend(("hop", op) for op in sorted(hop_lanes))
@@ -153,7 +197,8 @@ def to_chrome_trace(trace, path: Optional[str] = None) -> dict:
     out: list = [{"ph": "M", "pid": PID, "tid": 0, "name": "process_name",
                   "args": {"name": "repro engine"}}]
     for lane, tid in tid_of.items():
-        label = lane[1] if lane[0] in ("w", "hop") else lane[0]
+        label = lane[1] if lane[0] in ("w", "hop") else (
+            "critical path" if lane[0] == "critical" else lane[0])
         out.append({"ph": "M", "pid": PID, "tid": tid,
                     "name": "thread_name", "args": {"name": label}})
         out.append({"ph": "M", "pid": PID, "tid": tid,

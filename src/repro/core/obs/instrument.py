@@ -60,12 +60,17 @@ class RpcMetrics:
 class ServingMetrics:
     """Push-side serving metrics: the per-request latency histogram
     observed at response delivery (everything else about the frontend is
-    readable from its own counters via callbacks)."""
+    readable from its own counters via callbacks).  Requests submitted
+    with `tenant=` additionally land in a tenant-labelled histogram,
+    cached per tenant so the delivery path pays one dict hit extra."""
 
-    __slots__ = ("latency", "_failed")
+    __slots__ = ("latency", "_failed", "_registry", "_index", "_by_tenant")
 
     def __init__(self, registry: MetricsRegistry, index: int = 0):
         lbl = {"frontend": str(index)}
+        self._registry = registry
+        self._index = index
+        self._by_tenant: dict = {}     # tenant -> bound Histogram.observe
         self.latency = registry.histogram(
             "repro_request_latency_seconds",
             "Serving enqueue -> response latency", labels=lbl)
@@ -73,10 +78,21 @@ class ServingMetrics:
             "repro_requests_failed_total",
             "Responses delivered with ok=False", labels=lbl)
 
-    def observe_request(self, latency_s: float, ok: bool):
+    def observe_request(self, latency_s: float, ok: bool,
+                        tenant: Optional[str] = None):
         self.latency.observe(latency_s)
         if not ok:
             self._failed.inc()
+        if tenant is None:
+            return
+        ob = self._by_tenant.get(tenant)
+        if ob is None:
+            h = self._registry.histogram(
+                "repro_request_latency_seconds",
+                "Serving enqueue -> response latency",
+                labels={"frontend": str(self._index), "tenant": tenant})
+            ob = self._by_tenant[tenant] = h.observe
+        ob(latency_s)
 
 
 def _instrument_engine(reg: MetricsRegistry, engine) -> None:

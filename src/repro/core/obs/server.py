@@ -6,8 +6,12 @@ Endpoints:
 
   * `GET /stats`   — JSON: the registry dump, windowed rates (tasks/s
     and per-worker busy fraction over the interval since the previous
-    scrape), per-worker and per-shard tables, trace counters, and the
-    latest windowed `LatencyReport` per serving frontend
+    scrape), per-worker and per-shard tables, trace counters, a
+    `critical_path` section (the post-hoc analyzer's digest — why the
+    run-so-far took as long as it did; skipped with a reason once the
+    retained trace exceeds `explain_max_events`), and the latest
+    windowed `LatencyReport` per serving frontend (with per-tenant
+    slices when requests carry `tenant=` labels)
   * `GET /health`  — JSON liveness: `ok` is false once the resident
     dispatch loop has died
   * `GET /metrics` — Prometheus text exposition (format 0.0.4)
@@ -83,12 +87,18 @@ class StatsServer:
 
     def __init__(self, registry, *, client=None, engine=None,
                  frontends: Optional[list] = None,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 explain_max_events: int = 200_000):
         self.registry = registry
         self._client = client
         self._engine = engine if engine is not None else (
             client.engine if client is not None else None)
         self._frontends = frontends
+        # critical-path scrape budget: the analyzer is post-hoc (one
+        # pass over a snapshot of the event log), but a scrape must stay
+        # cheap — above this many retained events the section reports
+        # "skipped" instead of analyzing.  0 disables the section.
+        self.explain_max_events = explain_max_events
         self.host = host
         self.port = port
         self._httpd: Optional[_HTTPServer] = None
@@ -192,6 +202,21 @@ class StatsServer:
                              if window is not None else None),
             }
             payload["workers"] = workers
+            n_events = len(tracer.events)
+            if self.explain_max_events and n_events:
+                if n_events <= self.explain_max_events:
+                    try:
+                        from repro.core.obs.critical_path import \
+                            CriticalPathReport
+                        cp = CriticalPathReport.from_engine(eng)
+                        payload["critical_path"] = cp.summary(max_tasks=16)
+                    except Exception:   # noqa: BLE001 — diagnosis must
+                        pass            # never fail the scrape
+                else:
+                    payload["critical_path"] = {
+                        "skipped": f"trace too large ({n_events} events "
+                                   f"> explain_max_events="
+                                   f"{self.explain_max_events})"}
         serving = []
         for fe in self._live_frontends():
             # a running periodic monitor owns the window; otherwise the

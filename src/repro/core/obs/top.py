@@ -55,6 +55,39 @@ def render(stats: dict) -> str:
         lines.append(f"  {w:<12}{row.get('done', 0):>10}"
                      f"{row.get('busy_s', 0.0):>12.3f}{busy_pct}  "
                      f"{'live' if row.get('alive', True) else 'DEAD'}")
+    cp = stats.get("critical_path") or {}
+    if cp.get("skipped"):
+        lines.append("")
+        lines.append(f"  critical path: {cp['skipped']}")
+    elif cp.get("path"):
+        bd = cp.get("breakdown_s") or {}
+        conc = cp.get("concurrency") or {}
+        ideal = conc.get("ideal_metg")
+        eff = conc.get("efficiency")
+        lines.append("")
+        lines.append(
+            f"  critical path: {cp.get('n_tasks_on_path', 0)} of"
+            f" {cp.get('n_tasks', 0)} tasks gate"
+            f" {cp.get('makespan_s', 0.0):.3f}s"
+            f"  sched {cp.get('sched_frac', 0.0) * 100:.1f}%"
+            f" (dep-wait {bd.get('dep_wait', 0)}s"
+            f" queue {bd.get('queue', 0)}s"
+            f" dispatch {bd.get('dispatch', 0)}s"
+            f" notify {bd.get('notify', 0)}s)")
+        lines.append(
+            f"   concurrency mean {conc.get('mean', 0)}"
+            f" peak {conc.get('peak', 0)}"
+            f" of {cp.get('workers', 0)} workers"
+            + (f"  METG ideal ~{ideal}" if ideal is not None else "")
+            + (f"  efficiency {eff * 100:.0f}%" if eff is not None else "")
+            + f"  idle {cp.get('idle_s', 0)}s")
+        ends = " -> ".join(str(t) for t in cp["path"][-3:])
+        lines.append(f"   tail: {ends}")
+        for s in cp.get("stragglers") or []:
+            mark = "  << ON PATH" if s.get("on_path") else ""
+            lines.append(f"   straggler {s['task']}"
+                         f" {s['run_s']}s x{s['ratio']}"
+                         f" on {s['worker']}{mark}")
     for i, rep in enumerate(stats.get("serving") or []):
         lat = rep.get("latency_ms") or {}
         lines.append("")
@@ -65,6 +98,15 @@ def render(stats: dict) -> str:
             f"  rejected {rep.get('n_rejected', 0)}"
             f"  mean batch {rep.get('mean_batch', 0)}"
             f"  queue depth {rep.get('queue_depth_mean', 0)}")
+        for tenant, trep in sorted((rep.get("tenants") or {}).items()):
+            tlat = trep.get("latency_ms") or {}
+            lines.append(
+                f"    tenant {tenant}: {trep.get('n_requests', 0)} req"
+                f"  p50 {tlat.get('p50', 0)}ms"
+                f" p95 {tlat.get('p95', 0)}ms"
+                f" p99 {tlat.get('p99', 0)}ms"
+                f"  failed {trep.get('n_failed', 0)}"
+                f"  rejected {trep.get('n_rejected', 0)}")
     return "\n".join(lines)
 
 

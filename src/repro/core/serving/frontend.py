@@ -37,14 +37,16 @@ class ServeRequest:
     """One in-flight request: resolved exactly once (re-executions after a
     worker death hit the already-set guard), waitable from any thread."""
 
-    __slots__ = ("name", "payload", "meta", "t_enqueue", "t_done",
+    __slots__ = ("name", "payload", "meta", "tenant", "t_enqueue", "t_done",
                  "value", "ok", "error", "deadline", "timed_out", "_event")
 
     def __init__(self, name: str, payload, meta: Optional[dict],
-                 t_enqueue: float, deadline: Optional[float] = None):
+                 t_enqueue: float, deadline: Optional[float] = None,
+                 tenant: Optional[str] = None):
         self.name = name
         self.payload = payload
         self.meta = meta or {}
+        self.tenant = tenant
         self.t_enqueue = t_enqueue
         self.t_done = 0.0
         self.value = None
@@ -140,6 +142,9 @@ class Frontend:
         self._w_lats: list[float] = []
         self._w_failed = 0
         self._w_rejected = 0
+        # tenant -> [lats, n_failed, n_rejected]: the per-tenant slice of
+        # the same window, populated only for requests that carry tenant=
+        self._w_tenants: dict = {}
         self._w_batches = 0
         self._w_batched = 0
         self._w_wait_s = 0.0
@@ -186,7 +191,8 @@ class Frontend:
 
     # ------------------------------------------------------------- client
     def submit(self, payload, *, meta: Optional[dict] = None,
-               timeout: Optional[float] = None) -> ServeRequest:
+               timeout: Optional[float] = None,
+               tenant: Optional[str] = None) -> ServeRequest:
         """Admit one request.  With a full queue: `policy="reject"` raises
         `AdmissionFull` immediately; `policy="block"` waits for space up
         to `timeout` seconds (None = forever) and then raises.
@@ -197,7 +203,14 @@ class Frontend:
         `TimeoutError` repr in `error` (plus a `REQ_TIMEOUT` trace
         event) — overload sheds the oldest deadline work instead of
         serving unboundedly stale responses.  A dispatched request always
-        runs to completion; the deadline only covers queue wait."""
+        runs to completion; the deadline only covers queue wait.
+
+        `tenant` labels the request for per-tenant observability: the
+        label rides the REQ_* trace events, the windowed snapshots
+        (`LatencyReport.by_tenant`, visible in `/stats`), and the
+        `repro_request_latency_seconds{tenant=...}` histogram when a
+        metrics registry is attached.  Purely observational — admission
+        and batching never look at it."""
         tracer = self.engine.tracer
         with self._cond:
             if self._closing:
@@ -210,11 +223,17 @@ class Frontend:
                                         or self._closing), timeout))
                 if not blocked or self._closing:
                     self.rejected += 1
-                    tracer.emit(REQ_REJECTED, depth=len(self._queue),
-                                policy=self.policy)
+                    if tenant is None:
+                        tracer.emit(REQ_REJECTED, depth=len(self._queue),
+                                    policy=self.policy)
+                    else:
+                        tracer.emit(REQ_REJECTED, depth=len(self._queue),
+                                    policy=self.policy, tenant=tenant)
                     if self._monitoring:
                         with self._snap_lock:
                             self._w_rejected += 1
+                            if tenant is not None:
+                                self._w_tenant(tenant)[2] += 1
                     raise AdmissionFull(
                         f"admission queue full ({self.max_queue})")
             # next_seq(): engine task names are single-use forever, so
@@ -223,13 +242,18 @@ class Frontend:
             t_enq = tracer.clock()
             req = ServeRequest(
                 f"__req{next_seq()}", payload, meta, t_enqueue=t_enq,
-                deadline=(t_enq + timeout) if timeout is not None else None)
+                deadline=(t_enq + timeout) if timeout is not None else None,
+                tenant=tenant)
             self._queue.append(req)
             if req.deadline is not None:
                 self._n_deadlines += 1
             self.accepted += 1
             depth = len(self._queue)
-            tracer.emit(REQ_ENQUEUED, task=req.name, depth=depth)
+            if tenant is None:
+                tracer.emit(REQ_ENQUEUED, task=req.name, depth=depth)
+            else:
+                tracer.emit(REQ_ENQUEUED, task=req.name, depth=depth,
+                            tenant=tenant)
             self._cond.notify_all()
         if self._monitoring:
             with self._snap_lock:
@@ -381,17 +405,34 @@ class Frontend:
         req.error = error
         req.t_done = tracer.clock()
         latency_s = req.t_done - req.t_enqueue
-        tracer.emit(REQ_DONE, task=req.name, worker=None,
-                    latency_s=latency_s, ok=ok)
+        if req.tenant is None:
+            tracer.emit(REQ_DONE, task=req.name, worker=None,
+                        latency_s=latency_s, ok=ok)
+        else:
+            tracer.emit(REQ_DONE, task=req.name, worker=None,
+                        latency_s=latency_s, ok=ok, tenant=req.tenant)
         m = self.metrics
         if m is not None:
-            m.observe_request(latency_s, ok)
+            m.observe_request(latency_s, ok, tenant=req.tenant)
         if self._monitoring:
             with self._snap_lock:
                 self._w_lats.append(latency_s)
                 if not ok:
                     self._w_failed += 1
+                if req.tenant is not None:
+                    slot = self._w_tenant(req.tenant)
+                    slot[0].append(latency_s)
+                    if not ok:
+                        slot[1] += 1
         req._event.set()
+
+    def _w_tenant(self, tenant: str) -> list:
+        """The window accumulator slot for one tenant: [lats, failed,
+        rejected] (caller holds `self._snap_lock`)."""
+        slot = self._w_tenants.get(tenant)
+        if slot is None:
+            slot = self._w_tenants[tenant] = [[], 0, 0]
+        return slot
 
     # ---------------------------------------------------------- snapshots
     def snapshot(self) -> LatencyReport:
@@ -416,11 +457,20 @@ class Frontend:
             n_batches, self._w_batches = self._w_batches, 0
             batched, self._w_batched = self._w_batched, 0
             wait_s, self._w_wait_s = self._w_wait_s, 0.0
+            tenants, self._w_tenants = self._w_tenants, {}
             self._w_lats = []
             self._w_depths = []
             t1 = clock()
             t0, self._snap_t0 = self._snap_t0, t1
         lats.sort()
+        by_tenant = None
+        if tenants:
+            by_tenant = {}
+            for tenant, (tlats, tfailed, trejected) in sorted(
+                    tenants.items()):
+                tlats.sort()
+                by_tenant[tenant] = LatencyReport._tenant_slice(
+                    tlats, n_failed=tfailed, n_rejected=trejected)
         rep = LatencyReport(
             n_requests=len(lats),
             n_failed=n_failed,
@@ -437,6 +487,7 @@ class Frontend:
             batch_wait_mean_s=(wait_s / n_batches) if n_batches else 0.0,
             t_s=t1,
             window_s=max(t1 - t0, 0.0),
+            by_tenant=by_tenant,
         )
         self.snapshots.append(rep)
         if self.on_snapshot is not None:

@@ -1,0 +1,376 @@
+"""Critical-path analyzer tests: exact-math verification on synthetic
+hand-built traces (known path, known segment durations, attribution
+telescoping to the makespan), requeue/retry episode accounting, live
+end-to-end runs with a seeded straggler across transports, the explain
+CLI, the chrome-trace critical-path overlay, and the /stats surface."""
+import json
+import time
+
+import pytest
+
+from repro.client import Client
+from repro.core.engine import (COMPLETED, CREATED, READY, RETRIED, RPC,
+                               RUN_END, RUN_START, STOLEN, Engine,
+                               ManualClock, TraceRecorder)
+from repro.core.obs import CriticalPathReport, StatsServer, instrument
+from repro.core.obs import explain as obs_explain
+from repro.core.obs import top as obs_top
+
+
+def _at(tr, clock, t, event, task=None, worker=None, **extra):
+    clock.now = t
+    tr.emit(event, task=task, worker=worker, **extra)
+
+
+def _chain_trace():
+    """a -> b -> d on two workers, with side task s1 riding along.
+
+    Known timeline (all stamps explicit):
+      a:  created 0.0, ready 0.0, stolen 0.1, run [0.2, 1.2] w0, done 1.3
+      s1: created 0.0, ready 0.0, stolen 0.1, run [0.2, 0.5] w1, done 0.55
+      b:  created 0.0 (deps a),   ready 1.3, stolen 1.5,
+          run [1.6, 3.6] w1, done 3.7
+      d:  created 0.0 (deps b),   ready 3.7, stolen 3.8,
+          run [3.9, 4.4] w0, done 4.5
+    Critical path [a, b, d]; makespan 4.5; per-stage totals
+    dep_wait 0.0, queue 0.4, dispatch 0.3, run 3.5, notify 0.3.
+    """
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock)
+    _at(tr, clock, 0.00, CREATED, task="a")
+    _at(tr, clock, 0.00, READY, task="a")
+    _at(tr, clock, 0.00, CREATED, task="s1")
+    _at(tr, clock, 0.00, READY, task="s1")
+    _at(tr, clock, 0.00, CREATED, task="b", deps=["a"])
+    _at(tr, clock, 0.00, CREATED, task="d", deps=["b"])
+    _at(tr, clock, 0.10, STOLEN, task="a", worker="w0")
+    _at(tr, clock, 0.10, STOLEN, task="s1", worker="w1")
+    _at(tr, clock, 0.20, RUN_START, task="a", worker="w0")
+    _at(tr, clock, 0.20, RUN_START, task="s1", worker="w1")
+    _at(tr, clock, 0.50, RUN_END, task="s1", worker="w1")
+    _at(tr, clock, 0.55, COMPLETED, task="s1", worker="w1")
+    _at(tr, clock, 1.20, RUN_END, task="a", worker="w0")
+    _at(tr, clock, 1.30, COMPLETED, task="a", worker="w0")
+    _at(tr, clock, 1.30, READY, task="b")
+    _at(tr, clock, 1.50, STOLEN, task="b", worker="w1")
+    _at(tr, clock, 1.60, RUN_START, task="b", worker="w1")
+    _at(tr, clock, 3.60, RUN_END, task="b", worker="w1")
+    _at(tr, clock, 3.70, COMPLETED, task="b", worker="w1")
+    _at(tr, clock, 3.70, READY, task="d")
+    _at(tr, clock, 3.80, STOLEN, task="d", worker="w0")
+    _at(tr, clock, 3.90, RUN_START, task="d", worker="w0")
+    _at(tr, clock, 4.40, RUN_END, task="d", worker="w0")
+    _at(tr, clock, 4.50, COMPLETED, task="d", worker="w0")
+    return tr
+
+
+# ------------------------------------------------- synthetic exact math
+
+
+def test_known_dag_recovers_exact_path_and_decomposition():
+    rep = CriticalPathReport.from_trace(_chain_trace(), workers=2)
+    assert rep.path == ["a", "b", "d"]
+    assert rep.n_tasks == 4
+    assert abs(rep.makespan_s - 4.5) < 1e-9
+    # exact per-stage attribution, known by construction
+    assert abs(rep.dep_wait_s - 0.0) < 1e-9
+    assert abs(rep.queue_s - 0.4) < 1e-9
+    assert abs(rep.dispatch_s - 0.3) < 1e-9
+    assert abs(rep.run_s - 3.5) < 1e-9
+    assert abs(rep.notify_s - 0.3) < 1e-9
+    # the decomposition telescopes EXACTLY to the makespan (acceptance
+    # tolerance is 5%; the construction guarantees equality)
+    total = rep.sched_s + rep.run_s
+    assert abs(total - rep.makespan_s) < 1e-9
+    assert abs(rep.compute_s - 3.5) < 1e-9
+    assert abs(rep.sched_frac - 1.0 / 4.5) < 1e-9
+
+
+def test_known_dag_per_task_segments():
+    rep = CriticalPathReport.from_trace(_chain_trace(), workers=2)
+    by_task = {row["task"]: row for row in rep.segments}
+    assert by_task["a"]["queue_s"] == 0.1
+    assert by_task["a"]["dispatch_s"] == 0.1
+    assert by_task["a"]["run_s"] == 1.0
+    assert by_task["a"]["notify_s"] == 0.1
+    # b's span starts where a finished (1.3): its READY at the same
+    # stamp means zero dep-wait, then 0.2 queue / 0.1 dispatch
+    assert by_task["b"]["t_s"] == 1.3
+    assert by_task["b"]["dep_wait_s"] == 0.0
+    assert by_task["b"]["queue_s"] == 0.2
+    assert by_task["b"]["run_s"] == 2.0
+    assert by_task["d"]["run_s"] == 0.5
+    assert all(row["n_runs"] == 1 and row["retries"] == 0
+               for row in rep.segments)
+
+
+def test_known_dag_concurrency_and_idle_gaps():
+    rep = CriticalPathReport.from_trace(_chain_trace(), workers=2)
+    # run episodes: a [0.2,1.2], s1 [0.2,0.5], b [1.6,3.6], d [3.9,4.4]
+    assert rep.concurrency_peak == 2                  # a and s1 overlap
+    assert abs(rep.concurrency_mean - 3.8 / 4.5) < 1e-9
+    # nothing ran in [0,0.2), [1.2,1.6), [3.6,3.9), and the final
+    # notify tail [4.4,4.5) after d's RUN_END
+    assert abs(rep.idle_s - 1.0) < 1e-9
+    gaps = dict(rep.idle_gaps)
+    assert gaps[1.2] == 0.4 and gaps[3.6] == 0.3
+    assert gaps[0.0] == 0.2 and gaps[4.4] == 0.1
+    # profile changepoints are (t, level) and end back at level 0
+    assert rep.profile[0] == (0.2, 2)
+    assert rep.profile[-1][1] == 0
+
+
+def test_known_dag_straggler_detection_honors_factor():
+    tr = _chain_trace()
+    rep = CriticalPathReport.from_trace(tr, workers=2)
+    # final run durations 0.3/0.5/1.0/2.0: median 1.0, nothing >= 4x
+    assert rep.run_median_s == 1.0 and rep.stragglers == []
+    rep2 = CriticalPathReport.from_trace(tr, workers=2,
+                                         straggler_factor=2.0)
+    assert [s["task"] for s in rep2.stragglers] == ["b"]
+    assert rep2.stragglers[0]["on_path"] is True
+    assert rep2.stragglers[0]["ratio"] == 2.0
+
+
+def test_explicit_dep_table_overrides_created_stamps():
+    # strip the CREATED deps stamps: with no dep table the path collapses
+    # to the final task; the engine's dep_table() restores the chain
+    tr = _chain_trace()
+    events = [e for e in tr.events]
+    for e in events:
+        if e.event == CREATED:
+            e.extra.pop("deps", None)
+    bare = CriticalPathReport.from_events(events, workers=2)
+    assert bare.path == ["d"]
+    table = {"b": ("a",), "d": ("b",)}
+    rep = CriticalPathReport.from_events(events, deps=table, workers=2)
+    assert rep.path == ["a", "b", "d"]
+    assert abs((rep.sched_s + rep.run_s) - rep.makespan_s) < 1e-9
+
+
+def test_retry_episodes_count_as_wasted_subspans():
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock)
+    _at(tr, clock, 0.00, CREATED, task="r")
+    _at(tr, clock, 0.00, READY, task="r")
+    _at(tr, clock, 0.10, STOLEN, task="r", worker="w0")
+    _at(tr, clock, 0.20, RUN_START, task="r", worker="w0")
+    _at(tr, clock, 0.60, RUN_END, task="r", worker="w0")
+    _at(tr, clock, 0.65, RETRIED, task="r", attempt=1)
+    _at(tr, clock, 0.70, STOLEN, task="r", worker="w1")
+    _at(tr, clock, 0.80, RUN_START, task="r", worker="w1")
+    _at(tr, clock, 1.00, RUN_END, task="r", worker="w1")
+    _at(tr, clock, 1.05, COMPLETED, task="r", worker="w1")
+    rep = CriticalPathReport.from_trace(tr)
+    assert rep.path == ["r"]
+    row = rep.segments[0]
+    assert row["n_runs"] == 2 and row["retries"] == 1
+    # the FINAL episode is the attributed one; the first 0.4s is wasted
+    assert row["wasted_s"] == 0.4
+    assert row["episodes"] == [{"t_s": 0.2, "run_s": 0.4, "worker": "w0"}]
+    assert abs(rep.queue_s - 0.7) < 1e-9       # ready 0.0 -> last steal 0.7
+    assert abs(rep.run_s - 0.2) < 1e-9
+    assert abs(rep.wasted_s - 0.4) < 1e-9
+    assert abs((rep.sched_s + rep.run_s) - rep.makespan_s) < 1e-9
+
+
+def test_rpc_fold_excludes_hops_from_totals():
+    clock = ManualClock()
+    tr = TraceRecorder(clock=clock)
+    _at(tr, clock, 0.0, CREATED, task="t")
+    _at(tr, clock, 0.1, COMPLETED, task="t", worker="w0")
+    tr.emit(RPC, op="complete_steal", dt=2e-3)
+    tr.emit(RPC, op="hop:L1", dt=1e-3)
+    rep = CriticalPathReport.from_trace(tr)
+    assert rep.n_rpc == 1 and abs(rep.rpc_s - 2e-3) < 1e-12
+    assert rep.rpc_by_op["hop:L1"] == (1, 1e-3)
+
+
+def test_summary_shape_and_truncation():
+    rep = CriticalPathReport.from_trace(_chain_trace(), workers=2)
+    s = rep.summary()
+    assert s["path"] == ["a", "b", "d"]
+    assert s["breakdown_s"]["run"] == 3.5
+    assert s["sched_s"] + s["compute_s"] == s["makespan_s"]
+    assert "path_truncated" not in s
+    s2 = rep.summary(max_tasks=2)
+    assert s2["path"] == ["b", "d"] and s2["path_truncated"] is True
+    assert len(s2["segments"]) == 2
+    assert s2["n_tasks_on_path"] == 3          # the true path length
+    json.dumps(s)                              # /stats-able
+
+
+def test_empty_and_eventless_traces_degrade():
+    tr = TraceRecorder(clock=ManualClock())
+    rep = CriticalPathReport.from_trace(tr)
+    assert rep.path == [] and rep.makespan_s == 0.0
+    assert rep.summary()["n_tasks"] == 0
+    assert obs_explain.render(rep)             # renders, not crashes
+
+
+# ------------------------------------------------------- live end-to-end
+
+
+@pytest.mark.parametrize("transport", ["inproc", "thread"])
+def test_live_seeded_straggler_lands_on_path(transport):
+    with Client(scheduler="dwork", workers=3, transport=transport) as c:
+        fast = [c.submit(time.sleep, 0.002, key=f"fast{i}")
+                for i in range(8)]
+        slow = c.submit(time.sleep, 0.12, key="slowpoke")
+        tail = c.submit(lambda _x=None: 0, slow, key="tail")
+        c.gather(fast + [slow, tail])
+        rep = c.report().explain()
+    assert "slowpoke" in rep.path              # the straggler gates the run
+    assert rep.makespan_s > 0.1
+    # attribution sums to makespan within the 5% acceptance tolerance
+    assert abs((rep.sched_s + rep.run_s) - rep.makespan_s) \
+        <= 0.05 * rep.makespan_s
+    strag = {s["task"]: s for s in rep.stragglers}
+    assert "slowpoke" in strag and strag["slowpoke"]["on_path"] is True
+    assert strag["slowpoke"]["run_s"] >= 0.1
+
+
+def test_from_engine_joins_dep_table_and_pool_shape():
+    eng = Engine(workers=2, transport="thread", resident=True)
+    eng.start()
+    try:
+        eng.submit("up", fn=lambda: time.sleep(0.01))
+        eng.submit("down", fn=lambda: None, deps=("up",))
+        assert eng.drain(timeout=30)
+        assert eng.dep_table() == {"down": ("up",)}
+        rep = CriticalPathReport.from_engine(eng)
+        assert rep.path[-2:] == ["up", "down"]
+        assert rep.workers == 2
+    finally:
+        eng.shutdown()
+
+
+def test_overhead_report_explain_requires_a_trace():
+    from repro.core.engine import OverheadReport
+    with pytest.raises(ValueError):
+        OverheadReport().explain()
+    tr = _chain_trace()
+    cp = tr.report(workers=2).explain()
+    assert cp.path == ["a", "b", "d"]
+
+
+# ------------------------------------------- save/load + the explain CLI
+
+
+def test_trace_save_load_roundtrip(tmp_path):
+    tr = _chain_trace()
+    p = tmp_path / "run.trace.jsonl"
+    n = tr.save(str(p))
+    assert n == len(tr.events)
+    tr2 = TraceRecorder.load(str(p))
+    assert len(tr2.events) == n
+    assert tr2.n_emitted == tr.n_emitted and tr2.dropped == tr.dropped
+    old, new = tr.events[0], tr2.events[0]
+    assert (old.t, old.event, old.task, old.worker, old.extra) == \
+        (new.t, new.event, new.task, new.worker, new.extra)
+    rep = CriticalPathReport.from_trace(tr2, workers=2)
+    assert rep.path == ["a", "b", "d"]
+    assert abs(rep.makespan_s - 4.5) < 1e-9
+
+
+def test_trace_load_rejects_foreign_files(tmp_path):
+    p = tmp_path / "other.jsonl"
+    p.write_text('{"format": "something-else"}\n')
+    with pytest.raises(ValueError):
+        TraceRecorder.load(str(p))
+
+
+def test_explain_cli_text_json_and_chrome(tmp_path, capsys):
+    tr = _chain_trace()
+    p = tmp_path / "run.trace.jsonl"
+    tr.save(str(p))
+    assert obs_explain.main([str(p), "--workers", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "critical path" in out and "a" in out and "slowest" not in out
+    assert "scheduler" in out and "compute" in out
+    chrome = tmp_path / "run.trace.json"
+    assert obs_explain.main([str(p), "--json", "--chrome",
+                             str(chrome)]) == 0
+    digest = json.loads(capsys.readouterr().out)
+    assert digest["path"] == ["a", "b", "d"]
+    doc = json.loads(chrome.read_text())
+    lanes = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "critical path" in lanes
+
+
+# -------------------------------------------------- chrome-trace overlay
+
+
+def test_chrome_trace_critical_path_lane_and_flow_arrows():
+    tr = _chain_trace()
+    rep = CriticalPathReport.from_trace(tr, workers=2)
+    doc = tr.to_chrome_trace(critical_path=rep.path)
+    evs = doc["traceEvents"]
+    lanes = {e["args"]["name"]: e["tid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "critical path" in lanes
+    # the critical lane sorts above the worker lanes
+    assert lanes["critical path"] < lanes["w0"] < lanes["w1"]
+    lane = [e for e in evs if e.get("cat") == "critical_path"
+            and e["ph"] == "X"]
+    assert [e["name"] for e in lane] == ["a", "b", "d"]
+    assert [e["args"]["order"] for e in lane] == [0, 1, 2]
+    assert all(e["tid"] == lanes["critical path"] for e in lane)
+    # flow arrows stitch consecutive path runs across the worker lanes:
+    # a(w0) -> b(w1) and b(w1) -> d(w0)
+    starts = [e for e in evs if e.get("ph") == "s"]
+    ends = [e for e in evs if e.get("ph") == "f"]
+    assert len(starts) == 2 and len(ends) == 2
+    assert [e["tid"] for e in starts] == [lanes["w0"], lanes["w1"]]
+    assert [e["tid"] for e in ends] == [lanes["w1"], lanes["w0"]]
+    for s, f in zip(starts, ends):
+        assert s["id"] == f["id"] and f["bp"] == "e"
+        assert f["ts"] >= s["ts"]              # arrows never point backward
+    # without the overlay the document is unchanged in shape
+    plain = tr.to_chrome_trace()
+    assert not any(e.get("cat") == "critical_path"
+                   for e in plain["traceEvents"])
+
+
+# ------------------------------------------------------- /stats surface
+
+
+def test_stats_endpoint_and_top_render_carry_critical_path():
+    import urllib.request
+
+    eng = Engine(workers=2, transport="thread", resident=True)
+    eng.start()
+    try:
+        reg = instrument(engine=eng)
+        with StatsServer(reg, engine=eng) as srv:
+            eng.submit("root", fn=lambda: time.sleep(0.01))
+            eng.submit("leaf", fn=lambda: None, deps=("root",))
+            assert eng.drain(timeout=30)
+            with urllib.request.urlopen(srv.url + "/stats",
+                                        timeout=10) as resp:
+                stats = json.loads(resp.read().decode())
+            cp = stats["critical_path"]
+            assert cp["path"][-1] == "leaf"
+            assert cp["makespan_s"] > 0
+            text = obs_top.render(stats)
+            assert "critical path:" in text and "concurrency" in text
+    finally:
+        eng.shutdown()
+
+
+def test_stats_endpoint_skips_oversized_traces():
+    eng = Engine(workers=1, transport="thread", resident=True)
+    eng.start()
+    try:
+        reg = instrument(engine=eng)
+        with StatsServer(reg, engine=eng, explain_max_events=3) as srv:
+            for i in range(5):
+                eng.submit(f"t{i}", fn=lambda: None)
+            assert eng.drain(timeout=30)
+            stats = srv.stats()
+            assert "skipped" in stats["critical_path"]
+            text = obs_top.render(stats)
+            assert "critical path:" in text    # the skip reason surfaces
+    finally:
+        eng.shutdown()

@@ -12,9 +12,10 @@ import urllib.request
 import pytest
 
 from repro.client import Client
-from repro.core.engine import (COMPLETED, REQ_DONE, REQ_ENQUEUED, RPC,
-                               RUN_END, RUN_START, Engine, LatencyReport,
-                               ManualClock, OverheadReport, TraceRecorder)
+from repro.core.engine import (COMPLETED, REQ_DONE, REQ_ENQUEUED,
+                               REQ_REJECTED, RPC, RUN_END, RUN_START, Engine,
+                               LatencyReport, ManualClock, OverheadReport,
+                               TraceRecorder)
 from repro.core.obs import (LATENCY_BUCKETS, Counter, Gauge, Histogram,
                             MetricsRegistry, StatsServer, instrument,
                             to_chrome_trace)
@@ -391,14 +392,22 @@ def test_chrome_trace_synthesizes_begin_for_evicted_enqueue():
     clock = ManualClock()
     tr = TraceRecorder(clock=clock)
     clock.advance(1.0)
-    tr.emit(REQ_DONE, task="r9", latency_s=0.25, ok=True)
+    tr.emit(RUN_START, task="a", worker="w0")          # trace epoch: t=1.0
+    clock.advance(0.5)
+    tr.emit(RUN_END, task="a", worker="w0")
+    tr.emit(REQ_DONE, task="r9", latency_s=0.25, ok=True)  # fits the window
+    tr.emit(REQ_DONE, task="r7", latency_s=3.0, ok=True)   # predates epoch
     tr.emit(REQ_DONE, task="r8")                       # unstamped: skipped
     doc = to_chrome_trace(tr)
-    pairs = [e for e in doc["traceEvents"] if e["ph"] in ("b", "e")]
-    assert [e["ph"] for e in pairs] == ["b", "e"]
-    assert all(e["id"] == "r9" for e in pairs)
-    b, e = pairs
-    assert abs((e["ts"] - b["ts"]) - 0.25 * 1e6) < 1.0  # begin at t - lat
+    begins = {e["id"]: e for e in doc["traceEvents"] if e["ph"] == "b"}
+    ends = {e["id"]: e for e in doc["traceEvents"] if e["ph"] == "e"}
+    assert set(begins) == set(ends) == {"r9", "r7"}
+    # a latency inside the retained window synthesizes begin at t - lat
+    assert abs(begins["r9"]["ts"] - 0.25 * 1e6) < 1.0
+    assert abs((ends["r9"]["ts"] - begins["r9"]["ts"]) - 0.25 * 1e6) < 1.0
+    # a request older than the window clamps at the trace epoch — it must
+    # never render at a negative timestamp (Perfetto misplaces the span)
+    assert begins["r7"]["ts"] == 0.0
 
 
 def test_chrome_trace_rpc_and_worker_events():
@@ -421,6 +430,90 @@ def test_chrome_trace_rpc_and_worker_events():
     assert rpc["tid"] == lanes["rpc"] and rpc["args"]["n"] == 4
     hop = next(e for e in evs if e["name"] == "hop:L1")
     assert hop["tid"] == lanes["hop:L1"]
+
+
+# -------------------------------------------------- per-tenant slicing
+
+
+def test_frontend_tenant_label_rides_req_events_and_snapshots():
+    with Client(scheduler="dwork", workers=2, transport="thread") as c:
+        fe = c.serve(lambda ps: [p * 2 for p in ps], max_wait_s=0.002)
+        fe.snapshot()                                  # arm monitoring
+        reqs = [fe.submit(i, tenant=("acme" if i % 2 else "globex"))
+                for i in range(20)]
+        reqs.append(fe.submit(99))                     # untenanted rides along
+        fe.flush()
+        assert all(r.wait(30.0) for r in reqs)
+        # the label reaches the REQ_* trace events
+        tr = c.engine.tracer
+        enq = [e for e in tr.of(REQ_ENQUEUED) if "tenant" in e.extra]
+        done = [e for e in tr.of(REQ_DONE) if "tenant" in e.extra]
+        assert len(enq) == 20 and len(done) == 20
+        assert {e.extra["tenant"] for e in done} == {"acme", "globex"}
+        # windowed snapshot slices per tenant; untenanted stays top-level
+        rep = fe.snapshot()
+        assert rep.n_requests == 21
+        assert sorted(rep.by_tenant) == ["acme", "globex"]
+        for t in ("acme", "globex"):
+            sub = rep.by_tenant[t]
+            assert sub.n_requests == 10 and sub.n_failed == 0
+            assert sub.p50_s > 0 and sub.p99_s >= sub.p50_s
+        summ = rep.summary()
+        assert sorted(summ["tenants"]) == ["acme", "globex"]
+        assert summ["tenants"]["acme"]["latency_ms"]["p95"] >= 0
+        # post-hoc trace accounting agrees with the live windows
+        lr = LatencyReport.from_trace(tr)
+        assert lr.by_tenant["acme"].n_requests == 10
+        assert lr.by_tenant["globex"].n_requests == 10
+        # and the summary renders in the dashboard
+        text = obs_top.render({"serving": [summ]})
+        assert "tenant acme" in text and "tenant globex" in text
+
+
+def test_tenant_latency_histograms_in_prometheus():
+    with Client(scheduler="dwork", workers=2, transport="thread") as c:
+        srv = c.stats_server()
+        fe = c.serve(lambda ps: [p + 1 for p in ps], max_wait_s=0.002)
+        reqs = [fe.submit(i, tenant="acme") for i in range(6)]
+        reqs += [fe.submit(i) for i in range(4)]
+        fe.flush()
+        assert all(r.wait(30.0) for r in reqs)
+        body, _ = _get(srv.url + "/metrics")
+        assert ('repro_request_latency_seconds_count'
+                '{frontend="0",tenant="acme"} 6') in body
+        # the unlabelled family still counts every request
+        assert ('repro_request_latency_seconds_count'
+                '{frontend="0"} 10') in body
+        for line in body.splitlines():
+            if line and not line.startswith("#"):
+                assert _PROM_SAMPLE.match(line), f"bad: {line!r}"
+
+
+def test_rejected_requests_count_into_tenant_slice():
+    with Client(scheduler="dwork", workers=1, transport="thread") as c:
+        fe = c.serve(lambda ps: ps, max_queue=1, policy="reject",
+                     max_wait_s=10.0)
+        fe.snapshot()                                  # arm monitoring
+        r0 = fe.submit(0, tenant="acme")               # fills the queue
+        with pytest.raises(Exception):
+            fe.submit(1, tenant="acme")                # bounced
+        rej = [e for e in c.engine.tracer.of(REQ_REJECTED)
+               if e.extra.get("tenant") == "acme"]
+        assert len(rej) == 1
+        fe.flush()
+        assert r0.wait(30.0)
+        rep = fe.snapshot()
+        assert rep.by_tenant["acme"].n_rejected == 1
+        assert rep.by_tenant["acme"].n_requests == 1
+
+
+def test_client_submit_tenant_lands_in_task_meta():
+    with Client(scheduler="dwork", workers=1) as c:
+        f = c.submit(lambda: 1, tenant="acme")
+        g = c.submit(lambda: 2)
+        assert c.gather([f, g]) == [1, 2]
+        assert c.engine.tasks[f.name].meta == {"tenant": "acme"}
+        assert c.engine.tasks[g.name].meta == {}
 
 
 # ----------------------------------------------------------- dashboard
