@@ -23,6 +23,7 @@ from typing import Callable, Iterable, Optional
 
 from repro.client.futures import (_CANCELLED, _DONE, CancelledError,
                                   DependencyFailed, Future, TaskFailed)
+from repro.core.engine.comm.serialize import Ref, dumps_call
 from repro.core.engine.executor import Engine, EngineReport
 from repro.core.engine.model import CREATED, FAILED, WorkerCrash, next_seq
 from repro.core.engine.tracing import OverheadReport, TraceRecorder
@@ -192,15 +193,31 @@ class Client:
         dep_names = self._lift_deps(fdeps, extra)
         if dep_names is None:           # a dependency already failed
             return self._fail_fast(name, fdeps)
+        fut = Future(self, name)
+        engine_kw = {}
+        if tenant is not None:
+            engine_kw["meta"] = {"tenant": tenant}
+        if self.engine.transport == "proc":
+            # the task runs in another PROCESS: pack (fn, args, kwargs)
+            # with cloudpickle NOW — an unpicklable callable raises
+            # SerializationError here, naming the task, instead of
+            # hanging a worker.  Done-future arguments inline their
+            # value; pending ones ride as `Ref` placeholders the worker
+            # resolves from its local cache or a Fetch round-trip.  The
+            # `_make_call` wrapper (which captures the unpicklable
+            # Future) never crosses the boundary.
+            meta = dict(engine_kw.get("meta") or {})
+            meta["__call__"] = _proc_call_payload(name, fn, args, kwargs)
+            engine_kw["meta"] = meta
+            return self._submit(fut, fn=None, deps=dep_names,
+                                priority=priority,
+                                slots=max(int(slots), 1), retry=retry,
+                                **engine_kw)
         if not all(d.done() for d in fdeps):
             # the wrapper will _peek a producer mid-run, so futures must
             # resolve live (batch run() otherwise defers resolution to
             # the final report and keeps the raw dispatch hot path)
             self._live_results_needed = True
-        fut = Future(self, name)
-        engine_kw = {}
-        if tenant is not None:
-            engine_kw["meta"] = {"tenant": tenant}
         return self._submit(fut, fn=_make_call(fut, fn, args, kwargs),
                             deps=dep_names, priority=priority,
                             slots=max(int(slots), 1), retry=retry,
@@ -435,6 +452,15 @@ class Client:
                     # futures-only session: the engine's own registered-fn
                     # dispatch is the leanest path (no worker plumbing)
                     self.engine.start()
+                elif self.engine.transport == "proc":
+                    # ship the RAW user executor to the worker processes:
+                    # the `_execute` bound method drags the whole client
+                    # (futures, locks) into the pickle and cannot cross.
+                    # Futures-submitted tasks still run their packed
+                    # `meta["__call__"]` worker-side, which takes
+                    # precedence over the executor.
+                    self.engine.start(self._executor,
+                                      pass_worker=self._executor_pass_worker)
                 else:
                     self.engine.start(self._execute, pass_worker=True)
 
@@ -460,7 +486,16 @@ class Client:
             # see only a partial result set)
             if self._report is not None:
                 return self._report
-            execute = self._execute if self._executor is not None else None
+            pass_worker = True
+            if self._executor is None:
+                execute = None
+            elif self.engine.transport == "proc":
+                # raw user executor across the process boundary (see
+                # _start_engine); packed `__call__` payloads win per task
+                execute = self._executor
+                pass_worker = self._executor_pass_worker
+            else:
+                execute = self._execute
             if not self._live_results_needed:
                 # no wrapper peeks a producer mid-run: drop the per-task
                 # result listener so the dispatch loop keeps the raw
@@ -470,7 +505,7 @@ class Client:
                 self.engine.on_result = None
                 self.engine.on_loop_error = None
             try:
-                report = self.engine.run(execute, pass_worker=True)
+                report = self.engine.run(execute, pass_worker=pass_worker)
             finally:
                 if self._owns_backend:
                     self.engine.backend.close()
@@ -649,6 +684,8 @@ class Client:
             return self._report.overhead()
         if self.engine.transport == "thread":
             workers = min(self.engine.workers, self.engine.capacity)
+        elif self.engine.transport == "proc":
+            workers = self.engine.live_workers()   # real OS parallelism
         else:
             workers = 1      # serial inline transports (engine convention)
         return self.engine.tracer.report(workers=max(workers, 1))
@@ -669,6 +706,24 @@ class Client:
         return (f"Client({self.scheduler}, {mode}, {state}, "
                 f"workers={self.engine.workers}, "
                 f"pending={len(self._futures)})")
+
+
+def _proc_call_payload(name: str, fn: Callable, args: tuple,
+                       kwargs: dict) -> str:
+    """Pack a futures submission for a worker process: cloudpickle
+    `(fn, args, kwargs)` with done-future arguments inlined to their
+    values and pending ones replaced by `Ref(task)` placeholders (the
+    worker materializes those from its local cache or a Fetch).  Raises
+    `SerializationError` naming the task on an unpicklable callable or
+    argument — the submit-time contract of `transport="proc"`."""
+    def lift(x):
+        if not isinstance(x, Future):
+            return x
+        return x._peek() if x.done() else Ref(x.name)
+
+    a = tuple(lift(x) for x in args)
+    kw = {k: lift(v) for k, v in kwargs.items()} if kwargs else {}
+    return dumps_call(fn, a, kw, task=name)
 
 
 def _make_call(fut: Future, fn: Callable, args: tuple, kwargs: dict):

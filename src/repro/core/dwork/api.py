@@ -118,10 +118,63 @@ class Stats:
     pass
 
 
+# ------------------------------------------------- proc-transport verbs
+# (`repro.core.engine.comm`): spoken between a worker PROCESS and the
+# engine's front door, never by the TaskServer itself — the front door
+# strips them (and the extended CompleteSteal `done` entries, which may
+# carry a third per-task element {"v": value, "e": error, "d": duration})
+# down to the plain Table-2 protocol before forwarding.
+
+
+@dataclass
+class Hello:
+    """Worker-process handshake.  An empty `worker` asks the engine to
+    assign an id (multi-host join)."""
+    worker: str = ""
+    pid: int = 0
+    host: str = ""
+
+
+@dataclass
+class HelloResp:
+    """Handshake reply: the worker's id plus its run configuration —
+    steal batch size, heartbeat cadence, and (optionally) the engine's
+    execute callback as a cloudpickle payload."""
+    worker: str = ""
+    steal_n: int = 1
+    resident: bool = False
+    pass_worker: bool = False
+    heartbeat_s: float = 0.5
+    execute: Optional[str] = None
+
+
+@dataclass
+class Heartbeat:
+    """Liveness beacon (response: ExitResp).  A worker whose heartbeats
+    go stale past the engine's grace window is declared crashed and its
+    in-flight work requeues."""
+    worker: str
+
+
+@dataclass
+class Fetch:
+    """Ask for a completed task's serialized value (dependency values a
+    worker doesn't hold locally).  Response: ValueMsg | NotFound."""
+    task: str
+
+
+@dataclass
+class ValueMsg:
+    task: str
+    payload: str = ""
+
+
 _TAGS = {"Create": Create, "Steal": Steal, "Complete": Complete,
          "CompleteSteal": CompleteSteal, "Transfer": Transfer, "Exit": Exit,
          "TaskMsg": TaskMsg, "NotFound": NotFound, "ExitResp": ExitResp,
-         "Stats": Stats, "Release": Release, "Cancel": Cancel}
+         "Stats": Stats, "Release": Release, "Cancel": Cancel,
+         "Hello": Hello, "HelloResp": HelloResp, "Heartbeat": Heartbeat,
+         "Fetch": Fetch, "ValueMsg": ValueMsg}
 
 
 def encode(msg) -> bytes:

@@ -12,10 +12,16 @@ makes that claim *measurable* in one place instead of three ad-hoc loops:
                  forwarding-tree TreeBackend) speaking the Table 2 verbs
                  incl. the batched CompleteSteal; every call timed as an
                  `rpc` event (tree hops as `op="hop:L<k>"`)
-    executor.py  the worker pool: inproc / thread / tree transports,
-                 CompleteSteal piggybacking (complete+steal in one RTT),
-                 Steal-n batching, sharded routing, heap-scheduled
-                 slots/priority launch (pmake EFT)
+    executor.py  the worker pool: inproc / thread / tree / proc
+                 transports, CompleteSteal piggybacking (complete+steal
+                 in one RTT), Steal-n batching, sharded routing,
+                 heap-scheduled slots/priority launch (pmake EFT)
+    comm/        the transport registry: Connector/Listener pairs per
+                 address scheme, TransportFamily per `transport=` name;
+                 the proc family spawns worker PROCESSES speaking
+                 Table-2 frames over TCP (Hello handshake, heartbeat
+                 leases, cloudpickle at the boundary, multi-host join
+                 via `python -m repro.core.engine.comm.worker`)
     faults.py    heartbeat leases, dead-worker requeue, seeded fault and
                  straggler injection (no wall-clock dependence in tests)
     journal.py   write-ahead journal + compacted checkpoints for the
@@ -48,6 +54,13 @@ Tuning `transport=` / `steal_n` against the METG laws (core/metg.py):
     P/fanout^levels — pick it when connection count, not rtt, is the
     binding constraint, and size `tree_fanout` so each relay stays below
     ~fanout concurrent downstream frames per upstream round-trip.
+    `transport="proc"` spawns real worker processes — the only family
+    whose CPU-bound tasks scale with cores (the others serialize on the
+    GIL) — at the highest per-task cost (fork + cloudpickle + socket
+    rtt): callables must pickle (`SerializationError` at submit time
+    otherwise), failures surface as error reprs, and a SIGKILLed
+    worker's in-flight work requeues with zero loss via heartbeat
+    leases.
   * `shards=N` multiplies dispatch rate by N for independent-task loads;
     cross-shard dependencies pay a proxy/notify round-trip, so shard
     only DAGs whose cut between shards is small (hash routing makes the

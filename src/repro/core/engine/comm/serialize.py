@@ -1,0 +1,73 @@
+"""Serialization at the process boundary (`transport="proc"`).
+
+The in-process transports pass callables and values by reference; a
+worker process needs them by value.  cloudpickle (pickle fallback)
+carries lambdas, closures, and `__main__` functions; payloads are
+base64-encoded to str so both wire codecs (msgpack and the JSON
+fallback) ship them unchanged inside the Table-2 frames.
+
+The one rule this module enforces: an unpicklable callable or argument
+must fail LOUDLY at the submit boundary (`SerializationError`, naming
+the task) — never opaquely inside a worker process.
+"""
+from __future__ import annotations
+
+import base64
+import pickle
+from typing import Optional
+
+try:
+    import cloudpickle as _pickler
+except Exception:  # pragma: no cover — cloudpickle ships with the env
+    _pickler = pickle
+
+
+class SerializationError(TypeError):
+    """A callable / argument / result cannot cross the process boundary."""
+
+
+class Ref:
+    """Placeholder for a dependency's value in a serialized call: the
+    worker resolves it from its local value cache or with a Fetch
+    round-trip to the hub before invoking the fn."""
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Ref({self.name!r})"
+
+
+def dumps(obj, *, what: str = "object") -> str:
+    """Pickle `obj` to a base64 str, or raise `SerializationError`
+    describing `what` failed (and why) instead of a worker-side hang."""
+    try:
+        return base64.b64encode(_pickler.dumps(obj)).decode("ascii")
+    except Exception as e:  # noqa: BLE001 — any pickling failure
+        raise SerializationError(
+            f"{what} cannot be serialized for transport='proc': {e!r}. "
+            "Worker processes receive tasks by value (cloudpickle); "
+            "closures over locks/sockets/files cannot cross the process "
+            "boundary — pass plain data, or use an in-process transport."
+        ) from e
+
+
+def loads(payload: str):
+    return _pickler.loads(base64.b64decode(payload.encode("ascii")))
+
+
+def dumps_call(fn, args=(), kwargs=None, *, task: Optional[str] = None) -> str:
+    """Serialize `(fn, args, kwargs)` for a worker process, naming the
+    task in the error so a failed submit points at its cause."""
+    label = f"task {task!r}" if task else "submitted call"
+    fname = getattr(fn, "__name__", None)
+    if fname and fname != "<lambda>":
+        label += f" ({fname})"
+    return dumps((fn, tuple(args), dict(kwargs or {})), what=label)
+
+
+def loads_call(payload: str):
+    """-> (fn, args, kwargs) as packed by `dumps_call`."""
+    return loads(payload)

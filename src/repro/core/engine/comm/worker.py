@@ -1,0 +1,188 @@
+"""Worker process entry point: the paper's Fig. 2 client loop over TCP.
+
+    python -m repro.core.engine.comm.worker --connect HOST:PORT [--name W]
+
+Spawned locally by `Engine(transport="proc")`, or run by hand on any
+host that can reach the engine's front door (`engine.comm_address`) —
+a remote worker joins the pool on connect (`add_worker` semantics: the
+Hello handshake registers it, and the engine's supervision loop folds
+it into the live set).
+
+Loop shape (identical to `dwork.client.Client.run_loop`, plus the
+process-boundary pieces): Hello handshake -> deserialize the shipped
+execute callback (if any) -> CompleteSteal(finished, n=steal_n) ->
+run each task -> repeat.  Per task: a `meta["__call__"]` payload wins
+(a cloudpickled `(fn, args, kwargs)` — `Ref` arguments resolve from the
+local value cache or a Fetch round-trip), else the shipped execute
+callback runs `(name, meta[, worker])`.  Results serialize into the
+extended CompleteSteal entry `[name, ok, {"v","e","d"}]`; a result that
+cannot pickle reports ok=False with the SerializationError, never a
+hang.
+
+A daemon thread heartbeats every `heartbeat_s` (the transport lock
+makes it safe alongside the main loop).  Losing the connection — the
+engine died or told us goodbye — exits the process: orphaned workers
+reap themselves.  `WorkerCrash` raised by a task body hard-exits
+(`os._exit`) to exercise real crash semantics end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import threading
+import time
+
+from repro.core.dwork.api import (CompleteSteal, ExitResp, Fetch, Heartbeat,
+                                  Hello, TaskMsg, ValueMsg)
+from repro.core.dwork.client import TCPTransport
+from repro.core.engine.comm.serialize import (Ref, dumps, loads, loads_call)
+from repro.core.engine.model import WorkerCrash
+
+CRASH_EXIT_CODE = 17
+
+
+def _resolve(transport, cache: dict, obj):
+    """Materialize a `Ref` argument: local value cache first (tasks this
+    worker completed), then a Fetch round-trip to the front door."""
+    if not isinstance(obj, Ref):
+        return obj
+    name = obj.name
+    if name in cache:
+        return cache[name]
+    resp = transport.request(Fetch(task=name))
+    if not isinstance(resp, ValueMsg):
+        raise KeyError(f"dependency value {name!r} unavailable on the hub "
+                       "(pruned before this task ran?)")
+    val = loads(resp.payload)
+    cache[name] = val
+    return val
+
+
+def _run_task(transport, cache: dict, execute, pass_worker: bool,
+              me: str, name: str, meta) -> list:
+    """Execute one stolen task; -> the extended CompleteSteal entry
+    [name, ok, {"v": value-payload, "e": error, "d": duration_s}]."""
+    t0 = time.perf_counter()
+    ok, value, err = True, None, None
+    try:
+        payload = (meta or {}).get("__call__")
+        if payload is not None:
+            fn, args, kwargs = loads_call(payload)
+            args = tuple(_resolve(transport, cache, a) for a in args)
+            kwargs = {k: _resolve(transport, cache, v)
+                      for k, v in kwargs.items()}
+            value = fn(*args, **kwargs)
+        elif execute is not None:
+            out = (execute(name, meta, me) if pass_worker
+                   else execute(name, meta))
+            if isinstance(out, tuple):
+                ok, value = bool(out[0]), out[1]
+            elif out is None:
+                ok = True
+            elif isinstance(out, bool):
+                ok = out
+            else:
+                ok, value = True, out
+        # neither a packed call nor an executor: a bare named task (the
+        # engine's registered-fn convention) completes as a no-op
+    except WorkerCrash:
+        os._exit(CRASH_EXIT_CODE)     # a crash drill kills the real process
+    except BaseException as e:        # noqa: BLE001 — reported, not fatal
+        ok, err = False, repr(e)
+    dur = time.perf_counter() - t0
+    info: dict = {"d": dur}
+    if ok:
+        # a None value still ships (and is kept fetchable): a dependent's
+        # Ref resolution must distinguish "value is None" from "missing"
+        try:
+            info["v"] = dumps(value, what=f"result of task {name!r}")
+            cache[name] = value       # local dependents skip the Fetch
+        except Exception as e:        # noqa: BLE001 — SerializationError
+            ok = False
+            err = repr(e)
+    if err is not None:
+        info["e"] = err
+    return [name, ok, info]
+
+
+def run_worker(host: str, port: int, name: str = "", *,
+               idle_sleep: float = 0.002) -> int:
+    """Connect, handshake, and run the client loop until the engine says
+    Exit (or the connection drops).  Returns tasks executed."""
+    transport = TCPTransport(host, port)
+    hello = transport.request(Hello(worker=name, pid=os.getpid(),
+                                    host=socket.gethostname()))
+    me = hello.worker
+    steal_n = max(int(hello.steal_n), 1)
+    execute = loads(hello.execute) if hello.execute else None
+    pass_worker = bool(hello.pass_worker)
+    hb = max(float(hello.heartbeat_s or 0.5), 0.05)
+    stop = threading.Event()
+
+    def _beat():
+        while not stop.wait(hb):
+            try:
+                transport.request(Heartbeat(worker=me))
+            except Exception:  # noqa: BLE001 — engine gone: reap ourselves
+                os._exit(0)
+
+    threading.Thread(target=_beat, daemon=True,
+                     name=f"heartbeat-{me}").start()
+
+    cache: dict = {}
+    finished: list = []
+    done = 0
+    while True:
+        try:
+            resp = transport.request(
+                CompleteSteal(worker=me, done=finished, n=steal_n))
+        except (ConnectionError, OSError):
+            break                     # engine gone: orphan self-reaping
+        finished = []
+        if isinstance(resp, ExitResp):
+            break
+        if not isinstance(resp, TaskMsg):
+            time.sleep(idle_sleep)
+            continue
+        for task_name, meta in resp.tasks:
+            finished.append(_run_task(transport, cache, execute,
+                                      pass_worker, me, task_name, meta))
+            done += 1
+    stop.set()
+    try:
+        if finished:                  # flush a final batch (Exit raced it)
+            transport.request(CompleteSteal(worker=me, done=finished, n=0))
+        transport.close()
+    except Exception:  # noqa: BLE001 — already shutting down
+        pass
+    return done
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.core.engine.comm.worker",
+        description="Join a listening repro engine as a worker process.")
+    parser.add_argument("--connect", required=True, metavar="HOST:PORT",
+                        help="the engine front door (Engine.comm_address)")
+    parser.add_argument("--name", default="",
+                        help="worker id (default: engine-assigned)")
+    parser.add_argument("--idle-sleep", type=float, default=0.002,
+                        help="sleep between empty steals (s)")
+    args = parser.parse_args(argv)
+    addr = args.connect
+    if addr.startswith("tcp://"):
+        addr = addr[len("tcp://"):]
+    host, _, port = addr.rpartition(":")
+    try:
+        run_worker(host or "127.0.0.1", int(port), args.name,
+                   idle_sleep=args.idle_sleep)
+    except ConnectionError as e:
+        print(f"worker: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

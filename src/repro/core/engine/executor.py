@@ -60,17 +60,21 @@ from heapq import heapify, heappop, heappush
 from pathlib import Path
 from typing import Callable, Optional
 
-from repro.core.engine.backends import (DONE, EMPTY, ServerBackend,
-                                        ShardedBackend, TreeBackend)
+from repro.core.engine.backends import DONE, EMPTY
+from repro.core.engine.comm import core as comm_core
+from repro.core.engine.comm.serialize import dumps_call, loads
 from repro.core.engine.faults import FaultPlan
 from repro.core.engine.journal import Journal
 from repro.core.engine.model import (CANCELLED, COMPLETED, CREATED, FAILED,
-                                     READY, RETRIED, RUN_END, RUN_START,
-                                     STOLEN, WORKER_DEAD, EngineTask,
-                                     RetryPolicy, TaskResult, WorkerCrash)
+                                     READY, REQUEUED, RETRIED, RUN_END,
+                                     RUN_START, STOLEN, WORKER_DEAD,
+                                     EngineTask, RetryPolicy, TaskResult,
+                                     WorkerCrash)
 from repro.core.engine.tracing import OverheadReport, TraceRecorder
 
-TRANSPORTS = ("inproc", "thread", "tree")
+# transport families live in the comm registry (repro.core.engine.comm);
+# this tuple stays as the public "what can I pass" surface
+TRANSPORTS = comm_core.transport_names()
 
 # resident idle backoff: with no pending submissions, each worker probes
 # the server once per this many rounds (lease reaping still happens on
@@ -108,9 +112,9 @@ class Engine:
                  keep_results: bool = True,
                  on_result: Optional[Callable] = None,
                  retry: Optional[RetryPolicy] = None,
-                 journal=None):
-        if transport not in TRANSPORTS:
-            raise ValueError(f"unknown transport {transport!r}")
+                 journal=None, proc_host: str = "127.0.0.1",
+                 proc_port: int = 0, heartbeat_s: float = 0.5):
+        fam = comm_core.family(transport)   # raises on an unknown name
         self.workers = max(int(workers), 0)
         self.capacity = capacity if capacity is not None else max(workers, 1)
         self.transport = transport
@@ -127,6 +131,7 @@ class Engine:
         self.journal = Journal(journal) if self._owns_journal else journal
         self.poll = poll
         self.lease_timeout = lease_timeout
+        self.heartbeat_s = max(float(heartbeat_s), 0.05)
         self.resident = bool(resident)
         # result plumbing for the futures client: `on_result(name, ok,
         # res, error)` fires exactly once per task name, at its FIRST
@@ -148,23 +153,32 @@ class Engine:
         self.tracer = tracer or TraceRecorder(clock=clock)
         self._owns_backend = backend is None
         if backend is None:
-            if transport == "tree":
-                # shards > 1 composes both scaling levers: a ShardedHub
-                # behind the forwarding tree (hash routing at the apex)
-                backend = TreeBackend(workers=self.workers,
-                                      fanout=tree_fanout, levels=tree_levels,
-                                      shards=shards,
-                                      lease_timeout=lease_timeout,
-                                      clock=clock, tracer=self.tracer)
-            elif shards > 1:
-                backend = ShardedBackend(shards=shards,
-                                         lease_timeout=lease_timeout,
-                                         clock=clock, tracer=self.tracer)
-            else:
-                backend = ServerBackend(lease_timeout=lease_timeout,
-                                        clock=clock, tracer=self.tracer)
-        elif getattr(backend, "tracer", None) is None:
-            backend.tracer = self.tracer
+            # the comm registry owns the backend recipe per transport
+            # family (shards > 1 composes inside each builder: a
+            # ShardedHub behind the tree, or sharded under proc)
+            backend = fam.make_backend(
+                workers=self.workers, shards=shards,
+                lease_timeout=lease_timeout, clock=clock,
+                tracer=self.tracer, tree_fanout=tree_fanout,
+                tree_levels=tree_levels, steal_n=self.steal_n,
+                resident=self.resident, proc_host=proc_host,
+                proc_port=proc_port, heartbeat_s=self.heartbeat_s)
+        else:
+            if getattr(backend, "tracer", None) is None:
+                backend.tracer = self.tracer
+            if transport == "proc":
+                from repro.core.engine.comm.proc import ProcBackend
+
+                if not isinstance(backend, ProcBackend):
+                    # a caller-supplied TaskServer/hub adaptation (the
+                    # run_pool shim): front it with the process door.
+                    # The wrapper's listener/processes are ours to close
+                    # even though the inner backend is not.
+                    backend = ProcBackend(
+                        backend, host=proc_host, port=proc_port,
+                        steal_n=self.steal_n, resident=self.resident,
+                        heartbeat_s=self.heartbeat_s, owns_inner=False)
+                    self._owns_backend = True
         self.backend = backend
         if self.journal is not None:
             # backends journal the requeue records their verbs observe
@@ -237,6 +251,13 @@ class Engine:
         In resident mode this is thread-safe and may be called while the
         dispatch loop is running.  `retry` overrides the engine-wide
         `RetryPolicy` for this task."""
+        if self.transport == "proc" and fn is not None:
+            meta = dict(meta or {})
+            if "__call__" not in meta:
+                # pack the callable for the worker process NOW: an
+                # unpicklable fn raises SerializationError at submit
+                # time, naming the task — never opaquely in a worker
+                meta["__call__"] = dumps_call(fn, task=name)
         task = EngineTask(name=name, fn=fn, deps=tuple(deps),
                           meta=dict(meta or {}), slots=max(int(slots), 1),
                           priority=priority, retry=retry)
@@ -658,6 +679,12 @@ class Engine:
             keep: set = set()
             for task in self._mailbox:
                 keep.update(task.deps)
+            if self.transport == "proc":
+                # a worker may still Fetch a dependency VALUE for any
+                # in-flight dependent — keep those payloads fetchable
+                for n, t in self.tasks.items():
+                    if t.deps and n not in self._terminal:
+                        keep.update(t.deps)
             prunable = [n for n in self._terminal
                         if n not in self._succs and n not in keep]
             for n in prunable:
@@ -775,6 +802,8 @@ class Engine:
         die / the pool stalls).  `execute(name, meta)` may return bool,
         (ok, value), or None (success); default runs the submitted `fn`.
         In resident mode the loop instead runs until `shutdown()`."""
+        if self.transport == "proc":
+            return self._run_proc(execute, pass_worker)
         exec_fn = execute or self._execute_registered
         self._pass_worker = pass_worker and execute is not None
         resident = self.resident
@@ -1280,6 +1309,237 @@ class Engine:
         return EngineReport(
             results=results, trace=self.tracer, workers=max(eff_workers, 1),
             pool_workers=max(peak_workers, 1),
+            wall_s=time.perf_counter() - t_wall0,
+            errors=self.backend.errors(), stalled=stalled,
+            backend_stats=self.backend.stats())
+
+    # ------------------------------------------------------- proc transport
+    @property
+    def comm_address(self) -> Optional[str]:
+        """Where `python -m repro.core.engine.comm.worker --connect` dials
+        (`tcp://host:port`) — None for in-process transports."""
+        return getattr(self.backend, "address", None)
+
+    def worker_pids(self) -> dict:
+        """worker -> OS pid for every handshaken worker process
+        (transport="proc"; empty for in-process transports)."""
+        fn = getattr(self.backend, "worker_pids", None)
+        return fn() if fn is not None else {}
+
+    def wait_workers(self, n: Optional[int] = None,
+                     timeout: float = 30.0) -> bool:
+        """Block until `n` workers (default: the configured pool size)
+        have completed their Hello handshake.  True once reached; in-
+        process transports return True immediately (workers are the
+        dispatch loop itself)."""
+        fn = getattr(self.backend, "connected", None)
+        if fn is None:
+            return True
+        want = self.workers if n is None else int(n)
+        deadline = time.monotonic() + timeout
+        while len(fn()) < want:
+            if time.monotonic() >= deadline:
+                return False
+            time.sleep(0.01)
+        return True
+
+    def _run_proc(self, execute, pass_worker: bool) -> EngineReport:
+        """Dispatch loop for `transport="proc"` — supervision, not
+        execution.  Tasks run inside worker processes that speak the
+        frame protocol straight to the backend's front door on its
+        handler threads; this loop ingests submissions, drains the
+        completion records the door queued, reconstructs their trace
+        spans, and supervises liveness (membership commands, remote
+        joins, crash/stale detection with zero-loss requeue)."""
+        backend = self.backend
+        resident = self.resident
+        tracer = self.tracer
+        emit = tracer.emit
+        t_wall0 = time.perf_counter()
+        # serialize the execute callback BEFORE spawning anything: an
+        # unpicklable callback must fail fast, not hang a handshake
+        backend.prepare(execute=execute, pass_worker=pass_worker,
+                        steal_n=self.steal_n, resident=resident)
+        alive = [f"w{i}" for i in range(self.workers)]
+        dead: set[str] = set()
+        self._dead_workers = dead
+        wstats = self._wstats
+        for w in alive:
+            wstats.setdefault(w, [0, 0.0])
+        self._live = len(alive)
+        peak_workers = max(len(alive), 1)
+        backend.start_pool(alive)
+        results: dict[str, TaskResult] = {}
+        record_results = self.keep_results or not resident
+        note_terminal = (self._note_terminal
+                         if resident or self.on_result is not None
+                         or self.journal is not None else None)
+        note_many = self._note_terminal_many
+        terminal_seen = self._terminal if note_terminal else ()
+        # liveness grace: a worker busy on a long task still heartbeats
+        # (daemon thread), so staleness only means the PROCESS is gone or
+        # wedged; locally-spawned processes are additionally poll()ed
+        # and surface within one round of dying
+        grace = max(3.0 * self.heartbeat_s, 1.0)
+        stolen_at = backend.door.stolen_at
+        stalled = False
+        idle_rounds = 0
+        try:
+            while True:
+                progress = False
+                stopping = not resident or self._stop
+                if resident:
+                    if self._abort:
+                        break
+                    if self._mailbox:
+                        self._ingest_mailbox()
+                        progress = True
+                    if self._commands:
+                        with self._cond:
+                            cmds = list(self._commands)
+                            self._commands.clear()
+                        for cmd, w in cmds:
+                            if cmd == "add":
+                                if w in wstats and w not in dead:
+                                    continue          # already live
+                                dead.discard(w)
+                                backend.door.exited.discard(w)
+                                if w not in alive:
+                                    alive.append(w)
+                                wstats.setdefault(w, [0, 0.0])
+                                backend.spawn(w)
+                                self._live = len(alive) - len(dead)
+                                peak_workers = max(peak_workers,
+                                                   self._live)
+                            elif cmd == "lose" and w in wstats \
+                                    and w not in dead:
+                                dead.add(w)
+                                self.worker_deaths += 1
+                                emit(WORKER_DEAD, worker=w, reason="lose")
+                                backend.kill_worker(w)
+                                backend.exit_worker(w)
+                                self._live = len(alive) - len(dead)
+                                progress = True
+                # remote joins: a CLI worker's Hello is add_worker-on-
+                # connect (multi-host launch), and locally-spawned
+                # workers land here too (their handshake confirms them)
+                for w in backend.drain_joined():
+                    if w in wstats and w not in dead:
+                        continue
+                    if w in dead:
+                        dead.discard(w)
+                    if w not in alive:
+                        alive.append(w)
+                    wstats.setdefault(w, [0, 0.0])
+                    self._live = len(alive) - len(dead)
+                    peak_workers = max(peak_workers, self._live)
+                    progress = True
+                # completion records queued by the front door
+                recs = backend.drain_records()
+                if recs:
+                    progress = True
+                    notes = [] if note_terminal is not None else None
+                    for w, name, ok, err, dur, payload in recs:
+                        if name in terminal_seen or name in results:
+                            # duplicate after a requeue: first one won
+                            stolen_at.pop(name, None)
+                            continue
+                        value = None
+                        if ok and payload is not None:
+                            try:
+                                value = loads(payload)
+                            except Exception as e:  # noqa: BLE001
+                                ok = False
+                                err = ("result deserialization failed: "
+                                       f"{e!r}")
+                        # reconstruct the run span from the worker's
+                        # reported duration, clamped to the STOLEN stamp
+                        # so report pairing never sees negative dispatch
+                        t1 = tracer.clock()
+                        t0 = t1 - dur
+                        t_stolen = stolen_at.pop(name, None)
+                        if t_stolen is not None and t0 < t_stolen:
+                            t0 = t_stolen
+                        tracer.emit_at(t0, RUN_START, task=name, worker=w)
+                        tracer.emit_at(t1, RUN_END, task=name, worker=w)
+                        st = wstats.setdefault(w, [0, 0.0])
+                        st[0] += 1
+                        st[1] += dur
+                        if not ok:
+                            self.exec_failed += 1
+                        res = TaskResult(task=name, ok=ok, worker=w,
+                                         t_start=t0, t_end=t1, value=value,
+                                         error=err)
+                        if record_results:
+                            results[name] = res
+                        emit(COMPLETED if ok else FAILED, task=name,
+                             worker=w, error=err)
+                        if notes is not None:
+                            notes.append((name, ok, res))
+                        elif ok:
+                            self._on_terminal(name)
+                    if notes:
+                        note_many(notes)
+                # lease requeues observed at the wire (an expired lease
+                # reaped by another worker's steal)
+                n_rq = backend.drain_requeued()
+                if n_rq:
+                    emit(REQUEUED, n=n_rq, via="lease")
+                    if self.journal is not None:
+                        self.journal.append_requeue(n_rq, "lease")
+                    progress = True
+                # liveness: a SIGKILLed process surfaces as a crash
+                # (WORKER_DEAD) and its in-flight work requeues via Exit
+                for w, reason in backend.check_dead(grace):
+                    if w in dead or w not in wstats:
+                        continue
+                    dead.add(w)
+                    self.worker_deaths += 1
+                    emit(WORKER_DEAD, worker=w, crash=True, reason=reason)
+                    backend.exit_worker(w)
+                    self._live = len(alive) - len(dead)
+                    progress = True
+                # termination
+                if stopping and not backend.has_records():
+                    if resident:
+                        with self._cond:
+                            if self._inflight <= 0 and not self._mailbox:
+                                break
+                    elif backend.all_done():
+                        break
+                    elif len(dead) >= len(alive):
+                        stalled = True     # every worker died mid-batch
+                        break
+                if progress:
+                    idle_rounds = 0
+                else:
+                    idle_rounds += 1
+                    if idle_rounds >= self.max_idle_rounds and stopping \
+                            and not resident:
+                        # workers alive but nothing moving: only a true
+                        # deadlock (nothing ready, nothing leased) is a
+                        # stall — long-running tasks are just busy
+                        st = backend.stats()
+                        if not st.get("ready", 0) \
+                                and not st.get("assigned", 0) \
+                                and not backend.all_done():
+                            stalled = True
+                            break
+                        idle_rounds = 0
+                    time.sleep(self.poll)
+        finally:
+            backend.stop_pool()
+            journal = self.journal
+            if journal is not None:
+                journal.sync()
+                if self._owns_journal:
+                    journal.close()
+            if self._owns_backend:
+                self.backend.close()
+        live_peak = max(peak_workers, 1)
+        return EngineReport(
+            results=results, trace=self.tracer, workers=live_peak,
+            pool_workers=live_peak,
             wall_s=time.perf_counter() - t_wall0,
             errors=self.backend.errors(), stalled=stalled,
             backend_stats=self.backend.stats())

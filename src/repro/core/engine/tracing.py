@@ -105,6 +105,24 @@ class TraceRecorder:
                 self.events.append(ev)
         return ev
 
+    def emit_at(self, t: float, event: str, task: Optional[str] = None,
+                worker: Optional[str] = None, **extra):
+        """Emit with an explicit timestamp instead of stamping the clock:
+        the proc transport reconstructs RUN_START/RUN_END spans
+        engine-side from worker-reported durations, so the stamps must
+        reflect when the task ran in the worker process, not when the
+        record drained.  Events still append in call order (the report
+        pairing walks list order, not timestamps)."""
+        ev = TraceEvent(t, event, task, worker, extra)
+        if self.max_events is None:
+            self.n_emitted += 1
+            self.events.append(ev)
+        else:
+            with self._lock:
+                self.n_emitted += 1
+                self.events.append(ev)
+        return ev
+
     def emit4(self, event: str, task: str, worker: str):
         """No-extra fast emit for the 3-4 per-task lifecycle events on the
         dispatch hot path (skips kwargs packing)."""

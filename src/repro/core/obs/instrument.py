@@ -24,6 +24,7 @@ HTTP (`repro.core.obs.server`).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 from repro.core.obs.metrics import LATENCY_BUCKETS, MetricsRegistry
@@ -31,6 +32,40 @@ from repro.core.obs.metrics import LATENCY_BUCKETS, MetricsRegistry
 # rpc round-trips live in the µs..ms decades; the tail of the default
 # ladder would waste half the buckets on impossible multi-second rpcs
 RPC_BUCKETS = tuple(b for b in LATENCY_BUCKETS if b <= 0.25)
+
+_PAGE_SIZE = 4096
+try:
+    _PAGE_SIZE = os.sysconf("SC_PAGE_SIZE")
+except (ValueError, OSError, AttributeError):  # pragma: no cover
+    pass
+
+
+def _pid_rss(pid: int) -> int:
+    """Resident set size of `pid` in bytes via /proc/<pid>/statm (Linux;
+    0 when the pid is gone or the platform has no procfs) — monitoring
+    never fails the scrape."""
+    if not pid:
+        return 0
+    try:
+        with open(f"/proc/{pid}/statm", "rb") as f:
+            return int(f.read().split()[1]) * _PAGE_SIZE
+    except (OSError, IndexError, ValueError):
+        return 0
+
+
+def instrument_worker_rss(reg: MetricsRegistry, engine) -> None:
+    """Per-process memory gauges for `transport="proc"`: one
+    `repro_worker_rss_bytes{worker=}` callback gauge per handshaken
+    worker process.  Idempotent (get-or-create) and pid-chasing: the
+    callback re-reads the worker's CURRENT pid at scrape time, so a
+    respawned worker reports its new process.  No-op for in-process
+    transports (no pids to read)."""
+    for w in engine.worker_pids():
+        reg.gauge(
+            "repro_worker_rss_bytes",
+            "Worker process resident set size (transport=proc)",
+            labels={"worker": w},
+            fn=lambda e=engine, w=w: _pid_rss(e.worker_pids().get(w, 0)))
 
 
 class RpcMetrics:
@@ -133,6 +168,9 @@ def _instrument_engine(reg: MetricsRegistry, engine) -> None:
     reg.counter("repro_trace_dropped_total",
                 "Trace events evicted by the ring buffer",
                 fn=lambda: tracer.dropped)
+    # proc transport: per-worker-process RSS (workers that join later are
+    # folded in by the StatsServer at scrape time via the same call)
+    instrument_worker_rss(reg, engine)
 
 
 def _instrument_frontend(reg: MetricsRegistry, fe, index: int = 0) -> None:

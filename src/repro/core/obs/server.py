@@ -154,8 +154,17 @@ class StatsServer:
         return []
 
     def stats(self) -> dict:
-        payload: dict = {"metrics": self.registry.dump()}
         eng = self._engine
+        pids: dict = {}
+        if eng is not None:
+            # proc transport: register RSS gauges for workers that joined
+            # after instrumentation, BEFORE the registry dump below so
+            # the same scrape already exposes them
+            pids = eng.worker_pids()
+            if pids:
+                from repro.core.obs.instrument import instrument_worker_rss
+                instrument_worker_rss(self.registry, eng)
+        payload: dict = {"metrics": self.registry.dump()}
         if eng is not None:
             now = time.monotonic()
             wstats = eng.worker_stats()
@@ -170,6 +179,8 @@ class StatsServer:
                 lt, ldone, lbusy = last
                 window = max(now - lt, 1e-9)
                 rate = max(done_total - ldone, 0) / window
+            if pids:
+                from repro.core.obs.instrument import _pid_rss
             workers = {}
             for w, s in wstats.items():
                 row = {"done": s["done"],
@@ -178,6 +189,10 @@ class StatsServer:
                 if window is not None:
                     frac = (s["busy_s"] - lbusy.get(w, 0.0)) / window
                     row["busy_frac"] = round(min(max(frac, 0.0), 1.0), 4)
+                pid = pids.get(w)
+                if pid:
+                    row["pid"] = pid
+                    row["rss_bytes"] = _pid_rss(pid)
                 workers[w] = row
             tracer = eng.tracer
             journal = eng.journal

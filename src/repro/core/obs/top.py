@@ -47,14 +47,26 @@ def render(stats: dict) -> str:
          f"   trace emitted {trace.get('n_emitted', 0)}"
          f" dropped {trace.get('dropped', 0)}"),
         "",
-        f"  {'WORKER':<12}{'DONE':>10}{'BUSY_S':>12}{'BUSY%':>8}  STATE",
     ]
-    for w, row in (stats.get("workers") or {}).items():
+    workers = stats.get("workers") or {}
+    # pid/rss columns only when the rows carry them (transport="proc")
+    with_pids = any(row.get("pid") for row in workers.values())
+    header = f"  {'WORKER':<12}{'DONE':>10}{'BUSY_S':>12}{'BUSY%':>8}"
+    if with_pids:
+        header += f"{'PID':>8}{'RSS_MB':>9}"
+    lines.append(header + "  STATE")
+    for w, row in workers.items():
         frac = row.get("busy_frac")
         busy_pct = f"{frac * 100:7.1f}%" if frac is not None else "      —"
-        lines.append(f"  {w:<12}{row.get('done', 0):>10}"
-                     f"{row.get('busy_s', 0.0):>12.3f}{busy_pct}  "
-                     f"{'live' if row.get('alive', True) else 'DEAD'}")
+        line = (f"  {w:<12}{row.get('done', 0):>10}"
+                f"{row.get('busy_s', 0.0):>12.3f}{busy_pct}")
+        if with_pids:
+            pid = row.get("pid")
+            rss = row.get("rss_bytes")
+            line += f"{pid if pid else '—':>8}"
+            line += (f"{rss / 1e6:>9.1f}" if rss else f"{'—':>9}")
+        lines.append(line + "  "
+                     + ("live" if row.get("alive", True) else "DEAD"))
     cp = stats.get("critical_path") or {}
     if cp.get("skipped"):
         lines.append("")

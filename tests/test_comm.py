@@ -1,0 +1,407 @@
+"""Comm subsystem tests: the connector/listener registry, the proc
+transport end to end (worker processes over the Table-2 frame protocol),
+crash recovery with zero task loss, submit-time serialization errors,
+multi-host joins, and orphan reaping.
+
+Every task callable here is a lambda: cloudpickle serializes lambdas BY
+VALUE, so they cross the process boundary without the worker needing to
+import this test module (module-level test functions pickle by
+reference and would fail to resolve in the worker)."""
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.client import Client
+from repro.client.futures import TaskFailed
+from repro.core.dwork.api import Create
+from repro.core.dwork.pool import run_pool
+from repro.core.dwork.server import TaskServer
+from repro.core.engine import Engine, TraceRecorder
+from repro.core.engine.comm import (Ref, SerializationError, connect,
+                                    dumps_call, listen, loads_call,
+                                    transport_names)
+from repro.core.engine.model import REQUEUED, WORKER_DEAD, WorkerCrash
+
+HB = 0.1          # fast heartbeat so liveness tests stay quick
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def _wait_gone(pids, timeout=10.0) -> bool:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if not any(_pid_alive(p) for p in pids):
+            return True
+        time.sleep(0.05)
+    return False
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_transport_registry_names():
+    names = transport_names()
+    assert set(names) >= {"inproc", "thread", "tree", "proc"}
+    with pytest.raises(ValueError, match="unknown transport"):
+        Engine(transport="carrier-pigeon")
+
+
+def test_connect_listen_roundtrip_tcp_and_inproc():
+    class Echo:
+        def handle(self, msg):
+            return msg
+
+    for addr in ("tcp://127.0.0.1:0", "inproc://test-echo"):
+        lst = listen(addr, Echo())
+        try:
+            comm = connect(lst.address)
+            out = comm.request(Create(task="ping"))
+            assert isinstance(out, Create) and out.task == "ping"
+            comm.close()
+        finally:
+            lst.stop()
+    with pytest.raises(ValueError, match="no scheme"):
+        connect("localhost:1234")
+
+
+def test_serialize_call_roundtrip_and_error_naming():
+    payload = dumps_call((lambda x, y=1: x + y), (4,), {"y": 2}, task="t")
+    fn, args, kwargs = loads_call(payload)
+    assert fn(*args, **kwargs) == 6
+    lock = threading.Lock()
+    with pytest.raises(SerializationError) as ei:
+        dumps_call((lambda: lock.acquire()), task="locked-up")
+    assert "locked-up" in str(ei.value)
+    assert Ref("a").name == "a" and "a" in repr(Ref("a"))
+
+
+# ---------------------------------------------------------- proc: basics
+
+
+def test_proc_batch_roundtrip_values():
+    eng = Engine(transport="proc", workers=2, heartbeat_s=HB)
+    for i in range(20):
+        eng.submit(f"t{i}", (lambda i=i: i * i))
+    rep = eng.run()
+    assert not rep.stalled
+    assert sorted(r.value for r in rep.results.values()) == \
+        [i * i for i in range(20)]
+    assert rep.workers == 2       # real parallelism, unlike inline
+
+
+def test_proc_dependencies_and_failure_poisoning():
+    eng = Engine(transport="proc", workers=2, heartbeat_s=HB)
+    eng.submit("ok", (lambda: 3))
+    eng.submit("boom", (lambda: 1 / 0))
+    eng.submit("doomed", (lambda: 99), deps=("boom",))
+    rep = eng.run()
+    assert rep.results["ok"].value == 3
+    r = rep.results["boom"]
+    assert not r.ok and "ZeroDivisionError" in r.error
+    assert "doomed" not in rep.results        # poisoned, never ran
+    assert "doomed" in rep.errors or "boom" in rep.errors
+
+
+def test_proc_submit_time_serialization_error_names_task():
+    eng = Engine(transport="proc", workers=1, heartbeat_s=HB)
+    lock = threading.Lock()
+    try:
+        with pytest.raises(SerializationError) as ei:
+            eng.submit("unpicklable-task", (lambda: lock.acquire()))
+        assert "unpicklable-task" in str(ei.value)
+    finally:
+        eng.backend.close()
+
+
+def test_proc_shards_compose():
+    eng = Engine(transport="proc", workers=3, shards=2, heartbeat_s=HB)
+    assert eng.shards == 2
+    for i in range(30):
+        eng.submit(f"t{i}", (lambda i=i: i))
+    rep = eng.run()
+    assert sorted(r.value for r in rep.results.values()) == list(range(30))
+
+
+def test_proc_run_pool_shim():
+    srv = TaskServer()
+    for i in range(10):
+        srv.handle(Create(task=f"job{i}"))
+    rep = run_pool(srv, (lambda name, meta: (True, name)), workers=2,
+                   transport="proc", heartbeat_s=HB)
+    assert len(rep.results) == 10
+    assert all(r.value == r.task for r in rep.results.values())
+
+
+# ----------------------------------------------------- crash + liveness
+
+
+def test_proc_sigkill_mid_task_requeues_exactly_once():
+    """A SIGKILLed worker process surfaces as a crash; its in-flight
+    tasks requeue and the run finishes with zero loss and no duplicate
+    terminal accounting."""
+    eng = Engine(transport="proc", workers=2, resident=True,
+                 heartbeat_s=HB)
+    eng.start()
+    assert eng.wait_workers(2, timeout=20)
+    for i in range(8):
+        eng.submit(f"s{i}", (lambda i=i: (time.sleep(0.2), i)[1]))
+    time.sleep(0.3)                       # mid-flight
+    victim = next(iter(eng.worker_pids().values()))
+    os.kill(victim, signal.SIGKILL)
+    assert eng.drain(timeout=60)
+    rep = eng.shutdown()
+    assert not rep.stalled and eng.worker_deaths == 1
+    assert sorted(r.value for r in rep.results.values() if r.ok) == \
+        list(range(8))
+    dead = rep.trace.of(WORKER_DEAD)
+    assert len(dead) == 1 and dead[0].extra.get("reason") in ("crash",
+                                                              "stale")
+
+
+def test_proc_worker_crash_exception_kills_real_process():
+    """WorkerCrash raised in a task body hard-exits the worker process;
+    with every worker dead the batch run reports a stall, not a hang."""
+    eng = Engine(transport="proc", workers=2, heartbeat_s=HB)
+    eng.submit("die", (lambda: (_ for _ in ()).throw(WorkerCrash("x"))))
+    rep = eng.run()
+    assert rep.stalled and eng.worker_deaths == 2
+    assert "die" not in rep.results
+
+
+def test_proc_lease_expiry_requeues_via_wire():
+    """With an explicit lease_timeout shorter than a task, an idle
+    worker's steal reaps the expired lease: the task re-runs and the
+    wire-observed requeue is traced via='lease' — but the engine still
+    counts the task exactly once."""
+    eng = Engine(transport="proc", workers=2, heartbeat_s=HB,
+                 lease_timeout=0.3)
+    eng.submit("long", (lambda: (time.sleep(0.9), "v")[1]))
+    for i in range(3):
+        eng.submit(f"pad{i}", (lambda: None))
+    rep = eng.run()
+    assert rep.results["long"].ok and rep.results["long"].value == "v"
+    rq = [e for e in rep.trace.of(REQUEUED)
+          if e.extra.get("via") == "lease"]
+    assert rq and sum(e.extra.get("n", 0) for e in rq) >= 1
+    # exactly-once: one terminal record despite the duplicate execution
+    assert len([n for n in rep.results if n == "long"]) == 1
+
+
+def test_proc_futures_chain_across_kill():
+    """A pending-future argument crosses as a Ref; after the producer's
+    worker is killed, the dependent lands on a fresh worker and fetches
+    the value from the front door."""
+    # steal_n=1: the worker reports a's completion BEFORE stealing hold,
+    # so a.result() returns while the worker is wedged inside hold and
+    # b is still pending when the kill lands
+    with Client(workers=1, transport="proc", steal_n=1,
+                heartbeat_s=HB) as c:
+        a = c.submit(lambda: (time.sleep(0.3), 7)[1])
+        # wedge the single worker so b cannot run before the kill lands
+        hold = c.submit(lambda: (time.sleep(2.0), "held")[1])
+        b = c.submit((lambda x: x + 1), a)   # a pending -> Ref in payload
+        assert a.result(timeout=30) == 7     # worker is now inside `hold`
+        eng = c.engine
+        assert eng.wait_workers(1, timeout=20)
+        victim = next(iter(eng.worker_pids().values()))
+        os.kill(victim, signal.SIGKILL)
+        eng.add_worker()
+        # b lands on the fresh worker, whose empty cache forces a Fetch
+        # of a's value from the front door
+        assert b.result(timeout=60) == 8
+        assert hold.result(timeout=60) == "held"   # requeued, re-run
+        assert eng.worker_deaths >= 1
+
+
+def test_proc_announced_exit_lose_worker():
+    eng = Engine(transport="proc", workers=2, resident=True,
+                 heartbeat_s=HB)
+    eng.start()
+    assert eng.wait_workers(2, timeout=20)
+    eng.lose_worker("w0")
+    for i in range(6):
+        eng.submit(f"t{i}", (lambda i=i: i))
+    assert eng.drain(timeout=30)
+    rep = eng.shutdown()
+    assert sorted(r.value for r in rep.results.values()) == list(range(6))
+    assert all(r.worker != "w0" for r in rep.results.values()
+               if r.t_start > 0)
+    assert any(e.extra.get("reason") == "lose"
+               for e in rep.trace.of(WORKER_DEAD))
+
+
+# -------------------------------------------------------------- client
+
+
+def test_proc_client_futures_map_gather():
+    with Client(workers=2, transport="proc", heartbeat_s=HB) as c:
+        fs = c.map((lambda x: x + 1), range(12))
+        assert c.gather(fs) == list(range(1, 13))
+        a = c.submit(lambda: 10)
+        b = c.submit(lambda: 32)
+        s = c.submit((lambda x, y: x + y), a, b)
+        assert s.result(timeout=30) == 42
+
+
+def test_proc_client_failure_and_submit_time_error():
+    with Client(workers=2, transport="proc", heartbeat_s=HB) as c:
+        f = c.submit(lambda: [].pop())
+        with pytest.raises(TaskFailed, match="IndexError"):
+            f.result(timeout=30)
+        lock = threading.Lock()
+        with pytest.raises(SerializationError) as ei:
+            c.submit((lambda: lock.acquire()), key="cant-pickle")
+        assert "cant-pickle" in str(ei.value)
+        # the failed submit must not leak a permanently-pending future
+        ok = c.submit(lambda: "fine")
+        assert ok.result(timeout=30) == "fine"
+
+
+# ----------------------------------------------------- pool lifecycle
+
+
+def test_proc_orphans_reaped_on_shutdown():
+    eng = Engine(transport="proc", workers=2, resident=True,
+                 heartbeat_s=HB)
+    eng.start()
+    assert eng.wait_workers(2, timeout=20)
+    pids = list(eng.worker_pids().values())
+    assert all(_pid_alive(p) for p in pids)
+    eng.submit("t", (lambda: 1))
+    assert eng.drain(timeout=30)
+    eng.shutdown()
+    assert _wait_gone(pids), f"worker processes survived shutdown: {pids}"
+
+
+def test_proc_orphans_reaped_on_interpreter_exit():
+    """A session that never reaches shutdown() must not leave worker
+    processes behind: the atexit net (and the workers' own
+    connection-loss self-reaping) clean up on interpreter exit."""
+    code = (
+        "import sys, time\n"
+        "from repro.core.engine import Engine\n"
+        "eng = Engine(transport='proc', workers=2, resident=True,\n"
+        "             heartbeat_s=0.1)\n"
+        "eng.start()\n"
+        "assert eng.wait_workers(2, timeout=20)\n"
+        "print(' '.join(str(p) for p in eng.worker_pids().values()))\n"
+        "sys.stdout.flush()\n"
+        # exit with the pool still running: no shutdown(), no close()
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    pids = [int(p) for p in out.stdout.split()]
+    assert len(pids) == 2
+    assert _wait_gone(pids), f"workers outlived the interpreter: {pids}"
+
+
+# ----------------------------------------------------------- multi-host
+
+
+def test_proc_multi_host_join_via_cli_worker():
+    """An engine with zero local workers; a worker launched by hand (the
+    multi-host path) dials the front door, joins on Hello, and drains
+    the universe."""
+    eng = Engine(transport="proc", workers=0, resident=True,
+                 heartbeat_s=HB)
+    eng.start()
+    deadline = time.monotonic() + 10
+    while eng.comm_address is None and time.monotonic() < deadline:
+        time.sleep(0.01)
+    addr = eng.comm_address
+    assert addr and addr.startswith("tcp://")
+    for i in range(5):
+        eng.submit(f"m{i}", (lambda i=i: i * 10))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.engine.comm.worker",
+         "--connect", addr], env=env,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        assert eng.drain(timeout=60)
+        rep = eng.shutdown()
+        assert sorted(r.value for r in rep.results.values()) == \
+            [0, 10, 20, 30, 40]
+        # engine-assigned id for an anonymous join
+        assert all(r.worker.startswith("r") for r in rep.results.values())
+        proc.wait(timeout=15)
+        assert proc.returncode == 0       # clean protocol goodbye
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+# ------------------------------------------------------------------ obs
+
+
+def test_proc_rss_gauge_and_stats_pids():
+    from repro.core.obs import StatsServer, instrument
+
+    eng = Engine(transport="proc", workers=2, resident=True,
+                 heartbeat_s=HB)
+    eng.start()
+    assert eng.wait_workers(2, timeout=20)
+    for i in range(4):
+        eng.submit(f"t{i}", (lambda i=i: i))
+    assert eng.drain(timeout=30)
+    reg = instrument(engine=eng)
+    srv = StatsServer(reg, engine=eng).start()
+    try:
+        stats = srv.stats()
+        rows = stats["workers"]
+        assert all(row.get("pid") and row.get("rss_bytes", 0) > 1 << 20
+                   for row in rows.values())
+        rss = {k: v for k, v in stats["metrics"]["gauges"].items()
+               if k.startswith("repro_worker_rss_bytes")}
+        assert len(rss) == 2 and all(v > 1 << 20 for v in rss.values())
+        from repro.core.obs.top import render
+        view = render(stats)
+        assert "PID" in view and "RSS_MB" in view
+    finally:
+        srv.stop()
+        eng.shutdown()
+
+
+def test_proc_tracer_spans_reconstructed():
+    """Worker-side durations reconstruct RUN_START/RUN_END spans that
+    the overhead report can pair (no negative dispatch)."""
+    from repro.core.engine.model import RUN_END, RUN_START, STOLEN
+
+    tracer = TraceRecorder()
+    eng = Engine(transport="proc", workers=2, tracer=tracer,
+                 heartbeat_s=HB)
+    for i in range(6):
+        eng.submit(f"t{i}", (lambda: time.sleep(0.02)))
+    rep = eng.run()
+    starts = {e.task: e.t for e in rep.trace.of(RUN_START)}
+    ends = {e.task: e.t for e in rep.trace.of(RUN_END)}
+    stolen = {e.task: e.t for e in rep.trace.of(STOLEN)}
+    assert set(starts) == {f"t{i}" for i in range(6)}
+    for t in starts:
+        assert stolen[t] <= starts[t] <= ends[t]
+        assert ends[t] - starts[t] >= 0.015       # worker-measured dur
+    ov = rep.overhead()
+    assert ov.n_tasks == 6
