@@ -23,7 +23,7 @@ from typing import Callable, Iterable, Optional
 
 from repro.client.futures import (_CANCELLED, _DONE, CancelledError,
                                   DependencyFailed, Future, TaskFailed)
-from repro.core.engine.comm.serialize import Ref, dumps_call
+from repro.core.engine.comm.serialize import RemoteValue, Ref, dumps_call
 from repro.core.engine.executor import Engine, EngineReport
 from repro.core.engine.model import CREATED, FAILED, WorkerCrash, next_seq
 from repro.core.engine.tracing import OverheadReport, TraceRecorder
@@ -419,6 +419,9 @@ class Client:
             exc = (CancelledError(f.name) if f.cancelled()
                    else f._exception)
             if exc is None:
+                if isinstance(f._value, RemoteValue):
+                    # data-plane handle: materialize (and cache) on read
+                    f._value = f._value.get()
                 out.append(f._value)
             elif return_exceptions:
                 out.append(exc)
@@ -719,7 +722,17 @@ def _proc_call_payload(name: str, fn: Callable, args: tuple,
     def lift(x):
         if not isinstance(x, Future):
             return x
-        return x._peek() if x.done() else Ref(x.name)
+        if not x.done():
+            return Ref(x.name)
+        if isinstance(x._value, RemoteValue):
+            # the value never left its producing worker: keep it remote
+            # (the dependent peer-fetches it) instead of hauling it
+            # through this process — but pin the name so auto-prune can't
+            # evict the payload before the dependent runs (a done
+            # future's dep edge is dropped by _lift_deps)
+            x._client.engine.pin(x.name)
+            return Ref(x.name)
+        return x._peek()
 
     a = tuple(lift(x) for x in args)
     kw = {k: lift(v) for k, v in kwargs.items()} if kwargs else {}

@@ -26,6 +26,8 @@ import queue
 import time
 from typing import Callable, Iterable, Optional
 
+from repro.core.engine.comm.serialize import RemoteValue
+
 
 class CancelledError(Exception):
     """The future was cancelled before its task was stolen."""
@@ -94,6 +96,10 @@ class Future:
             raise CancelledError(self.name)
         if self._exception is not None:
             raise self._exception
+        if isinstance(self._value, RemoteValue):
+            # peer-to-peer data plane: the payload stayed in its producing
+            # worker's store — materialize (and cache) on first read
+            self._value = self._value.get()
         return self._value
 
     def exception(self, timeout: Optional[float] = None

@@ -122,30 +122,48 @@ class Stats:
 # (`repro.core.engine.comm`): spoken between a worker PROCESS and the
 # engine's front door, never by the TaskServer itself — the front door
 # strips them (and the extended CompleteSteal `done` entries, which may
-# carry a third per-task element {"v": value, "e": error, "d": duration})
-# down to the plain Table-2 protocol before forwarding.
+# carry a third per-task element {"v": value, "e": error, "d": duration,
+# "n": nbytes, "x": xfer stats, "as": store-as alias}) down to the plain
+# Table-2 protocol before forwarding.  Results larger than the inline
+# threshold stay in the producing worker's local store ("n" instead of
+# "v"); the hub tracks their LOCATION and answers Fetch with a LocMsg
+# redirect so dependents pull peer-to-peer.  Spill pushes an evicted (or
+# exit-flushed) value back to the hub so it survives the producer.
+
+# error prefix a worker uses to report a dependency value it could not
+# obtain from either its producer or the hub (producer SIGKILLed before
+# replication): the front door intercepts these instead of failing the
+# task, and the engine recomputes the missing value
+XFER_LOST_PREFIX = "__xfer_lost__:"
 
 
 @dataclass
 class Hello:
     """Worker-process handshake.  An empty `worker` asks the engine to
-    assign an id (multi-host join)."""
+    assign an id (multi-host join).  `data_addr` advertises the worker's
+    peer-fetch listener (`tcp://host:port`; empty = no data plane)."""
     worker: str = ""
     pid: int = 0
     host: str = ""
+    data_addr: str = ""
 
 
 @dataclass
 class HelloResp:
     """Handshake reply: the worker's id plus its run configuration —
-    steal batch size, heartbeat cadence, and (optionally) the engine's
-    execute callback as a cloudpickle payload."""
+    steal batch size, heartbeat cadence, data-plane thresholds
+    (`inline_bytes`: results at most this many payload bytes inline into
+    CompleteSteal; `spill_bytes`: the worker-local store's LRU byte
+    budget), and (optionally) the engine's execute callback as a
+    cloudpickle payload."""
     worker: str = ""
     steal_n: int = 1
     resident: bool = False
     pass_worker: bool = False
     heartbeat_s: float = 0.5
     execute: Optional[str] = None
+    inline_bytes: int = 65536
+    spill_bytes: int = 67108864
 
 
 @dataclass
@@ -169,12 +187,36 @@ class ValueMsg:
     payload: str = ""
 
 
+@dataclass
+class LocMsg:
+    """Fetch redirect: the hub doesn't hold the value, but knows the
+    worker that does — dial `addr` (a worker's data listener) and Fetch
+    there.  `nbytes` is the serialized payload size (attribution)."""
+    task: str
+    addr: str = ""
+    worker: str = ""
+    nbytes: int = 0
+
+
+@dataclass
+class Spill:
+    """Push a locally-stored result's payload to the hub: LRU eviction
+    under the worker's byte budget, or the exit flush that replicates
+    every still-unspilled owned value before a clean goodbye.  Response:
+    ExitResp (accepted) | NotFound (the hub no longer tracks the task —
+    pruned; the payload is dropped)."""
+    worker: str
+    task: str
+    payload: str = ""
+
+
 _TAGS = {"Create": Create, "Steal": Steal, "Complete": Complete,
          "CompleteSteal": CompleteSteal, "Transfer": Transfer, "Exit": Exit,
          "TaskMsg": TaskMsg, "NotFound": NotFound, "ExitResp": ExitResp,
          "Stats": Stats, "Release": Release, "Cancel": Cancel,
          "Hello": Hello, "HelloResp": HelloResp, "Heartbeat": Heartbeat,
-         "Fetch": Fetch, "ValueMsg": ValueMsg}
+         "Fetch": Fetch, "ValueMsg": ValueMsg, "LocMsg": LocMsg,
+         "Spill": Spill}
 
 
 def encode(msg) -> bytes:

@@ -39,7 +39,7 @@ from typing import Callable, Optional
 
 from repro.core.dwork.api import (Cancel, Complete, CompleteSteal, Create,
                                   Exit, ExitResp, NotFound, Release, Stats,
-                                  Steal, TaskMsg)
+                                  Steal, TaskMsg, Transfer)
 from repro.core.dwork.server import TaskServer
 
 
@@ -119,6 +119,9 @@ class ShardedHub:
             return ExitResp()
         if isinstance(msg, Cancel):
             return ExitResp() if self.cancel(msg.task) else NotFound()
+        if isinstance(msg, Transfer):
+            return self.transfer(msg.worker, msg.task,
+                                 new_deps=msg.new_deps)
         if isinstance(msg, Stats):
             return self.stats()
         raise TypeError(f"unroutable message {msg!r}")
@@ -239,6 +242,35 @@ class ShardedHub:
         if n <= 0:
             return ExitResp(), -1
         return self.steal(worker, n=n, affinity=affinity, merged=merged)
+
+    def transfer(self, worker: str, task: str, new_deps=()):
+        """Transfer generalized over shards: replace a leased task back
+        into its HOME shard's queue with new dependencies.  Cross-shard
+        new deps get the same held-proxy + `__notify__` mediation as
+        `create` (a dependency must exist before the Transfer lands —
+        `_transfer` forward-declares unknown local names as ready stubs,
+        which would shadow the real task)."""
+        with self.lock:
+            s = self.home.get(task)
+        if s is None:
+            return NotFound()              # unknown / pruned name
+        local, remote = [], []
+        for d in new_deps:
+            (local if self._shard_of(d) == s else remote).append(d)
+        proxy_deps = list(local)
+        for d in remote:
+            proxy = f"__proxy__{d}__for__{task}"
+            self._send(s, Create(task=proxy, deps=[], meta={}, hold=True))
+            proxy_deps.append(proxy)
+            ds = self._shard_of(d)
+            self._send(ds, Create(
+                task=f"__notify__{proxy}", deps=[d],
+                meta={"notify_shard": s, "proxy": proxy}))
+        resp = self._send(s, Transfer(worker=f"{worker}@{s}", task=task,
+                                      new_deps=proxy_deps))
+        if remote:
+            self._propagate_poison()
+        return resp
 
     def exit_worker(self, worker: str):
         """Node failure: recycle the worker's assignment on every shard

@@ -30,7 +30,8 @@ import time
 from typing import Optional
 
 from repro.core.dwork.api import (Cancel, Complete, CompleteSteal, Create,
-                                  Exit, ExitResp, NotFound, Steal, TaskMsg)
+                                  Exit, ExitResp, NotFound, Steal, TaskMsg,
+                                  Transfer)
 from repro.core.dwork.server import TaskServer
 from repro.core.dwork.sharded import ShardedHub
 from repro.core.engine.model import REQUEUED, RPC
@@ -158,6 +159,14 @@ class ServerBackend:
         False means the cancel lost the race (stolen/terminal/unknown)."""
         resp = self._call("cancel", Cancel(task=name))
         return isinstance(resp, ExitResp)
+
+    def transfer(self, worker: str, name: str, new_deps=()):
+        """Table-2 Transfer: put `worker`'s leased task back into the
+        queue, blocked on `new_deps` (dynamic task graphs; the engine's
+        lost-value recompute path requeues dependents through this)."""
+        return self._call("transfer",
+                          Transfer(worker=worker, task=name,
+                                   new_deps=list(new_deps)))
 
     def prune_terminal(self, keep=()) -> int:
         """Drop terminal entries from the server history tables (bounded
@@ -307,6 +316,16 @@ class ShardedBackend:
         if sampled:
             self._emit_rpc("cancel", time.perf_counter() - t0)
         return ok
+
+    def transfer(self, worker: str, name: str, new_deps=()):
+        """Transfer routed to the task's home shard (with held-proxy
+        mediation for cross-shard new deps — see ShardedHub.transfer)."""
+        sampled = self._sampled()
+        t0 = time.perf_counter() if sampled else 0.0
+        resp = self.hub.transfer(worker, name, new_deps=list(new_deps))
+        if sampled:
+            self._emit_rpc("transfer", time.perf_counter() - t0)
+        return resp
 
     def prune_terminal(self, keep=()) -> int:
         return self.hub.prune_terminal(keep=keep)

@@ -15,12 +15,24 @@ The front door is the translation layer between the process protocol
 and the plain Table-2 verbs:
 
   * CompleteSteal `done` entries arrive EXTENDED — `[name, ok, {"v":
-    value-payload, "e": error, "d": duration}]` — and are stripped to
-    `(name, ok)` before reaching the TaskServer (which stays unchanged);
-    the payloads/durations are queued as completion records for the
-    engine's supervision loop (`Engine._run_proc`) to drain.
-  * Hello / Heartbeat / Fetch are answered here (join registration,
-    liveness touch, dependency-value serving) and never forwarded.
+    value-payload, "e": error, "d": duration, "n": nbytes, "x": xfer
+    stats, "as": store-as alias}]` — and are stripped to `(name, ok)`
+    before reaching the TaskServer (which stays unchanged); the
+    payloads/durations/xfer stats are queued as completion records for
+    the engine's supervision loop (`Engine._run_proc`) to drain.
+  * The data plane lives here too: a result above `inline_bytes` stays
+    in its producing worker's local store — the entry carries "n"
+    (byte count) instead of "v", and the door records the LOCATION
+    (worker + its Hello-advertised data listener).  Fetch answers from
+    the value store first, else redirects with a LocMsg; Spill accepts
+    a worker's evicted/exit-flushed payload back into the value store.
+    A `__xfer_lost__:`-prefixed failure (a dependency value neither its
+    producer nor the hub could serve — the producer was SIGKILLed
+    before replicating) is WITHHELD from the scheduler (the task stays
+    leased) and queued on `lost` for the engine to recompute.
+  * Hello / Heartbeat / Fetch / Spill are answered here (join
+    registration, liveness touch, dependency-value serving) and never
+    forwarded.
   * In resident mode a server-side "all done" (ExitResp) is converted
     to NotFound while the engine is not stopping, so workers idle-poll
     instead of exiting between submission waves.
@@ -41,11 +53,11 @@ import sys
 import threading
 import time
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
-from repro.core.dwork.api import (CompleteSteal, ExitResp, Fetch, Heartbeat,
-                                  Hello, HelloResp, NotFound, TaskMsg,
-                                  ValueMsg)
+from repro.core.dwork.api import (XFER_LOST_PREFIX, CompleteSteal, ExitResp,
+                                  Fetch, Heartbeat, Hello, HelloResp, LocMsg,
+                                  NotFound, Spill, TaskMsg, ValueMsg)
 from repro.core.engine.comm import core as comm_core
 from repro.core.engine.comm.serialize import dumps
 from repro.core.engine.model import RPC, STOLEN
@@ -60,9 +72,15 @@ class _FrontDoor:
     def __init__(self, backend: "ProcBackend"):
         self.backend = backend
         self.lock = threading.Lock()
-        # (worker, task, ok, error, duration_s, value_payload) records
+        # (worker, task, ok, error, duration_s, value_payload, nbytes,
+        #  xfers) records
         self.records: deque = deque()
         self.values: dict = {}           # task -> serialized value payload
+        self.locations: dict = {}        # task -> (worker, data_addr, nbytes)
+        self.data_addrs: dict = {}       # worker -> its data listener addr
+        self.early_spills: dict = {}     # Spill that beat its CompleteSteal
+        self.lost: deque = deque()       # (worker, task, missing-dep) queue
+        self.failed_held: deque = deque()  # (worker, task, err) for retry
         self.pids: dict = {}             # worker -> os pid (0 if unknown)
         self.last_seen: dict = {}        # worker -> monotonic heartbeat
         self.joined: deque = deque()     # workers whose Hello arrived
@@ -82,9 +100,23 @@ class _FrontDoor:
             return self._hello(msg)
         if isinstance(msg, Fetch):
             payload = self.values.get(msg.task)
-            if payload is None:
-                return NotFound()
-            return ValueMsg(task=msg.task, payload=payload)
+            if payload is not None:
+                return ValueMsg(task=msg.task, payload=payload)
+            loc = self.locations.get(msg.task)
+            if loc is not None:
+                w, addr, nbytes = loc
+                return LocMsg(task=msg.task, addr=addr, worker=w,
+                              nbytes=nbytes)
+            return NotFound()
+        if isinstance(msg, Spill):
+            with self.lock:
+                if msg.task in self.locations or msg.task in self.values:
+                    self.values.setdefault(msg.task, msg.payload)
+                else:
+                    # the eviction raced its own CompleteSteal: park the
+                    # payload until the location registration consumes it
+                    self.early_spills[msg.task] = msg.payload
+            return ExitResp()
         # plain Table-2 traffic (multi-host Create, Stats, ...) passes
         # straight through to the scheduler state
         return self.backend.wire_handle(msg)
@@ -102,10 +134,13 @@ class _FrontDoor:
             self.last_seen[w] = now
             self.exited.discard(w)       # a rejoin under an old id
             self.joined.append(w)
+            self.data_addrs[w] = msg.data_addr or ""
         return HelloResp(worker=w, steal_n=b.steal_n, resident=b.resident,
                          pass_worker=b.pass_worker,
                          heartbeat_s=b.heartbeat_s,
-                         execute=b.execute_payload)
+                         execute=b.execute_payload,
+                         inline_bytes=b.inline_bytes,
+                         spill_bytes=b.spill_bytes)
 
     def _complete_steal(self, msg: CompleteSteal):
         b = self.backend
@@ -113,13 +148,54 @@ class _FrontDoor:
         self.last_seen[w] = time.monotonic()
         recs = []
         done = []
+        lost = []
+        held = []
+        retry_check = b.retry_check
         for item in msg.done:
             name, ok = item[0], bool(item[1])
             info = item[2] if len(item) > 2 else {}
+            err = info.get("e")
+            if not ok and err and err.startswith(XFER_LOST_PREFIX):
+                # a dependency value is unrecoverable worker-side: withhold
+                # the entry (the task stays leased to `w`) and queue it for
+                # the engine's recompute-then-Transfer path
+                lost.append((w, name, err[len(XFER_LOST_PREFIX):]))
+                continue
+            if not ok and retry_check is not None \
+                    and retry_check(name, err):
+                # transient failure the engine's RetryPolicy will absorb:
+                # withhold the completion the same way (the task stays
+                # leased to `w`) — the engine Transfer-requeues it after
+                # the policy's backoff instead of failing it for real
+                held.append((w, name, err))
+                continue
             done.append((name, ok))
             payload = info.get("v")
-            recs.append((w, name, ok, info.get("e"),
-                         float(info.get("d") or 0.0), payload))
+            nbytes = int(info.get("n") or 0)
+            recs.append((w, name, ok, err, float(info.get("d") or 0.0),
+                         payload, nbytes, info.get("x") or None))
+            if ok:
+                # register the value (or its location) BEFORE the scheduler
+                # learns of the completion: a dependent stolen by another
+                # worker must never miss a Fetch
+                targets = [name]
+                alias = info.get("as")
+                if alias:
+                    targets.append(alias)
+                with self.lock:
+                    for t in targets:
+                        if payload is not None:
+                            self.values.setdefault(t, payload)
+                        elif nbytes:
+                            early = self.early_spills.pop(t, None)
+                            if early is not None:
+                                self.values.setdefault(t, early)
+                            self.locations[t] = (
+                                w, self.data_addrs.get(w, ""), nbytes)
+        if lost or held:
+            with self.lock:
+                self.lost.extend(lost)
+                self.failed_held.extend(held)
         tracer = b.tracer
         sampled = tracer is not None and msg.n > 0 and tracer.sample_rpc()
         t0 = time.perf_counter() if sampled else 0.0
@@ -128,9 +204,16 @@ class _FrontDoor:
         # requeue is attributed exactly once (and never double-counted
         # against an exit requeue the inner backend already recorded)
         with b._rq_lock:
+            # a worker the engine already declared gone (crash/lose) gets
+            # its completions applied — they really happened — but is
+            # NEVER served new work: this handler thread may be the dead
+            # worker's last in-flight request arriving after exit_worker
+            # requeued its leases (checked under the same lock, so the
+            # order is decided, not raced)
+            gone = w in self.exited
             before = b.requeued_delta()
             resp = b.wire_handle(CompleteSteal(worker=w, done=done,
-                                               n=msg.n))
+                                               n=0 if gone else msg.n))
             rq = b.requeued_delta() - before
         if sampled:
             dt = time.perf_counter() - t0
@@ -141,14 +224,10 @@ class _FrontDoor:
         if recs or rq:
             with self.lock:
                 if recs:
-                    # keep every ok value fetchable BEFORE the engine
-                    # learns of the completion: a dependent stolen by
-                    # another worker must never miss a Fetch
-                    for _, name, ok, _, _, payload in recs:
-                        if ok and payload is not None:
-                            self.values.setdefault(name, payload)
                     self.records.extend(recs)
                 self.requeued += rq
+        if gone:
+            return ExitResp()      # no polling conversion: die, worker
         if isinstance(resp, TaskMsg):
             if tracer is not None:
                 stolen_at = self.stolen_at
@@ -179,7 +258,9 @@ class ProcBackend:
 
     def __init__(self, inner, *, host: str = "127.0.0.1", port: int = 0,
                  steal_n: int = 1, resident: bool = False,
-                 heartbeat_s: float = 0.5, owns_inner: bool = True):
+                 heartbeat_s: float = 0.5, owns_inner: bool = True,
+                 inline_bytes: int = 65536,
+                 spill_bytes: int = 64 * 1024 * 1024):
         srv = getattr(inner, "server", None)
         hub = getattr(inner, "hub", None)
         if srv is None and hub is None:
@@ -193,8 +274,14 @@ class ProcBackend:
         self.steal_n = max(int(steal_n), 1)
         self.resident = bool(resident)
         self.heartbeat_s = max(float(heartbeat_s), 0.05)
+        self.inline_bytes = max(int(inline_bytes), 0)
+        self.spill_bytes = max(int(spill_bytes), 0)
         self.pass_worker = False
         self.execute_payload: Optional[str] = None
+        # engine-installed predicate `(task, err) -> bool`: True means the
+        # engine's RetryPolicy will absorb this failure, so the door
+        # withholds the completion (see drain_failed); None = no retry
+        self.retry_check: Optional[Callable] = None
         self._rq_lock = threading.Lock()
         self.door = _FrontDoor(self)
         self.listener = comm_core.listen(f"tcp://{host}:{port}", self.door)
@@ -332,6 +419,31 @@ class ProcBackend:
             d.requeued = 0
         return n
 
+    def drain_lost(self) -> list:
+        """-> [(worker, task, missing-dep), ...]: withheld completions
+        whose dependency value is unrecoverable (the engine recomputes
+        the missing value, then Transfer-requeues the dependent)."""
+        d = self.door
+        if not d.lost:
+            return []
+        with d.lock:
+            out = list(d.lost)
+            d.lost.clear()
+        return out
+
+    def drain_failed(self) -> list:
+        """-> [(worker, task, err), ...]: failed completions the door
+        withheld because `retry_check` approved them (the task is still
+        leased to the worker) — the engine applies the policy's backoff
+        and Transfer-requeues, or fails them for real."""
+        d = self.door
+        if not d.failed_held:
+            return []
+        with d.lock:
+            out = list(d.failed_held)
+            d.failed_held.clear()
+        return out
+
     def check_dead(self, grace: float) -> list:
         """-> [(worker, reason)]: locally-spawned processes that exited
         without a clean protocol goodbye ("crash"), plus any worker —
@@ -388,23 +500,37 @@ class ProcBackend:
         return self.inner.complete_steal(worker, done, n)
 
     def exit_worker(self, worker):
+        # exited-marking and lease-requeue are one atomic step under
+        # _rq_lock: a front-door handler thread carrying the worker's
+        # LAST CompleteSteal serializes against this, so it either steals
+        # before (and this requeue reclaims the lease) or observes the
+        # worker as gone and is refused — a dead worker can never walk
+        # away holding fresh leases (the zombie-steal race)
         with self._rq_lock:
+            self.door.exited.add(worker)
             return self.inner.exit_worker(worker)
 
     def cancel(self, name):
         return self.inner.cancel(name)
 
+    def transfer(self, worker, name, new_deps=()):
+        return self.inner.transfer(worker, name, new_deps=new_deps)
+
     def prune_terminal(self, keep=()):
         n = self.inner.prune_terminal(keep=keep)
-        values = self.door.values
-        if values:
-            # mirror the prune into the Fetch value store (sharded inner
-            # reports counts, not names, so prune conservatively by the
-            # same keep-set contract: single-use names)
-            keep = set(keep)
-            with self.door.lock:
-                for name in [k for k in values if k not in keep]:
-                    del values[name]
+        door = self.door
+        # mirror the prune into EVERY data-plane store — values,
+        # locations, parked early spills — so a pruned session cannot
+        # leak payload bytes (sharded inner reports counts, not names,
+        # so prune conservatively by the same keep-set contract:
+        # single-use names)
+        keep = set(keep)
+        with door.lock:
+            for table in (door.values, door.locations, door.early_spills):
+                if not table:
+                    continue
+                for name in [k for k in table if k not in keep]:
+                    del table[name]
         return n
 
     def errors(self):

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import base64
 import pickle
+import threading
 from typing import Optional
 
 try:
@@ -28,8 +29,9 @@ class SerializationError(TypeError):
 
 class Ref:
     """Placeholder for a dependency's value in a serialized call: the
-    worker resolves it from its local value cache or with a Fetch
-    round-trip to the hub before invoking the fn."""
+    worker resolves it from its local value cache, a peer fetch from the
+    producing worker's data listener, or a Fetch round-trip to the hub
+    before invoking the fn."""
 
     __slots__ = ("name",)
 
@@ -38,6 +40,45 @@ class Ref:
 
     def __repr__(self):
         return f"Ref({self.name!r})"
+
+
+class RemoteValue:
+    """A lazy handle for a result whose payload stayed in its producing
+    worker's local store (the peer-to-peer data plane): the engine saw
+    only the location, not the bytes.  `get()` materializes on first use
+    — hub value store first, then a peer fetch from the producer — and
+    caches; `Future.result()` calls it transparently, so code only sees
+    a handle when it inspects a `TaskResult.value` directly.  Engine-
+    side only: a RemoteValue never crosses the wire."""
+
+    __slots__ = ("task", "nbytes", "_fetch", "_value", "_have", "_lock")
+
+    def __init__(self, task: str, nbytes: int, fetch):
+        self.task = task
+        self.nbytes = int(nbytes)
+        self._fetch = fetch              # engine's materializer (task)->val
+        self._value = None
+        self._have = False
+        self._lock = threading.Lock()
+
+    def get(self):
+        """Materialize (and cache) the value; raises KeyError when the
+        payload is unrecoverable (producer dead AND never replicated —
+        the engine's recompute path prevents this for live sessions)."""
+        with self._lock:
+            if not self._have:
+                self._value = self._fetch(self.task)
+                self._have = True
+                self._fetch = None       # drop the engine edge once cached
+            return self._value
+
+    @property
+    def resolved(self) -> bool:
+        return self._have
+
+    def __repr__(self):
+        state = "cached" if self._have else f"{self.nbytes}B remote"
+        return f"RemoteValue({self.task!r}, {state})"
 
 
 def dumps(obj, *, what: str = "object") -> str:

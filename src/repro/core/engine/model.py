@@ -36,6 +36,8 @@ RETRIED = "retried"             # transient failure re-enqueued (RetryPolicy)
 CANCELLED = "cancelled"         # client cancel before the task was stolen
 WORKER_DEAD = "worker_dead"
 RPC = "rpc"                     # one scheduler round-trip (the paper's RTT)
+XFER = "xfer"                   # one dependency-value transfer (extra:
+                                # path="peer"|"hub", n=bytes, dt=seconds)
 
 # serving-layer events (repro.core.serving): one *request* may ride a
 # coalesced batch task, so its lifecycle is traced separately from tasks

@@ -34,7 +34,7 @@ from typing import Callable, Optional
 from repro.core.engine.model import (BATCH_FORMED, COMPLETED, FAILED,
                                      REQ_DONE, REQ_ENQUEUED, REQ_REJECTED,
                                      REQUEUED, RETRIED, RPC, RUN_END,
-                                     RUN_START, STOLEN, TraceEvent,
+                                     RUN_START, STOLEN, XFER, TraceEvent,
                                      real_clock)
 from repro.core.metg import same_order
 
@@ -377,6 +377,12 @@ class OverheadReport:
     n_rpc: int = 0
     dispatch_s: float = 0.0          # total stolen -> run_start latency
     rpc_by_op: dict = field(default_factory=dict)  # op -> (count, total_s)
+    # data plane (transport="proc"): dependency-value fetch accounting,
+    # unsampled — every fetch emits exactly one XFER, no scale-up needed
+    xfer_s: float = 0.0              # total fetch time, all paths
+    n_xfer: int = 0
+    xfer_bytes: int = 0
+    xfer_by_path: dict = field(default_factory=dict)  # path -> (n, B, s)
     requests: Optional[LatencyReport] = None  # serving mode, else None
     # ring-buffer truncation accounting: a bounded TraceRecorder evicts
     # its oldest events, so a report over it covers the retained window
@@ -433,6 +439,19 @@ class OverheadReport:
         if trace.rpc_seen > n_rpc > 0:
             rpc_s *= trace.rpc_seen / n_rpc
             n_rpc = trace.rpc_seen
+        # data-motion fold: per-path fetch totals (peer vs hub)
+        xfer_by_path: dict = {}
+        xfer_s = 0.0
+        n_xfer = xfer_bytes = 0
+        for e in trace.of(XFER):
+            path = e.extra.get("path", "?")
+            n = e.extra.get("n", 0)
+            dt = e.extra.get("dt", 0.0)
+            cnt, tb, ts = xfer_by_path.get(path, (0, 0, 0.0))
+            xfer_by_path[path] = (cnt + 1, tb + n, ts + dt)
+            n_xfer += 1
+            xfer_bytes += n
+            xfer_s += dt
         requeued = sum(e.extra.get("n", 1) for e in trace.of(REQUEUED))
         lat = LatencyReport.from_trace(trace)
         if lat.n_requests == 0 and lat.n_rejected == 0:
@@ -452,6 +471,10 @@ class OverheadReport:
             n_rpc=n_rpc,
             dispatch_s=dispatch,
             rpc_by_op=by_op,
+            xfer_s=xfer_s,
+            n_xfer=n_xfer,
+            xfer_bytes=xfer_bytes,
+            xfer_by_path=xfer_by_path,
             n_emitted=trace.n_emitted,
             dropped=trace.dropped,
         )
@@ -517,6 +540,16 @@ class OverheadReport:
             "n_emitted": self.n_emitted,
             "dropped": self.dropped,
         }
+        if self.n_xfer:
+            out["xfer"] = {
+                "n": self.n_xfer,
+                "bytes": self.xfer_bytes,
+                "total_s": round(self.xfer_s, 6),
+                "by_path": {p: {"n": n, "bytes": b,
+                                "total_s": round(t, 6)}
+                            for p, (n, b, t)
+                            in sorted(self.xfer_by_path.items())},
+            }
         if self.requests is not None:
             out["requests"] = self.requests.summary()
         return out

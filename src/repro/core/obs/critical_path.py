@@ -44,7 +44,7 @@ from typing import Optional
 
 from repro.core.engine.model import (COMPLETED, CREATED, FAILED, READY,
                                      RETRIED, RPC, RUN_END, RUN_START,
-                                     STOLEN)
+                                     STOLEN, XFER)
 from repro.core.metg import METGModel
 
 # the Fig.-2 stage names, in causal order; every per-task decomposition
@@ -56,7 +56,8 @@ class _Span:
     """Per-task stamp accumulator for one pass over the event log."""
 
     __slots__ = ("created", "ready", "steals", "runs", "open_run",
-                 "terminal", "ok", "worker", "deps", "retries")
+                 "terminal", "ok", "worker", "deps", "retries",
+                 "xfer_s", "n_xfer", "xfer_bytes")
 
     def __init__(self):
         self.created = None       # first CREATED t
@@ -69,12 +70,17 @@ class _Span:
         self.worker = None
         self.deps = None          # from the CREATED event, if stamped
         self.retries = 0
+        self.xfer_s = 0.0         # data-plane fetch time of THIS task's
+        self.n_xfer = 0           #   value (attributed to the producer)
+        self.xfer_bytes = 0
 
 
-def _collect(events) -> tuple[dict, dict, float, int]:
-    """One pass: task -> _Span, rpc per-op fold, trace epoch, n_rpc."""
+def _collect(events) -> tuple[dict, dict, dict, float]:
+    """One pass: task -> _Span, rpc per-op fold, xfer per-path fold,
+    trace epoch."""
     spans: dict[str, _Span] = {}
     rpc_by_op: dict = {}
+    xfer_by_path: dict = {}           # path -> [n, bytes, seconds]
     t_first = None
 
     def span(name) -> _Span:
@@ -120,7 +126,22 @@ def _collect(events) -> tuple[dict, dict, float, int]:
             dt = e.extra.get("dt", 0.0)
             cnt, tot = rpc_by_op.get(op, (0, 0.0))
             rpc_by_op[op] = (cnt + 1, tot + dt)
-    return spans, rpc_by_op, (t_first or 0.0), len(spans)
+        elif ev == XFER:
+            # data-plane fetch of e.task's value (peer or hub path) —
+            # folded onto the PRODUCER's span and the per-path totals
+            n = e.extra.get("n", 0)
+            dt = e.extra.get("dt", 0.0)
+            s = span(e.task)
+            s.n_xfer += 1
+            s.xfer_bytes += n
+            s.xfer_s += dt
+            ent = xfer_by_path.get(e.extra.get("path", "?"))
+            if ent is None:
+                ent = xfer_by_path[e.extra.get("path", "?")] = [0, 0, 0.0]
+            ent[0] += 1
+            ent[1] += n
+            ent[2] += dt
+    return spans, rpc_by_op, xfer_by_path, (t_first or 0.0)
 
 
 def _arrive_t(s: _Span) -> Optional[float]:
@@ -201,6 +222,12 @@ class CriticalPathReport:
     n_rpc: int = 0
     rtt_mean_s: float = 0.0
     rpc_by_op: dict = field(default_factory=dict)
+    # data motion (peer-to-peer data plane, transport="proc"):
+    xfer_s: float = 0.0              # total fetch time, all tasks
+    n_xfer: int = 0
+    xfer_bytes: int = 0
+    xfer_by_path: dict = field(default_factory=dict)  # path -> (n, B, s)
+    path_xfer_s: float = 0.0         # fetch time of critical-path values
     # truncation honesty:
     n_emitted: int = 0
     dropped: int = 0
@@ -221,6 +248,21 @@ class CriticalPathReport:
     @property
     def sched_frac(self) -> float:
         return self.sched_s / self.makespan_s if self.makespan_s > 0 else 0.0
+
+    @property
+    def xfer_verdict(self) -> Optional[str]:
+        """Was the run gated by moving bytes or by scheduling them?
+        None when the data plane never fetched anything (inline-only
+        runs, in-process transports).  "transfer-bound" when the fetch
+        time of critical-path values exceeds the path's scheduler share
+        (dispatch + queue + notify) — shrinking rpc latency then cannot
+        help as much as moving fewer bytes (bigger inline threshold,
+        better placement); "dispatch-bound" otherwise."""
+        if self.n_xfer == 0:
+            return None
+        sched_non_wait = self.queue_s + self.dispatch_s + self.notify_s
+        return ("transfer-bound" if self.path_xfer_s > sched_non_wait
+                else "dispatch-bound")
 
     # --------------------------------------------------------- construction
     @classmethod
@@ -269,7 +311,7 @@ class CriticalPathReport:
                     model: Optional[METGModel] = None,
                     straggler_factor: float = 4.0,
                     profile_points: int = 240) -> "CriticalPathReport":
-        spans, rpc_by_op, t_epoch, _ = _collect(events)
+        spans, rpc_by_op, xfer_by_path, t_epoch = _collect(events)
         term = {n: s for n, s in spans.items() if s.terminal is not None}
         rep = cls(workers=max(int(workers), 1), scheduler=scheduler,
                   straggler_factor=straggler_factor, n_tasks=len(term))
@@ -281,6 +323,13 @@ class CriticalPathReport:
                 rep.rpc_s += tot
                 rep.n_rpc += cnt
         rep.rtt_mean_s = rep.rpc_s / rep.n_rpc if rep.n_rpc else 0.0
+        # data-motion fold (unsampled: every fetch emits exactly one XFER)
+        rep.xfer_by_path = {p: (n, b, round(t, 6))
+                            for p, (n, b, t) in sorted(xfer_by_path.items())}
+        for n, b, t in xfer_by_path.values():
+            rep.n_xfer += n
+            rep.xfer_bytes += b
+            rep.xfer_s += t
         if events:
             ts = [e.t for e in events]
             rep.wall_s = max(ts) - min(ts)
@@ -334,6 +383,11 @@ class CriticalPathReport:
                    "t_s": round(prev_t - t_epoch, 6),
                    "n_runs": len(s.runs), "retries": s.retries,
                    **{f"{k}_s": round(v, 6) for k, v in seg.items()}}
+            if s.n_xfer:
+                # data motion: time dependents spent fetching THIS value
+                row["xfer_s"] = round(s.xfer_s, 6)
+                row["xfer_bytes"] = s.xfer_bytes
+                rep.path_xfer_s += s.xfer_s
             if wasted:
                 row["wasted_s"] = round(wasted, 6)
                 row["episodes"] = [
@@ -466,6 +520,15 @@ class CriticalPathReport:
             "stragglers": self.stragglers,
             "rpc": {"n": self.n_rpc, "total_s": round(self.rpc_s, 6),
                     "rtt_mean_us": round(self.rtt_mean_s * 1e6, 2)},
+            "data_motion": {
+                "n_xfer": self.n_xfer,
+                "bytes": self.xfer_bytes,
+                "total_s": round(self.xfer_s, 6),
+                "path_s": round(self.path_xfer_s, 6),
+                "by_path": {p: {"n": n, "bytes": b, "total_s": t}
+                            for p, (n, b, t) in self.xfer_by_path.items()},
+                "verdict": self.xfer_verdict,
+            },
             "path": path,
             "segments": segs,
         }

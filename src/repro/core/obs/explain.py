@@ -69,6 +69,19 @@ def render(rep: CriticalPathReport, *, max_tasks: int = 20) -> str:
         tops = sorted(rep.rpc_by_op.items(), key=lambda kv: -kv[1][1])[:4]
         lines.append("       by op: " + "  ".join(
             f"{op} x{cnt} {_ms(tot)}" for op, (cnt, tot) in tops))
+    if rep.n_xfer:
+        by = "  ".join(f"{p} x{n} {b / 1024:.0f}KiB {_ms(t)}"
+                       for p, (n, b, t) in rep.xfer_by_path.items())
+        lines.append(f"  data motion: {rep.n_xfer} fetches, "
+                     f"{rep.xfer_bytes / 1024:.0f}KiB, "
+                     f"{_ms(rep.xfer_s)} total "
+                     f"({_ms(rep.path_xfer_s)} on the path) — {by}")
+        lines.append(f"       verdict: the run was {rep.xfer_verdict} "
+                     + ("(moving bytes gated the path more than "
+                        "scheduling did)" if rep.xfer_verdict
+                        == "transfer-bound" else
+                        "(scheduling gated the path more than moving "
+                        "bytes did)"))
     for s in rep.stragglers:
         mark = "  << ON THE CRITICAL PATH" if s["on_path"] else ""
         lines.append(f"  straggler: {s['task']} ran {_ms(s['run_s'])} "
@@ -76,7 +89,7 @@ def render(rep: CriticalPathReport, *, max_tasks: int = 20) -> str:
     lines.append("")
     lines.append(f"  {'#':>3} {'task':<28}{'worker':<8}"
                  f"{'dep-wait':>10}{'queue':>10}{'dispatch':>10}"
-                 f"{'run':>10}{'notify':>10}  notes")
+                 f"{'run':>10}{'notify':>10}{'xfer':>10}  notes")
     segs = rep.segments
     skipped = 0
     if len(segs) > max_tasks:
@@ -92,12 +105,15 @@ def render(rep: CriticalPathReport, *, max_tasks: int = 20) -> str:
                          f"(wasted {_ms(row.get('wasted_s', 0.0))})")
         if row["retries"]:
             notes.append(f"{row['retries']} retries")
+        if row.get("xfer_bytes"):
+            notes.append(f"{row['xfer_bytes'] / 1024:.0f}KiB fetched")
+        xfer = _ms(row["xfer_s"]) if "xfer_s" in row else "—"
         lines.append(
             f"  {base + i + 1:>3} {str(row['task'])[:27]:<28}"
             f"{str(row['worker'] or '—')[:7]:<8}"
             f"{_ms(row['dep_wait_s']):>10}{_ms(row['queue_s']):>10}"
             f"{_ms(row['dispatch_s']):>10}{_ms(row['run_s']):>10}"
-            f"{_ms(row['notify_s']):>10}  {', '.join(notes)}")
+            f"{_ms(row['notify_s']):>10}{xfer:>10}  {', '.join(notes)}")
     return "\n".join(lines)
 
 

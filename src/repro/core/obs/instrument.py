@@ -92,6 +92,40 @@ class RpcMetrics:
         ob(dt)
 
 
+class XferMetrics:
+    """Data-plane transfer metrics (transport="proc"): per-path latency
+    histograms plus byte/count totals, fed by the engine's unsampled
+    xfer attribution (`Engine._record_xfer`).  Bound observers are
+    cached per path — there are only two ("peer"/"hub"), so the hot
+    call is one dict hit."""
+
+    __slots__ = ("_registry", "_by_path")
+
+    def __init__(self, registry: MetricsRegistry):
+        self._registry = registry
+        self._by_path: dict = {}
+
+    def observe(self, path: str, nbytes: int, dt: float):
+        ent = self._by_path.get(path)
+        if ent is None:
+            lbl = {"path": path}
+            h = self._registry.histogram(
+                "repro_xfer_latency_seconds",
+                "Dependency-value transfer latency per path "
+                "(peer = producer's data listener, hub = front door)",
+                labels=lbl, buckets=RPC_BUCKETS)
+            b = self._registry.counter(
+                "repro_xfer_bytes_total",
+                "Serialized bytes moved per transfer path", labels=lbl)
+            c = self._registry.counter(
+                "repro_xfer_total",
+                "Dependency-value transfers per path", labels=lbl)
+            ent = self._by_path[path] = (h.observe, b.inc, c.inc)
+        ent[0](dt)
+        ent[1](nbytes)
+        ent[2]()
+
+
 class ServingMetrics:
     """Push-side serving metrics: the per-request latency histogram
     observed at response delivery (everything else about the frontend is
@@ -134,6 +168,10 @@ def _instrument_engine(reg: MetricsRegistry, engine) -> None:
     backend = engine.backend
     if getattr(backend, "metrics", None) is None:
         backend.metrics = RpcMetrics(reg)
+    if getattr(engine, "xfer_metrics", None) is None:
+        # data-plane attribution sink (populated only under
+        # transport="proc"; zero-cost otherwise — nothing observes)
+        engine.xfer_metrics = XferMetrics(reg)
     reg.gauge("repro_live_workers", "Workers currently alive",
               fn=engine.live_workers)
     reg.counter("repro_worker_deaths_total",

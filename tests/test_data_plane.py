@@ -1,0 +1,363 @@
+"""Peer-to-peer data plane tests: location tracking on the hub, the
+worker-side Ref resolution chain (cache -> store -> hub -> peer ->
+recompute), the LRU spill-to-hub policy, zero-loss recompute across a
+producer SIGKILL, engine/client RemoteValue materialization, and the
+prune regression (terminal pruning must evict the data-plane stores).
+
+The fallback-chain unit tests drive `_DataPlane.resolve` directly with
+a scripted stub hub, so every leg of the chain is covered without
+process churn; the integration tests then exercise the same legs end to
+end over real worker processes.  Task callables are lambdas throughout
+(cloudpickle ships them by value across the process boundary)."""
+import hashlib
+import os
+import signal
+import time
+
+import pytest
+
+from repro.client import Client
+from repro.core.dwork.api import (XFER_LOST_PREFIX, Fetch, LocMsg, NotFound,
+                                  ValueMsg)
+from repro.core.engine import Engine
+from repro.core.engine.comm import core as comm_core
+from repro.core.engine.comm.serialize import Ref, RemoteValue, dumps, loads
+from repro.core.engine.comm.worker import _DataPlane, _DataServer, _LostDep
+from repro.core.engine.model import XFER
+
+HB = 0.1
+BIG = 300_000                 # well above every inline_bytes used here
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def _wait(pred, timeout=30.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+# --------------------------------------------- resolve chain (unit, stubs)
+
+
+class _StubHub:
+    """Scripted control-plane transport: each Fetch pops the next canned
+    response (or raises it)."""
+
+    def __init__(self, *script):
+        self.script = list(script)
+        self.calls = []
+
+    def request(self, msg):
+        self.calls.append(msg)
+        r = self.script.pop(0)
+        if isinstance(r, Exception):
+            raise r
+        return r
+
+
+@pytest.fixture
+def plane_factory():
+    planes = []
+
+    def make(*script):
+        p = _DataPlane(_StubHub(*script))
+        planes.append(p)
+        return p
+
+    yield make
+    for p in planes:
+        p.close()
+
+
+def test_resolve_non_ref_and_local_caches(plane_factory):
+    plane = plane_factory()
+    xfers: list = []
+    assert plane.resolve(41, xfers) == 41          # not a Ref: pass-through
+    plane.cache_obj("a", {"k": 7})
+    assert plane.resolve(Ref("a"), xfers) == {"k": 7}
+    plane.put("b", dumps([1, 2, 3]), owned=False)
+    assert plane.resolve(Ref("b"), xfers) == [1, 2, 3]
+    assert plane.transport.calls == []             # never touched the wire
+    assert xfers == []                             # local hits: no stats
+
+
+def test_resolve_hub_value(plane_factory):
+    plane = plane_factory(ValueMsg(task="c", payload=dumps("hub-served")))
+    xfers: list = []
+    assert plane.resolve(Ref("c"), xfers) == "hub-served"
+    assert [x[0] for x in xfers] == ["hub"]
+    assert plane.resolve(Ref("c"), []) == "hub-served"   # cached now
+    assert len(plane.transport.calls) == 1
+
+
+def test_resolve_peer_redirect_hits_producer(plane_factory):
+    class _Peer:
+        def handle(self, msg):
+            assert isinstance(msg, Fetch)
+            return ValueMsg(task=msg.task, payload=dumps(b"x" * 99))
+
+    lst = comm_core.listen("inproc://dp-peer-hit", _Peer())
+    try:
+        plane = plane_factory(LocMsg(task="d", addr=lst.address,
+                                     worker="w9", nbytes=99))
+        xfers: list = []
+        assert plane.resolve(Ref("d"), xfers) == b"x" * 99
+        assert [x[0] for x in xfers] == ["peer"]
+        assert xfers[0][1] > 0 and xfers[0][2] >= 0.0
+    finally:
+        lst.stop()
+
+
+def test_resolve_dead_peer_falls_back_to_hub(plane_factory):
+    # the redirect points at a dead producer; the hub answers the retry
+    # (a Spill landed meanwhile) — the chain must recover transparently
+    plane = plane_factory(
+        LocMsg(task="e", addr="tcp://127.0.0.1:1", worker="w0", nbytes=5),
+        ValueMsg(task="e", payload=dumps("spilled")))
+    xfers: list = []
+    assert plane.resolve(Ref("e"), xfers) == "spilled"
+    assert [x[0] for x in xfers] == ["hub"]
+    assert len(plane.transport.calls) == 2         # Fetch + hub retry
+
+
+def test_resolve_unrecoverable_raises_lost_dep(plane_factory):
+    # producer dead AND the hub never got a replica: recompute territory
+    plane = plane_factory(
+        LocMsg(task="f", addr="tcp://127.0.0.1:1", worker="w0", nbytes=5),
+        NotFound())
+    with pytest.raises(_LostDep) as ei:
+        plane.resolve(Ref("f"), [])
+    assert ei.value.name == "f"
+    assert XFER_LOST_PREFIX + "f" == "__xfer_lost__:f"
+
+
+def test_resolve_never_known_raises_keyerror(plane_factory):
+    plane = plane_factory(NotFound())
+    with pytest.raises(KeyError, match="unavailable on the hub"):
+        plane.resolve(Ref("g"), [])
+
+
+def test_data_plane_lru_spill_budget(plane_factory):
+    from repro.core.dwork.api import Spill
+
+    class _SpillHub(_StubHub):
+        def __init__(self):
+            super().__init__()
+            self.spilled = []
+
+        def request(self, msg):
+            assert isinstance(msg, Spill)
+            self.spilled.append(msg.task)
+            return NotFound()
+
+    plane = _DataPlane(_SpillHub())
+    try:
+        plane.me = "wX"
+        plane.spill_bytes = 300
+        p = dumps(b"y" * 200)                      # ~200B payloads
+        plane.put("old", p, owned=True, value=b"y" * 200, have_value=True)
+        plane.put("new", p, owned=True, value=b"y" * 200, have_value=True)
+        # budget 300 < 2 payloads: the oldest owned value was evicted and
+        # replicated to the hub first; the store never drops to empty
+        assert plane.transport.spilled == ["old"]
+        assert "old" not in plane.store and "old" not in plane.objs
+        assert "new" in plane.store
+        # borrowed (not owned) evictions never spill — peer copies are
+        # cache, the producer still holds the original
+        plane.put("borrowed", p, owned=False)
+        assert plane.transport.spilled == ["old", "new"]
+    finally:
+        plane.close()
+
+
+def test_data_server_serves_store_and_not_found(plane_factory):
+    plane = plane_factory()
+    plane.put("have", dumps(3), owned=False)
+    srv = _DataServer(plane)
+    resp = srv.handle(Fetch(task="have"))
+    assert isinstance(resp, ValueMsg) and loads(resp.payload) == 3
+    assert isinstance(srv.handle(Fetch(task="missing")), NotFound)
+
+
+def test_remote_value_fetches_once_and_caches():
+    calls = []
+
+    def fetch(name):
+        calls.append(name)
+        return [name, 1]
+
+    rv = RemoteValue("t9", 1234, fetch)
+    assert not rv.resolved and rv.nbytes == 1234
+    assert rv.get() == ["t9", 1]
+    assert rv.get() == ["t9", 1]
+    assert calls == ["t9"] and rv.resolved
+
+
+# ----------------------------------------------- integration: peer fetch
+
+
+def test_peer_fetch_between_workers_exact_values():
+    c = Client(transport="proc", workers=2, heartbeat_s=HB,
+               inline_bytes=1024, steal_n=1)
+    try:
+        # slow producers force both workers to participate, so at least
+        # one dependency of every sink lives on the OTHER worker
+        bigs = [c.submit(lambda i=i: time.sleep(0.3) or bytes([i]) * BIG,
+                         key=f"big{i}") for i in range(4)]
+        c.gather(bigs)
+        sums = [c.submit(
+            (lambda *vs: hashlib.md5(b"".join(vs)).hexdigest()),
+            *bigs, key=f"sum{i}") for i in range(4)]
+        expect = hashlib.md5(
+            b"".join(bytes([j]) * BIG for j in range(4))).hexdigest()
+        for f in sums:
+            assert f.result(timeout=60) == expect
+        eng = c.engine
+        # the hub tracked locations, the workers moved the bytes directly
+        assert eng.xfer_totals["peer"][0] > 0, "no peer-path fetch happened"
+        assert eng.xfer_totals["peer"][1] > BIG
+        assert eng.xfer_lost_total == 0
+        # attribution: unsampled xfer trace events match the totals
+        n_ev = sum(1 for e in eng.tracer.events if e.event == XFER)
+        n_tot = sum(v[0] for v in eng.xfer_totals.values())
+        assert n_ev == n_tot > 0
+        # a big result itself materializes through the lazy handle
+        assert bigs[2].result(timeout=60) == bytes([2]) * BIG
+    finally:
+        c.close()
+
+
+def test_small_values_stay_inline_no_locations():
+    eng = Engine(transport="proc", workers=2, heartbeat_s=HB)
+    for i in range(8):
+        eng.submit(f"s{i}", lambda i=i: i * 3)
+    rep = eng.run()
+    assert sorted(r.value for r in rep.results.values()) == \
+        [i * 3 for i in range(8)]
+    assert eng.backend.door.locations == {}
+    assert eng.xfer_totals["peer"][0] == eng.xfer_totals["hub"][0] == 0
+
+
+def test_spilled_value_served_by_hub():
+    # a single worker with a tiny byte budget: producing big1 evicts big0
+    # (replicated to the hub by Spill), so the consumer's fetch of big0
+    # must come back over the hub path — and still be exact
+    c = Client(transport="proc", workers=1, heartbeat_s=HB,
+               inline_bytes=1024, spill_bytes=4096, steal_n=1)
+    try:
+        b0 = c.submit(lambda: b"a" * BIG, key="big0")
+        b1 = c.submit(lambda: b"b" * BIG, key="big1")
+        cons = c.submit(lambda x, y: (hashlib.md5(x).hexdigest(),
+                                      hashlib.md5(y).hexdigest()),
+                        b0, b1, key="cons")
+        assert cons.result(timeout=60) == (
+            hashlib.md5(b"a" * BIG).hexdigest(),
+            hashlib.md5(b"b" * BIG).hexdigest())
+        assert c.engine.xfer_totals["hub"][0] >= 1, \
+            "spilled value did not travel the hub path"
+        assert c.engine.xfer_lost_total == 0
+    finally:
+        c.close()
+
+
+def test_engine_run_materializes_remote_values_in_report():
+    eng = Engine(transport="proc", workers=2, heartbeat_s=HB,
+                 inline_bytes=1024)
+    for i in range(3):
+        eng.submit(f"big{i}", lambda i=i: bytes([i]) * BIG)
+    rep = eng.run()
+    for i in range(3):
+        v = rep.results[f"big{i}"].value
+        assert not isinstance(v, RemoteValue)
+        assert v == bytes([i]) * BIG
+
+
+# --------------------------------------- integration: SIGKILL + recompute
+
+
+def test_producer_sigkill_recomputes_lost_value(tmp_path):
+    """Kill the producer AFTER its big result completed but BEFORE any
+    dependent fetched it: the only copy dies with the process, the
+    consumer reports `__xfer_lost__`, and the engine recomputes the
+    value from the task's packed call — zero loss, exact bytes."""
+    pidfile = str(tmp_path / "producer.pid")
+    flag = str(tmp_path / "gate.flag")
+    c = Client(transport="proc", workers=2, heartbeat_s=HB,
+               inline_bytes=1024, steal_n=1)
+    try:
+        big = c.submit(
+            lambda p=pidfile: (open(p, "w").write(str(os.getpid())),
+                               b"z" * BIG)[1], key="big")
+        # the gate spins until the kill landed, so the consumer cannot
+        # run (and cache the value) before the producer dies
+        gate = c.submit(
+            lambda f=flag: [time.sleep(0.02)
+                            for _ in range(3000) if not os.path.exists(f)]
+            and None, key="gate")
+        cons = c.submit(lambda b, g: hashlib.md5(b).hexdigest(), big, gate,
+                        key="cons")
+        c._ensure_running()           # dispatch starts without a waiter
+        _wait(lambda: os.path.exists(pidfile), what="producer pid")
+        _wait(big.done, what="big terminal")
+        pid = int(open(pidfile).read())
+        os.kill(pid, signal.SIGKILL)
+        _wait(lambda: not _pid_alive(pid), what="producer death")
+        open(flag, "w").close()                    # release the gate
+        assert cons.result(timeout=120) == \
+            hashlib.md5(b"z" * BIG).hexdigest()
+        assert c.engine.xfer_lost_total >= 1, \
+            "consumer never hit the lost-value recompute path"
+    finally:
+        c.close()
+
+
+# ------------------------------------------------- prune regression
+
+
+def _populated_proc_engine(shards=1):
+    eng = Engine(transport="proc", workers=2, shards=shards,
+                 heartbeat_s=HB, inline_bytes=1024)
+    for i in range(4):
+        eng.submit(f"big{i}", lambda i=i: bytes([i]) * BIG)
+    rep = eng.run()
+    assert len(rep.results) == 4
+    return eng
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_prune_terminal_evicts_data_plane_stores(shards):
+    """Regression: pruned sessions must not leak payload bytes — every
+    data-plane table on the front door (values from exit-flush spills,
+    locations, early spills) is evicted along with the task records."""
+    eng = _populated_proc_engine(shards=shards)
+    door = eng.backend.door
+    # exit flush replicated the big payloads hub-side; locations tracked
+    assert door.values and door.locations
+    door.early_spills["phantom"] = "stale-payload"
+    eng.backend.prune_terminal(keep=("big1",))
+    assert set(door.values) <= {"big1"}
+    assert set(door.locations) <= {"big1"}
+    assert door.early_spills == {}
+    eng.backend.prune_terminal()
+    assert door.values == {} and door.locations == {}
+
+
+def test_engine_prune_respects_pinned_values():
+    eng = _populated_proc_engine()
+    eng.pin("big3")
+    eng.prune_terminal()
+    door = eng.backend.door
+    assert set(door.values) == {"big3"}
+    assert set(door.locations) == {"big3"}
